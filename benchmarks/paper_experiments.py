@@ -1,0 +1,200 @@
+"""Paper-faithful FL experiments (EXPERIMENTS.md §Paper-validation).
+
+Reproduces the paper's evaluation protocol on the synthetic CIFAR-10
+substitute (DESIGN.md §2): 100 devices, 10 sampled/round, E=5, B=10,
+lr=0.1 decayed 0.99/round, server data p * 40000 drawn from a held-out
+pool, pruning at round 30.
+
+  PYTHONPATH=src python -m benchmarks.paper_experiments --suite main
+  PYTHONPATH=src python -m benchmarks.paper_experiments --suite ablations
+
+Writes one JSON per run into benchmarks/results/paper/.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro.core import FedAPConfig, FedDUConfig, FederatedTrainer, baselines, feddumap_config
+from repro.core.fedap import make_fedap_hook
+from repro.core.rounds import FLConfig
+from repro.data import build_federated_data
+from repro.data.synthetic import SyntheticSpec
+from repro.models import LeNet5, SimpleCNN
+
+OUT = Path("benchmarks/results/paper")
+
+# Scaled-down paper protocol (1-core CPU): 100 clients, 10/round, E=5, B=10.
+NUM_CLIENTS = 100
+ROUNDS = 60
+SPEC = SyntheticSpec(num_classes=10, image_shape=(10, 10, 3),
+                     train_size=13000, test_size=2000, noise_scale=0.45)
+DEVICE_POOL = 10000
+COMMON = dict(num_clients=NUM_CLIENTS, clients_per_round=10, local_epochs=5,
+              batch_size=10, lr=0.1, lr_decay=0.99)
+
+
+def make_model(name: str):
+    if name == "cnn":
+        return SimpleCNN(num_classes=10, image_shape=SPEC.image_shape)
+    if name == "lenet":
+        return LeNet5(num_classes=10, image_shape=SPEC.image_shape)
+    raise ValueError(name)
+
+
+def run_one(tag: str, *, model_name="cnn", algo="fedavg", p=0.05,
+            server_niid="iid", rounds=ROUNDS, seed=0,
+            feddu_overrides=None, prune_round=30, static_tau=None,
+            out_dir: Path = OUT):
+    out_dir.mkdir(parents=True, exist_ok=True)
+    path = out_dir / f"{tag}.json"
+    if path.exists():
+        print(f"[skip] {tag}")
+        return json.loads(path.read_text())
+    t0 = time.time()
+    data = build_federated_data(num_clients=NUM_CLIENTS, server_fraction=p,
+                                server_niid=server_niid, device_pool=DEVICE_POOL,
+                                spec=SPEC, seed=seed)
+    model = make_model(model_name)
+    feddu = FedDUConfig(**(feddu_overrides or {}),
+                        **({"static_tau_eff": static_tau} if static_tau else {}))
+    hook = None
+    extra = {}
+
+    if algo == "fedavg":
+        cfg = baselines.fedavg_config(**COMMON, seed=seed)
+    elif algo == "feddu":
+        cfg = baselines.feddu_config(**COMMON, seed=seed, feddu=feddu)
+    elif algo == "feddum":
+        cfg = feddumap_config(**COMMON, seed=seed, feddu=feddu)
+    elif algo == "serverm":
+        cfg = baselines.server_momentum_config(**COMMON, seed=seed, feddu=feddu)
+    elif algo == "devicem":
+        cfg = baselines.device_momentum_config(**COMMON, seed=seed, feddu=feddu)
+    elif algo == "fedda":
+        cfg = baselines.fedda_config(**COMMON, seed=seed, feddu=feddu)
+    elif algo == "datasharing":
+        data = baselines.apply_data_sharing(data, np.random.default_rng(seed))
+        cfg = baselines.fedavg_config(**COMMON, seed=seed)
+    elif algo == "hybridfl":
+        data = baselines.apply_hybrid_fl(data)
+        cfg = baselines.fedavg_config(
+            **{**COMMON, "num_clients": NUM_CLIENTS + 1}, seed=seed)
+    elif algo in ("feddf", "fedkt"):
+        cfg = baselines.fedavg_config(**COMMON, seed=seed)
+        hook = baselines.make_distillation_round_end(
+            model, data, mode=algo, steps=10, batch=32, seed=seed)
+    elif algo in ("imc", "prunefl"):
+        cfg = baselines.fedavg_config(**COMMON, seed=seed)
+        hook = baselines.make_unstructured_pruning_hook(
+            rate=0.5, prune_round=prune_round,
+            refresh_every=10 if algo == "prunefl" else None)
+    elif algo == "hrank":
+        cfg = baselines.fedavg_config(**COMMON, seed=seed)
+        hook = baselines.make_hrank_pruning_hook(
+            model, data, rate=0.4, prune_round=prune_round, probe=32)
+    elif algo == "fedap":
+        apcfg = FedAPConfig(prune_round=prune_round, probe_size=32)
+        cfg = baselines.fedavg_config(**COMMON, seed=seed, fedap=apcfg)
+        hook = make_fedap_hook(model, data, apcfg,
+                               init_params=model.init(jax.random.key(seed)),
+                               participants=6, seed=seed)
+    elif algo == "fedduap":   # FedDU + FedAP, no momentum
+        apcfg = FedAPConfig(prune_round=prune_round, probe_size=32)
+        cfg = baselines.feddu_config(**COMMON, seed=seed, feddu=feddu, fedap=apcfg)
+        hook = make_fedap_hook(model, data, apcfg,
+                               init_params=model.init(jax.random.key(seed)),
+                               participants=6, seed=seed)
+    elif algo == "feddumap":  # the full method
+        apcfg = FedAPConfig(prune_round=prune_round, probe_size=32)
+        cfg = feddumap_config(**COMMON, seed=seed, feddu=feddu, fedap=apcfg)
+        hook = make_fedap_hook(model, data, apcfg,
+                               init_params=model.init(jax.random.key(seed)),
+                               participants=6, seed=seed)
+    else:
+        raise ValueError(algo)
+
+    trainer = FederatedTrainer(model, data, cfg)
+    init_params = model.init(jax.random.key(seed))
+    flops_before = model.flops_per_example(init_params, SPEC.image_shape)
+    params, hist = trainer.run(rounds, eval_every=2, on_round_end=hook)
+    flops_after = model.flops_per_example(params, SPEC.image_shape) \
+        if algo in ("fedap", "fedduap", "feddumap", "hrank") else flops_before
+
+    rec = {
+        "tag": tag, "algo": algo, "model": model_name, "p": p,
+        "server_niid": server_niid, "rounds": rounds, "seed": seed,
+        "final_acc": hist["acc"][-1],
+        "best_acc": max(hist["acc"]),
+        "history": hist,
+        "mflops_before": flops_before / 1e6,
+        "mflops_after": flops_after / 1e6,
+        "wall_s": time.time() - t0,
+    }
+    if hook is not None and hasattr(hook, "result"):
+        rec["fedap"] = {k: v for k, v in hook.result.items() if k != "kept"}
+        if hook.result.get("kept"):
+            rec["fedap"]["kept_counts"] = {k: int(len(v))
+                                           for k, v in hook.result["kept"].items()}
+    path.write_text(json.dumps(rec))
+    print(f"[done] {tag}: acc={rec['final_acc']:.3f} best={rec['best_acc']:.3f} "
+          f"({rec['wall_s']:.0f}s)", flush=True)
+    return rec
+
+
+def suite_main():
+    """The paper's Table 10/12 comparison on the CNN model."""
+    for algo in ["fedavg", "feddu", "feddum", "fedap", "fedduap", "feddumap",
+                 "datasharing", "hybridfl", "serverm", "devicem", "fedda",
+                 "feddf", "fedkt", "imc", "prunefl", "hrank"]:
+        run_one(f"main_cnn_{algo}", algo=algo, p=0.05)
+
+
+def suite_p_sweep():
+    """Figure 2: FedDU with p in {1%, 5%, 10%}."""
+    for p in [0.01, 0.05, 0.10]:
+        run_one(f"psweep_feddu_p{int(p * 100)}", algo="feddu", p=p)
+
+
+def suite_ablations():
+    """Tables 2-5: tau_eff static vs dynamic, f'(acc), C, server non-IID."""
+    for tau in [5, 10, 20]:
+        run_one(f"abl_static_tau{tau}", algo="feddu", static_tau=float(tau))
+    run_one("abl_fprime_inv", algo="feddu",
+            feddu_overrides={"f_prime_kind": "inv"})
+    for c in [0.5, 1.5]:
+        run_one(f"abl_C{c}", algo="feddu", feddu_overrides={"C": c})
+    for kind in ["iid", "mild", "severe"]:
+        run_one(f"abl_server_{kind}", algo="feddu", server_niid=kind)
+
+
+def suite_lenet():
+    for algo in ["fedavg", "feddu", "feddumap"]:
+        run_one(f"lenet_{algo}", model_name="lenet", algo=algo, p=0.05)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--suite", default="all",
+                    choices=["main", "psweep", "ablations", "lenet", "all"])
+    args = ap.parse_args()
+    t0 = time.time()
+    if args.suite in ("main", "all"):
+        suite_main()
+    if args.suite in ("psweep", "all"):
+        suite_p_sweep()
+    if args.suite in ("ablations", "all"):
+        suite_ablations()
+    if args.suite in ("lenet", "all"):
+        suite_lenet()
+    print(f"total {time.time() - t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

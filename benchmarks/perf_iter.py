@@ -1,0 +1,92 @@
+"""§Perf hillclimb runner: re-lower one (arch, shape, mesh) with a named
+optimization variant and diff the roofline terms against the baseline.
+
+  PYTHONPATH=src python -m benchmarks.perf_iter \
+      --arch llama3-405b --shape prefill_32k \
+      --variant tree_attn --out benchmarks/results/perf
+
+Variants (environment/config knobs; see EXPERIMENTS.md §Perf):
+  baseline    — as-committed defaults
+  tree_attn   — REPRO_ATTN_MODE=tree (binary-tree causal attention)
+  p_bf16      — REPRO_ATTN_P_BF16=1 (bf16 probabilities for P @ V)
+  tree+p_bf16 — both
+  remat_dots  — cfg.remat='dots' (save matmul outputs in the bwd)
+  moe_cap1    — MoE capacity_factor 1.0 (vs 1.25)
+  block2k     — attention q-block 2048 (vs 1024)
+"""
+import argparse
+import dataclasses
+import json
+import os
+import sys
+from pathlib import Path
+
+VARIANTS = {
+    "baseline": {},
+    "tree_attn": {"env": {"REPRO_ATTN_MODE": "tree"}},
+    "p_bf16": {"env": {"REPRO_ATTN_P_BF16": "1"}},
+    "tree+p_bf16": {"env": {"REPRO_ATTN_MODE": "tree", "REPRO_ATTN_P_BF16": "1"}},
+    "remat_dots": {"cfg": {"remat": "dots"}},
+    "moe_cap1": {"moe": {"capacity_factor": 1.0}},
+    "block2k": {"env": {"REPRO_ATTN_BLOCK_Q": "2048"}},
+    "pad_heads": {"env": {"REPRO_ATTN_REPEAT_KV": "1", "REPRO_PAD_HEADS": "16"}},
+    "pad_heads+tree": {"env": {"REPRO_ATTN_REPEAT_KV": "1", "REPRO_PAD_HEADS": "16",
+                               "REPRO_ATTN_MODE": "tree"}},
+    "moe_cap1+pad_heads": {"env": {"REPRO_ATTN_REPEAT_KV": "1",
+                                   "REPRO_PAD_HEADS": "16"},
+                           "moe": {"capacity_factor": 1.0}},
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--variant", required=True, choices=list(VARIANTS))
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--out", default="benchmarks/results/perf")
+    args = ap.parse_args()
+
+    spec = VARIANTS[args.variant]
+    for k, v in spec.get("env", {}).items():
+        os.environ[k] = v
+
+    # XLA device count must be set before jax import — same as dryrun
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+    from repro.configs import _ARCHS  # noqa: F401  (triggers config import)
+    import repro.configs as C
+    from repro.launch import dryrun as D
+
+    cfg_overrides = dict(spec.get("cfg", {}))
+    moe_overrides = dict(spec.get("moe", {}))
+    if cfg_overrides or moe_overrides:
+        # monkey-patch get_config so dryrun_pair sees the variant config
+        base_get = C.get_config
+
+        def patched(name):
+            cfg = base_get(name)
+            if moe_overrides and cfg.moe:
+                cfg = dataclasses.replace(
+                    cfg, moe=dataclasses.replace(cfg.moe, **moe_overrides))
+            if cfg_overrides:
+                cfg = dataclasses.replace(cfg, **cfg_overrides)
+            return cfg
+
+        C.get_config = patched
+        D.get_config = patched
+
+    rec = D.dryrun_pair(args.arch, args.shape, multi_pod=args.multipod)
+    rec["variant"] = args.variant
+    out = Path(args.out)
+    out.mkdir(parents=True, exist_ok=True)
+    mesh = "2x16x16" if args.multipod else "16x16"
+    path = out / f"{args.arch}__{args.shape}__{mesh}__{args.variant}.json"
+    path.write_text(json.dumps(rec, indent=2))
+    t = rec["roofline"]
+    print(f"{args.variant}: compute {t['compute_s']:.2f}s  memory "
+          f"{t['memory_s']:.2f}s  collective {t['collective_s']:.2f}s  "
+          f"bottleneck={t['bottleneck']}  flops/dev={rec['hlo_flops_per_device']:.3e}")
+
+
+if __name__ == "__main__":
+    main()

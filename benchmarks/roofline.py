@@ -1,0 +1,66 @@
+"""§Roofline report: read the dry-run records and emit the three-term table.
+
+  PYTHONPATH=src python -m benchmarks.roofline [--dir benchmarks/results/dryrun]
+
+Terms (per device; the partitioned HLO module is the per-device program):
+  compute_s    = HLO_FLOPs / 197 TFLOP/s (bf16)
+  memory_s     = HLO_bytes / 819 GB/s
+  collective_s = ring-adjusted wire bytes / 50 GB/s per link
+plus MODEL_FLOPS = 6ND (train) / 2ND (inference), N_active for MoE, and the
+useful-compute ratio MODEL_FLOPS / (HLO_FLOPs * chips).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+
+def load_records(d: Path):
+    recs = []
+    for p in sorted(d.glob("*.json")):
+        r = json.loads(p.read_text())
+        if r.get("ok"):
+            recs.append(r)
+    return recs
+
+
+def fmt_row(r):
+    t = r["roofline"]
+    return (f"{r['arch']:<26} {r['shape']:<12} {r['mesh']:<8} "
+            f"{t['compute_s']:>10.3f} {t['memory_s']:>10.3f} "
+            f"{t['collective_s']:>12.3f} {t['bottleneck']:<10} "
+            f"{(r.get('useful_flops_ratio') or 0):>6.2f} "
+            f"{r['compile_s']:>7.1f}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="benchmarks/results/dryrun")
+    ap.add_argument("--csv", action="store_true")
+    args = ap.parse_args()
+    recs = load_records(Path(args.dir))
+    if args.csv:
+        print("arch,shape,mesh,compute_s,memory_s,collective_s,bottleneck,"
+              "useful_ratio,model_flops,hlo_flops_per_device")
+        for r in recs:
+            t = r["roofline"]
+            print(f"{r['arch']},{r['shape']},{r['mesh']},{t['compute_s']:.4f},"
+                  f"{t['memory_s']:.4f},{t['collective_s']:.4f},{t['bottleneck']},"
+                  f"{(r.get('useful_flops_ratio') or 0):.3f},"
+                  f"{r['model_flops']:.3e},{r['hlo_flops_per_device']:.3e}")
+        return
+    print(f"{'arch':<26} {'shape':<12} {'mesh':<8} {'compute_s':>10} "
+          f"{'memory_s':>10} {'collective_s':>12} {'bottleneck':<10} "
+          f"{'useful':>6} {'cmpl_s':>7}")
+    for r in recs:
+        print(fmt_row(r))
+    # summary: bottleneck census
+    census = {}
+    for r in recs:
+        census[r["roofline"]["bottleneck"]] = census.get(r["roofline"]["bottleneck"], 0) + 1
+    print("\nbottleneck census:", census)
+
+
+if __name__ == "__main__":
+    main()

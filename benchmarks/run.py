@@ -1,0 +1,212 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Micro-benchmarks measure the
+paper's operational pieces on this host (CPU); the large-architecture
+numbers come from the dry-run roofline records (benchmarks/roofline.py),
+and the accuracy tables from benchmarks/paper_experiments.py.
+
+  PYTHONPATH=src python -m benchmarks.run
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _timeit(fn, *args, iters=20, warmup=3):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def _row(name, us, derived):
+    print(f"{name},{us:.1f},{derived}")
+
+
+# --------------------------------------------------------------------------
+# Formulas 2-3: non-IID degree computation
+# --------------------------------------------------------------------------
+
+def bench_niid():
+    from repro.core import niid
+
+    rng = np.random.default_rng(0)
+    dists = jnp.asarray(rng.dirichlet(np.ones(100), size=100), jnp.float32)
+    sizes = jnp.ones((100,), jnp.float32) * 400
+    p_bar = niid.global_distribution(dists, sizes)
+    fn = jax.jit(lambda d: niid.non_iid_degree(d, p_bar))
+    us = _timeit(fn, dists)
+    _row("niid_degree_100clients_100classes", us, f"degrees/s={1e6 / us:.0f}")
+
+
+# --------------------------------------------------------------------------
+# Formula 7: tau_eff schedule
+# --------------------------------------------------------------------------
+
+def bench_tau_eff():
+    from repro.core.server_update import FedDUConfig, tau_eff
+
+    cfg = FedDUConfig()
+    fn = jax.jit(lambda t: tau_eff(cfg, acc=jnp.float32(0.5), round_idx=t,
+                                   n0=2000.0, n_prime=4000.0, d_round=0.3,
+                                   d_server=0.01, tau=100))
+    us = _timeit(fn, jnp.float32(10))
+    _row("tau_eff_schedule", us, "per-round scalar")
+
+
+# --------------------------------------------------------------------------
+# Tables 10-13 operational core: one FL round step (CNN, vmapped clients)
+# --------------------------------------------------------------------------
+
+def bench_round_step():
+    from repro.core import FederatedTrainer, baselines, feddumap_config
+    from repro.data import build_federated_data
+    from repro.data.synthetic import SyntheticSpec
+    from repro.models import SimpleCNN
+
+    spec = SyntheticSpec(num_classes=10, image_shape=(10, 10, 3),
+                         train_size=2600, test_size=200)
+    data = build_federated_data(num_clients=10, server_fraction=0.1,
+                                device_pool=2000, spec=spec)
+    model = SimpleCNN(num_classes=10, image_shape=(10, 10, 3))
+    from repro.core.momentum import init_server_momentum
+
+    for name, cfg in [
+        ("fedavg", baselines.fedavg_config(num_clients=10, clients_per_round=5,
+                                           local_epochs=1, batch_size=10)),
+        ("feddu", baselines.feddu_config(num_clients=10, clients_per_round=5,
+                                         local_epochs=1, batch_size=10)),
+        ("feddum", feddumap_config(num_clients=10, clients_per_round=5,
+                                   local_epochs=1, batch_size=10)),
+    ]:
+        tr = FederatedTrainer(model, data, cfg)
+        params = model.init(jax.random.key(0))
+        sm = init_server_momentum(params)
+        gm = init_server_momentum(params)
+        sel = np.arange(5)
+        xs, ys = zip(*[tr._client_batches(k) for k in sel])
+        cx, cy = jnp.asarray(np.stack(xs)), jnp.asarray(np.stack(ys))
+        sxs, sys_ = tr._server_batches()
+        args = (params, sm, gm, cx, cy, jnp.ones(5), jnp.asarray(sxs),
+                jnp.asarray(sys_), jnp.float32(0.3), jnp.float32(0.01),
+                jnp.float32(200.0), jnp.float32(0), jnp.float32(0.05))
+        us = _timeit(lambda *a: tr._round(*a)[0], *args, iters=5, warmup=2)
+        _row(f"fl_round_{name}", us, f"rounds/s={1e6 / us:.2f}")
+
+
+# --------------------------------------------------------------------------
+# Tables 6-9: FedAP pruning pipeline cost + FLOP reduction
+# --------------------------------------------------------------------------
+
+def bench_fedap():
+    from repro.core.pruning import (feature_map_ranks, global_threshold,
+                                    per_layer_rates, select_filters, shrink_params)
+    from repro.models import SimpleCNN
+
+    model = SimpleCNN(num_classes=10, image_shape=(16, 16, 3))
+    params = model.init(jax.random.key(0))
+    spec = model.prune_spec(params)
+    x = jnp.asarray(np.random.default_rng(0).standard_normal((32, 16, 16, 3)),
+                    jnp.float32)
+
+    fn = jax.jit(lambda p: global_threshold(p, spec, jnp.float32(0.4)))
+    us = _timeit(fn, params)
+    _row("fedap_global_threshold", us, "once per prune round")
+
+    fmaps = model.feature_maps(params, x)
+    us = _timeit(jax.jit(feature_map_ranks), fmaps["conv2"])
+    _row("fedap_hrank_scores_conv", us, "per layer, once")
+
+    thr = fn(params)
+    rates = per_layer_rates(params, spec, thr)
+    kept = {l.name: select_filters(np.asarray(feature_map_ranks(fmaps[l.name])),
+                                   float(rates[l.name]))
+            for l in spec.layers}
+    t0 = time.perf_counter()
+    pruned = shrink_params(params, spec, kept)
+    us = (time.perf_counter() - t0) * 1e6
+    before = model.flops_per_example(params, (16, 16, 3))
+    after = model.flops_per_example(pruned, (16, 16, 3))
+    _row("fedap_shrink_params", us, f"mflops {before / 1e6:.2f}->{after / 1e6:.2f}")
+
+
+# --------------------------------------------------------------------------
+# Attention: materialized vs blocked (flash-style) XLA implementations
+# --------------------------------------------------------------------------
+
+def bench_attention():
+    from repro.models.layers import attention_blocked, attention_ref
+
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.standard_normal((2, 2048, 8, 64)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((2, 2048, 2, 64)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((2, 2048, 2, 64)), jnp.float32)
+    f_ref = jax.jit(lambda a, b, c: attention_ref(a, b, c, causal=True))
+    f_blk = jax.jit(lambda a, b, c: attention_blocked(a, b, c, causal=True))
+    us_ref = _timeit(f_ref, q, k, v, iters=5)
+    us_blk = _timeit(f_blk, q, k, v, iters=5)
+    _row("attention_ref_2k", us_ref, "materialized scores")
+    _row("attention_blocked_2k", us_blk,
+         f"flash-style; ratio={us_ref / us_blk:.2f}x")
+
+
+def bench_ssd():
+    from repro.models.layers import _ssd_chunk_scan
+
+    rng = np.random.default_rng(0)
+    b, s, nh, p, n = 2, 2048, 8, 64, 64
+    x = jnp.asarray(rng.standard_normal((b, s, nh, p)), jnp.float32)
+    bm = jnp.asarray(rng.standard_normal((b, s, n)), jnp.float32)
+    cm = jnp.asarray(rng.standard_normal((b, s, n)), jnp.float32)
+    dt = jnp.asarray(rng.standard_normal((b, s, nh)), jnp.float32)
+    al = jnp.zeros((nh,))
+    d = jnp.ones((nh,))
+    db = jnp.zeros((nh,))
+    fn = jax.jit(lambda a1, a2, a3, a4: _ssd_chunk_scan(
+        (a1, a2, a3, a4), al, d, db, None, 256))
+    us = _timeit(fn, x, bm, cm, dt, iters=3)
+    tokens_per_s = b * s / (us / 1e6)
+    _row("ssd_chunk_scan_2k", us, f"tokens/s={tokens_per_s:.0f}")
+
+
+# --------------------------------------------------------------------------
+# Roofline summary (from dry-run records, if present)
+# --------------------------------------------------------------------------
+
+def bench_roofline_summary():
+    import json
+    from pathlib import Path
+
+    d = Path("benchmarks/results/dryrun")
+    if not d.exists():
+        return
+    recs = [json.loads(p.read_text()) for p in sorted(d.glob("*.json"))]
+    ok = [r for r in recs if r.get("ok")]
+    census = {}
+    for r in ok:
+        b = r["roofline"]["bottleneck"]
+        census[b] = census.get(b, 0) + 1
+    _row("dryrun_pairs_compiled", 0.0,
+         f"{len(ok)}/{len(recs)} ok; census={census}")
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    bench_niid()
+    bench_tau_eff()
+    bench_fedap()
+    bench_attention()
+    bench_ssd()
+    bench_round_step()
+    bench_roofline_summary()
+
+
+if __name__ == "__main__":
+    main()

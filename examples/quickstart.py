@@ -1,0 +1,45 @@
+"""Quickstart: FedDUMAP in ~40 lines.
+
+Builds a small federated world (20 non-IID clients + shared server data),
+trains the paper's CNN with the full method (FedDU dynamic server update +
+FedDUM two-sided momentum + FedAP adaptive pruning at round 6), and prints
+the accuracy trajectory and the dynamic tau_eff schedule.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+
+from repro.core import FedAPConfig, FederatedTrainer, feddumap_config
+from repro.core.fedap import make_fedap_hook
+from repro.data import build_federated_data
+from repro.data.synthetic import SyntheticSpec
+from repro.models import SimpleCNN
+from repro.utils import tree_size
+
+
+def main():
+    spec = SyntheticSpec(num_classes=10, image_shape=(10, 10, 3),
+                         train_size=5200, test_size=800, noise_scale=0.5)
+    data = build_federated_data(num_clients=20, server_fraction=0.08,
+                                device_pool=4000, spec=spec)
+    model = SimpleCNN(num_classes=10, image_shape=(10, 10, 3))
+
+    fedap = FedAPConfig(prune_round=6, probe_size=16)
+    cfg = feddumap_config(num_clients=20, clients_per_round=5, local_epochs=2,
+                          batch_size=10, lr=0.08, fedap=fedap)
+    trainer = FederatedTrainer(model, data, cfg)
+
+    init_params = model.init(jax.random.key(0))
+    hook = make_fedap_hook(model, data, fedap, init_params=init_params,
+                           participants=4)
+    params, hist = trainer.run(10, on_round_end=hook)
+
+    print("\nround  acc     tau_eff")
+    for r, a, t in zip(hist["round"], hist["acc"], hist["tau_eff"]):
+        print(f"{r:>5}  {a:.3f}  {t:8.3f}")
+    print(f"\nFedAP: global rate p*={hook.result['p_star']:.3f}, "
+          f"params {tree_size(init_params):,} -> {tree_size(params):,}")
+
+
+if __name__ == "__main__":
+    main()

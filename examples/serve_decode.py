@@ -1,0 +1,82 @@
+"""Serving demo: batched autoregressive decode with a KV cache.
+
+Instantiates a reduced variant of any assigned architecture (--arch), runs
+a short prefill, then decodes tokens for a batch of requests through the
+same ``decode_step`` the decode_32k / long_500k dry-runs lower.
+
+  PYTHONPATH=src python examples/serve_decode.py --arch chatglm3-6b --tokens 32
+  PYTHONPATH=src python examples/serve_decode.py --arch zamba2-1.2b --tokens 32
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_NAMES, get_config
+from repro.models.api import build_model
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="chatglm3-6b", choices=list(ARCH_NAMES))
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prefill", type=int, default=16)
+    ap.add_argument("--tokens", type=int, default=32)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    rng = np.random.default_rng(0)
+
+    cache_len = args.prefill + args.tokens
+    cache = model.init_cache(args.batch, cache_len)
+    batch_extra = {}
+    if cfg.family == "encdec":
+        batch_extra["enc_embeds"] = jnp.asarray(
+            rng.standard_normal((args.batch, cfg.encoder.frames, cfg.d_model)),
+            jnp.float32)
+        cache = model.prefill_cross(params, cache, batch_extra)
+
+    decode = jax.jit(model.decode_step)
+    prompt = rng.integers(0, cfg.vocab_size, (args.batch, args.prefill))
+
+    # prefill by stepping the prompt through the cache (simple serving path)
+    tok = None
+    t0 = time.time()
+    for t in range(args.prefill):
+        step = {"tokens": jnp.asarray(prompt[:, t:t + 1], jnp.int32), **(
+            batch_extra if cfg.family == "encdec" else {})}
+        if cfg.family == "vlm":
+            step = {"embeds": jnp.asarray(
+                rng.standard_normal((args.batch, 1, cfg.d_model)) * 0.1,
+                jnp.float32)}
+        logits, cache = decode(params, cache, step)
+    prefill_s = time.time() - t0
+
+    # greedy decode
+    out = []
+    t0 = time.time()
+    tok = jnp.argmax(logits[:, -1], -1)[:, None]
+    for _ in range(args.tokens):
+        step = {"tokens": tok.astype(jnp.int32), **(
+            batch_extra if cfg.family == "encdec" else {})}
+        if cfg.family == "vlm":
+            step = {"embeds": jax.nn.one_hot(tok, cfg.d_model, dtype=jnp.float32)}
+        logits, cache = decode(params, cache, step)
+        tok = jnp.argmax(logits[:, -1], -1)[:, None]
+        out.append(np.asarray(tok[:, 0]))
+    decode_s = time.time() - t0
+    gen = np.stack(out, 1)
+
+    print(f"arch={cfg.name} (reduced) batch={args.batch}")
+    print(f"prefill {args.prefill} tok: {prefill_s:.2f}s; "
+          f"decode {args.tokens} tok: {decode_s:.2f}s "
+          f"({args.batch * args.tokens / decode_s:.1f} tok/s)")
+    print("sample:", gen[0][:16].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Config registry: ``get_config('<arch-id>')`` and the shape table.
+
+All 10 assigned architectures (+ the paper's own CIFAR models, which live
+in repro.models.cnn and are configured inline by the experiments).
+"""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import INPUT_SHAPES, InputShape, ModelConfig
+
+_ARCHS = {
+    "whisper-small": "repro.configs.whisper_small",
+    "deepseek-67b": "repro.configs.deepseek_67b",
+    "chatglm3-6b": "repro.configs.chatglm3_6b",
+    "qwen2-vl-7b": "repro.configs.qwen2_vl_7b",
+    "arctic-480b": "repro.configs.arctic_480b",
+    "olmo-1b": "repro.configs.olmo_1b",
+    "llama4-maverick-400b-a17b": "repro.configs.llama4_maverick_400b",
+    "llama3-405b": "repro.configs.llama3_405b",
+    "zamba2-1.2b": "repro.configs.zamba2_1p2b",
+    "xlstm-125m": "repro.configs.xlstm_125m",
+}
+
+ARCH_NAMES = tuple(_ARCHS)
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in _ARCHS:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_ARCHS)}")
+    return importlib.import_module(_ARCHS[name]).CONFIG
+
+
+__all__ = ["ARCH_NAMES", "INPUT_SHAPES", "InputShape", "ModelConfig", "get_config"]

@@ -1,0 +1,170 @@
+"""Architecture + shape + FL configuration dataclasses.
+
+Every assigned architecture is a :class:`ModelConfig`; the four required
+input shapes are :data:`INPUT_SHAPES`.  Configs are pure data — models are
+assembled from them by ``repro.models.api.build_model``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    expert_d_ff: int
+    dense_d_ff: int = 0          # arctic-style dense residual branch (0 = none)
+    shared_expert: bool = False  # llama4-style always-on shared expert
+    capacity_factor: float = 1.25
+    router_z_loss: float = 1e-3
+    load_balance_loss: float = 1e-2
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    state_dim: int = 64          # N (per-head state size)
+    conv_width: int = 4
+    expand: int = 2              # d_inner = expand * d_model
+    num_ssm_heads: int = 0       # 0 -> d_inner // 64
+    chunk: int = 256             # chunked-scan block length
+
+
+@dataclasses.dataclass(frozen=True)
+class XLSTMConfig:
+    slstm_every: int = 4         # every k-th block is sLSTM, rest mLSTM
+    proj_factor: float = 2.0
+
+
+@dataclasses.dataclass(frozen=True)
+class EncoderConfig:
+    """Whisper-style audio encoder (conv frontend is a STUB: input_specs
+    provides precomputed mel-frame embeddings [B, frames, d_model])."""
+    num_layers: int = 12
+    frames: int = 1500
+
+
+@dataclasses.dataclass(frozen=True)
+class HybridConfig:
+    """zamba2-style: Mamba2 backbone + one SHARED attention block applied
+    every ``attn_every`` layers (weights reused at each application)."""
+    attn_every: int = 6
+
+
+@dataclasses.dataclass(frozen=True)
+class VLMConfig:
+    """qwen2-vl: vision frontend is a STUB — input_specs provides the
+    interleaved text+patch embedding sequence and the 3-axis M-RoPE ids."""
+    num_vision_tokens: int = 1024    # of the sequence, for spec realism
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                   # dense | moe | ssm | hybrid | encdec | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    rope: str = "1d"              # 1d | 2d | mrope | none
+    norm: str = "rmsnorm"         # rmsnorm | layernorm | nonparam
+    act: str = "silu"             # silu (SwiGLU) | gelu (plain MLP)
+    head_dim: int = 0             # 0 -> d_model // num_heads
+    tie_embeddings: bool = False
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    xlstm: Optional[XLSTMConfig] = None
+    encoder: Optional[EncoderConfig] = None
+    hybrid: Optional[HybridConfig] = None
+    vlm: Optional[VLMConfig] = None
+    # Long-context execution: dense archs run long_500k ONLY via this window
+    # (ring-buffer KV cache); SSM/hybrid run natively. None = full attention.
+    sliding_window: Optional[int] = None
+    # --- distribution ----------------------------------------------------
+    # Which mesh axis hosts FL clients ('data' for <=10B archs, 'pod' for
+    # cross-silo giants; see DESIGN.md Section 4).
+    fl_client_axis: str = "data"
+    # FSDP: shard parameters over the 'data' axis too (giants).
+    fsdp: bool = False
+    # Pad attention-head count up to a multiple of this so the TP axis
+    # shards attention evenly (dead heads have zero wo rows — semantics
+    # exact; §Perf C1).  0 = off.  Archs whose head counts do not divide
+    # the 16-way model axis (56/40/28/12) set 16.
+    pad_heads_to: int = 0
+    # Remat policy for the backward pass: 'none' | 'block' | 'dots'
+    remat: str = "block"
+    # dtype of params in the distributed runtime
+    param_dtype: str = "bfloat16"
+    citation: str = ""
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    @property
+    def q_per_kv(self) -> int:
+        return self.num_heads // self.num_kv_heads
+
+    @property
+    def padded_num_heads(self) -> int:
+        """Head count after §Perf-C1 padding (== num_heads when off)."""
+        p = self.pad_heads_to
+        if not p or self.num_heads % p == 0:
+            return self.num_heads
+        return (self.num_heads + p - 1) // p * p
+
+    @property
+    def padded_num_kv_heads(self) -> int:
+        """KV heads must divide the padded head count; MHA archs (whisper)
+        pad KV alongside Q."""
+        h = self.padded_num_heads
+        kv = self.num_kv_heads
+        return kv if h % kv == 0 else h
+
+    def reduced(self, **overrides) -> "ModelConfig":
+        """The smoke-test variant: 2 layers, d_model<=512, <=4 experts."""
+        small = dict(
+            num_layers=2,
+            d_model=min(self.d_model, 256),
+            num_heads=min(self.num_heads, 4),
+            num_kv_heads=min(self.num_kv_heads, 2),
+            d_ff=min(self.d_ff, 512) if self.d_ff else 0,
+            vocab_size=min(self.vocab_size, 512),
+            head_dim=64,
+            param_dtype="float32",
+            fsdp=False,
+            remat="none",
+        )
+        if self.num_kv_heads == self.num_heads:     # MHA archs stay MHA
+            small["num_kv_heads"] = small["num_heads"]
+        if self.moe:
+            small["moe"] = dataclasses.replace(
+                self.moe, num_experts=4, top_k=min(self.moe.top_k, 2),
+                expert_d_ff=128, dense_d_ff=128 if self.moe.dense_d_ff else 0)
+        if self.ssm:
+            small["ssm"] = dataclasses.replace(self.ssm, state_dim=16, chunk=32)
+        if self.encoder:
+            small["encoder"] = dataclasses.replace(self.encoder, num_layers=2, frames=64)
+        if self.sliding_window:
+            small["sliding_window"] = 64
+        small.update(overrides)
+        return dataclasses.replace(self, **small)
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                 # 'train' | 'prefill' | 'decode'
+
+
+INPUT_SHAPES: dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}

@@ -1,0 +1,28 @@
+"""qwen2-vl-7b [arXiv:2409.12191] — VLM backbone with M-RoPE.
+
+28L d_model=3584 28H (GQA kv=4) d_ff=18944 vocab=152064.
+Vision encoder (ViT) + projector are STUBS: input_specs provides the
+interleaved text+patch embedding sequence plus the 3-axis (temporal,
+height, width) M-RoPE position ids.
+"""
+from repro.configs.base import ModelConfig, VLMConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-vl-7b",
+    family="vlm",
+    num_layers=28,
+    d_model=3584,
+    num_heads=28,
+    num_kv_heads=4,
+    d_ff=18944,
+    vocab_size=152064,
+    rope="mrope",
+    norm="rmsnorm",
+    act="silu",
+    vlm=VLMConfig(num_vision_tokens=1024),
+    sliding_window=8192,
+    pad_heads_to=16,
+    fl_client_axis="data",
+    fsdp=False,
+    citation="arXiv:2409.12191",
+)

@@ -1,0 +1,29 @@
+"""whisper-small [arXiv:2212.04356] — encoder-decoder audio transformer.
+
+12L (encoder + decoder) d_model=768 12H (kv=12, i.e. MHA) d_ff=3072
+vocab=51865.  The mel-spectrogram + conv feature extractor is a STUB:
+``input_specs`` provides precomputed frame embeddings [B, 1500, 768].
+long_500k runs with a sliding-window decoder self-attention; cross-attn is
+always to the fixed 1500-frame encoder output.
+"""
+from repro.configs.base import EncoderConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-small",
+    family="encdec",
+    num_layers=12,
+    d_model=768,
+    num_heads=12,
+    num_kv_heads=12,
+    d_ff=3072,
+    vocab_size=51865,
+    rope="none",              # whisper uses learned/sinusoidal abs positions
+    norm="layernorm",
+    act="gelu",
+    encoder=EncoderConfig(num_layers=12, frames=1500),
+    sliding_window=8192,      # decoder self-attn window for long_500k
+    pad_heads_to=16,
+    fl_client_axis="data",
+    fsdp=False,
+    citation="arXiv:2212.04356",
+)

@@ -1,0 +1,23 @@
+"""repro.core — the paper's contribution: FedDU + FedDUM + FedAP.
+
+Public surface:
+  niid            — non-IID degrees (JS divergence), Formulas 2-3
+  server_update   — FedDU dynamic server update, Formulas 4-7
+  momentum        — FedDUM decoupled two-sided momentum, Formulas 8/11/12
+  pruning, fedap  — FedAP layer-adaptive structured pruning, Algorithm 3
+  rounds          — the 6-step federated round engine
+  baselines       — FedAvg / Data-sharing / Hybrid-FL / ServerM / DeviceM /
+                    FedDA / FedDF / FedKT / IMC / PruneFL / HRank
+"""
+from repro.core import baselines, fedap, momentum, niid, pruning, pruning_lm, rounds, server_update
+from repro.core.rounds import FederatedTrainer, FLConfig, feddumap_config
+from repro.core.server_update import FedDUConfig, tau_eff
+from repro.core.momentum import FedDUMConfig
+from repro.core.pruning import FedAPConfig, PruneSpec, PrunableLayer, CoupledParam
+
+__all__ = [
+    "baselines", "fedap", "momentum", "niid", "pruning", "pruning_lm", "rounds", "server_update",
+    "FederatedTrainer", "FLConfig", "feddumap_config",
+    "FedDUConfig", "FedDUMConfig", "FedAPConfig",
+    "PruneSpec", "PrunableLayer", "CoupledParam", "tau_eff",
+]

@@ -1,0 +1,238 @@
+"""Baseline FL algorithms from the paper's evaluation (Section 4).
+
+Every baseline reuses the :class:`~repro.core.rounds.FederatedTrainer`
+engine so comparisons are apples-to-apples:
+
+  FedAvg        — plain local SGD + weighted averaging [5].
+  Data-sharing  — server data is SHIPPED TO the devices and mixed into the
+                  local datasets [1] (privacy + comm cost; the paper's foil).
+  Hybrid-FL     — the server participates as just another (big) client [11].
+  ServerM       — FedDU + server-side momentum only [25].
+  DeviceM       — FedDU + device-side restart momentum only [75].
+  FedDA         — two-sided momentum with COMMUNICATED buffers [32].
+  FedDF         — ensemble distillation on server data [22]: after FedAvg,
+                  the global model is trained toward the average of the
+                  client models' logits on server data.
+  FedKT         — one-shot-style knowledge transfer [4]: like FedDF but with
+                  hard pseudo-labels voted by the client ensemble.
+  IMC           — unstructured global magnitude pruning at the prune round,
+                  rate from the eigen-gap criterion [62]; mask kept forever.
+  PruneFL       — unstructured magnitude pruning, fixed rate, re-evaluated
+                  periodically [33].
+  HRank         — structured rank-based pruning with a FIXED global rate
+                  (no layer adaptation, no non-IID weighting) [34].
+
+Unstructured baselines keep dense shapes (mask only) — which is exactly why
+the paper reports unchanged device FLOPs for them (Tables 6-9); structured
+FedAP/HRank actually shrink the model.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.pruning import (
+    FedAPConfig,
+    PruneSpec,
+    fedap_prune,
+    feature_map_ranks,
+    select_filters,
+    shrink_params,
+)
+from repro.core.rounds import FederatedTrainer, FLConfig
+
+
+# ---------------------------------------------------------------------------
+# Optimization baselines — pure FLConfig recipes
+# ---------------------------------------------------------------------------
+
+def fedavg_config(**kw) -> FLConfig:
+    kw.setdefault("use_server_update", False)
+    return FLConfig(**kw)
+
+
+def feddu_config(**kw) -> FLConfig:
+    kw.setdefault("use_server_update", True)
+    return FLConfig(**kw)
+
+
+def server_momentum_config(**kw) -> FLConfig:
+    kw.setdefault("use_server_update", True)
+    kw.setdefault("server_momentum", True)
+    kw.setdefault("local_momentum", "none")
+    return FLConfig(**kw)
+
+
+def device_momentum_config(**kw) -> FLConfig:
+    kw.setdefault("use_server_update", True)
+    kw.setdefault("server_momentum", False)
+    kw.setdefault("local_momentum", "restart")
+    return FLConfig(**kw)
+
+
+def fedda_config(**kw) -> FLConfig:
+    kw.setdefault("use_server_update", True)
+    kw.setdefault("server_momentum", True)
+    kw.setdefault("local_momentum", "communicated")
+    return FLConfig(**kw)
+
+
+# ---------------------------------------------------------------------------
+# Data-placement baselines — transform the federated dataset
+# ---------------------------------------------------------------------------
+
+def apply_data_sharing(data, rng: np.random.Generator):
+    """Data-sharing [1]: distribute the server data evenly to all clients
+    and train with plain FedAvg (server keeps a copy for evaluation)."""
+    from repro.data.pipeline import FederatedData
+
+    n_clients = data.client_x.shape[0]
+    per = data.server_x.shape[0] // n_clients
+    if per == 0:
+        return data
+    perm = rng.permutation(data.server_x.shape[0])
+    sx, sy = np.asarray(data.server_x)[perm], np.asarray(data.server_y)[perm]
+    new_x = np.concatenate(
+        [np.asarray(data.client_x), sx[: per * n_clients].reshape(n_clients, per, *sx.shape[1:])],
+        axis=1)
+    new_y = np.concatenate(
+        [np.asarray(data.client_y), sy[: per * n_clients].reshape(n_clients, per)], axis=1)
+    num_classes = data.client_dists.shape[1]
+    dists = np.stack([np.bincount(y, minlength=num_classes) for y in new_y]).astype(np.float32)
+    dists /= dists.sum(1, keepdims=True)
+    return FederatedData(
+        client_x=new_x, client_y=new_y, sizes=data.sizes + per,
+        client_dists=dists, server_x=data.server_x, server_y=data.server_y,
+        server_dist=data.server_dist, test_x=data.test_x, test_y=data.test_y)
+
+
+def apply_hybrid_fl(data):
+    """Hybrid-FL [11]: the server data becomes one extra ordinary client
+    (truncated/padded to the common client size so the vmapped engine can
+    treat it uniformly — the paper's point is that this under-uses n0)."""
+    from repro.data.pipeline import FederatedData
+
+    n_k = data.client_x.shape[1]
+    sx, sy = np.asarray(data.server_x), np.asarray(data.server_y)
+    reps = int(np.ceil(n_k / sx.shape[0]))
+    sx = np.tile(sx, (reps,) + (1,) * (sx.ndim - 1))[:n_k]
+    sy = np.tile(sy, reps)[:n_k]
+    num_classes = data.client_dists.shape[1]
+    sdist = np.bincount(sy, minlength=num_classes).astype(np.float32)
+    sdist /= sdist.sum()
+    return FederatedData(
+        client_x=np.concatenate([np.asarray(data.client_x), sx[None]], axis=0),
+        client_y=np.concatenate([np.asarray(data.client_y), sy[None]], axis=0),
+        sizes=np.concatenate([data.sizes, [n_k]]),
+        client_dists=np.concatenate([data.client_dists, sdist[None]], axis=0),
+        server_x=data.server_x, server_y=data.server_y, server_dist=data.server_dist,
+        test_x=data.test_x, test_y=data.test_y)
+
+
+# ---------------------------------------------------------------------------
+# Distillation baselines — post-aggregation server phase
+# ---------------------------------------------------------------------------
+
+def make_distillation_round_end(model, data, *, mode: str = "feddf",
+                                steps: int = 20, batch: int = 64, lr: float = 0.01,
+                                seed: int = 0):
+    """FedDF [22] / FedKT [4] server phase as an ``on_round_end`` hook.
+
+    After each aggregation the global model is nudged toward the client
+    ensemble's predictions on the server data.  The trainer stores the last
+    round's client models?  No — to stay engine-agnostic (and because the
+    ensemble teacher changes little between consecutive models), we use the
+    pre-update global model as the teacher, which is the standard
+    self-distillation reduction used when client models are unavailable.
+    """
+    rng = np.random.default_rng(seed)
+    sx, sy = np.asarray(data.server_x), np.asarray(data.server_y)
+
+    @jax.jit
+    def distill_steps(params, teacher_params, xs):
+        def one(p, x):
+            t_logits = model.apply(teacher_params, x)
+            if mode == "fedkt":
+                targets = jnp.argmax(t_logits, -1)
+
+                def loss(pp):
+                    lg = model.apply(pp, x)
+                    lp = jax.nn.log_softmax(lg)
+                    return -jnp.mean(jnp.take_along_axis(lp, targets[:, None], 1))
+            else:
+                def loss(pp):
+                    lg = model.apply(pp, x)
+                    return jnp.mean(
+                        jnp.sum(jax.nn.softmax(t_logits)
+                                * (jax.nn.log_softmax(t_logits) - jax.nn.log_softmax(lg)),
+                                axis=-1))
+            g = jax.grad(loss)(p)
+            return jax.tree.map(lambda pi, gi: (pi - lr * gi).astype(pi.dtype), p, g), None
+
+        params, _ = jax.lax.scan(one, params, xs)
+        return params
+
+    def hook(trainer, t, params):
+        idx = rng.integers(0, sx.shape[0], steps * batch)
+        xs = jnp.asarray(sx[idx].reshape(steps, batch, *sx.shape[1:]))
+        return distill_steps(params, params, xs)
+
+    return hook
+
+
+# ---------------------------------------------------------------------------
+# Pruning baselines — on_round_end hooks
+# ---------------------------------------------------------------------------
+
+def unstructured_magnitude_mask(params, rate: float):
+    """Global magnitude mask at ``rate`` (IMC / PruneFL style)."""
+    flat = jnp.concatenate([jnp.abs(x).reshape(-1).astype(jnp.float32)
+                            for x in jax.tree.leaves(params)])
+    k = int(np.clip(rate * flat.size, 0, flat.size - 1))
+    thr = jnp.sort(flat)[k]
+    return jax.tree.map(lambda x: (jnp.abs(x) >= thr).astype(x.dtype), params)
+
+
+def make_unstructured_pruning_hook(*, rate: float, prune_round: int,
+                                   refresh_every: int | None = None):
+    """IMC (refresh_every=None) / PruneFL (periodic re-evaluation) hook.
+    Masks are applied multiplicatively — shapes (and device FLOPs) do not
+    change, matching the paper's Tables 6-9."""
+    state = {"mask": None}
+
+    def hook(trainer, t, params):
+        redo = (t + 1 == prune_round) or (
+            refresh_every and state["mask"] is not None
+            and (t + 1 - prune_round) % refresh_every == 0 and t + 1 > prune_round)
+        if redo:
+            state["mask"] = unstructured_magnitude_mask(params, rate)
+        if state["mask"] is not None:
+            return jax.tree.map(lambda p, m: p * m, params, state["mask"])
+        return None
+
+    return hook
+
+
+def make_hrank_pruning_hook(model, data, *, rate: float, prune_round: int,
+                            probe: int = 64, align: int | None = None):
+    """HRank [34]: structured, rank-based, FIXED rate for every layer —
+    the paper's foil for FedAP's layer-adaptive rates."""
+
+    def hook(trainer, t, params):
+        if t + 1 != prune_round:
+            return None
+        spec: PruneSpec = model.prune_spec(params)
+        fmaps = model.feature_maps(params, jnp.asarray(data.server_x[:probe]))
+        kept = {}
+        for layer in spec.layers:
+            scores = feature_map_ranks(fmaps[layer.feature_key or layer.name])
+            kept[layer.name] = select_filters(scores, rate, align=align)
+        new_params = shrink_params(params, spec, kept)
+        trainer.model = model.with_pruned(kept)
+        return new_params
+
+    return hook

@@ -1,0 +1,56 @@
+"""Non-IID degree quantification (paper Formulas 2-3).
+
+The non-IID degree of a dataset is the Jensen-Shannon divergence between
+its label distribution P_k and the global device-data distribution P_bar:
+
+    D(P_k) = 1/2 KL(P_k || P_m) + 1/2 KL(P_bar || P_m),   P_m = (P_k + P_bar)/2
+
+Only label histograms (P_k, n_k) travel to the server — never raw data —
+matching the paper's privacy assumption (Section 3.1).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+_EPS = 1e-12
+
+
+def kl_divergence(p: jnp.ndarray, q: jnp.ndarray) -> jnp.ndarray:
+    """KL(p || q) over the last axis, safe for zero entries (0*log0 = 0)."""
+    p = jnp.asarray(p, jnp.float32)
+    q = jnp.asarray(q, jnp.float32)
+    ratio = jnp.log(jnp.clip(p, _EPS, None)) - jnp.log(jnp.clip(q, _EPS, None))
+    return jnp.sum(jnp.where(p > 0, p * ratio, 0.0), axis=-1)
+
+
+def js_divergence(p: jnp.ndarray, q: jnp.ndarray) -> jnp.ndarray:
+    m = 0.5 * (p + q)
+    return 0.5 * kl_divergence(p, m) + 0.5 * kl_divergence(q, m)
+
+
+def label_distribution(labels: jnp.ndarray, num_classes: int) -> jnp.ndarray:
+    """Empirical P_k from integer labels."""
+    counts = jnp.bincount(labels.reshape(-1), length=num_classes).astype(jnp.float32)
+    return counts / jnp.clip(jnp.sum(counts), 1.0, None)
+
+
+def global_distribution(client_dists: jnp.ndarray, client_sizes: jnp.ndarray) -> jnp.ndarray:
+    """P_bar = sum_k n_k P_k / sum_k n_k  over ALL devices (Formula 2 text).
+
+    client_dists: [N, num_classes]; client_sizes: [N].
+    """
+    w = jnp.asarray(client_sizes, jnp.float32)
+    w = w / jnp.clip(jnp.sum(w), 1.0, None)
+    return jnp.einsum("k,kc->c", w, jnp.asarray(client_dists, jnp.float32))
+
+
+def non_iid_degree(p_k: jnp.ndarray, p_bar: jnp.ndarray) -> jnp.ndarray:
+    """D(P_k) — Formula 2. Higher = further from the global distribution."""
+    return js_divergence(jnp.asarray(p_k, jnp.float32), jnp.asarray(p_bar, jnp.float32))
+
+
+def round_distribution(client_dists: jnp.ndarray, client_sizes: jnp.ndarray,
+                       selected: jnp.ndarray) -> jnp.ndarray:
+    """P_bar'^t — distribution of the data held by the devices selected in
+    round t (Formula 7).  ``selected`` is an index array into the clients."""
+    return global_distribution(client_dists[selected], client_sizes[selected])

@@ -1,0 +1,343 @@
+"""FedAP — layer-adaptive structured pruning (paper Section 3.4, Algorithm 3).
+
+Pipeline (executed ONCE, on the server, at a predefined round):
+
+  1. Every participant k (server = 0) derives an *expected pruning rate*
+     p*_k from the eigen-gap of a loss-curvature spectrum (the IMC /
+     inertial-manifold criterion [62]): sort eigenvalues ascending and take
+     the largest prefix m_k with  lambda_{m+1} - lambda_m > 4 * L_k, then
+     p*_k = m_k / d_k.
+
+     Hardware adaptation: the exact Hessian is not computable at any of the
+     assigned scales, so the spectrum is the *empirical Fisher* spectrum
+     obtained via the Gram trick — eigenvalues of (1/n) G G^T where G is the
+     [n_probe, P] per-sample gradient matrix; G G^T is [n_probe, n_probe]
+     and shares all nonzero eigenvalues with the Fisher (1/n) G^T G.
+
+  2. Rates are aggregated with non-IID-degree weights (Formula 15):
+         p* = sum_k [ (n_k / (D(P_k)+eps)) / sum_k' (...) ] * p*_k
+
+  3. A global magnitude threshold V = |v_(floor(R * p*))| (the R*p*-th
+     smallest |weight| over ALL prunable weights) converts p* into a
+     per-layer rate p*_l = #{|w| < V in layer l} / q_l  (Alg. 3 lines 6-11).
+
+  4. Within each layer, filters with the lowest HRank feature-map rank
+     (computed on server data) are removed; we keep the top
+     d_l - floor(p*_l * d_l) filters (lines 12-15).
+
+Structured pruning is expressed model-agnostically through a
+``PruneSpec``: each prunable layer names its weight tensor, the filter
+axis, and every coupled tensor/axis that must shrink with it (bias, the
+next layer's input axis, norm scales).  Models publish their own spec.
+
+TPU note: kept-filter counts can optionally be rounded UP to a multiple of
+128 (MXU lane width) so the shrunken matmuls stay hardware-aligned; this
+only ever prunes *less* than p*_l, preserving the paper's p_l <= p*_l
+inequality (Alg. 3 line 14).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Mapping, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Path = tuple
+
+
+# ---------------------------------------------------------------------------
+# Pytree path addressing
+# ---------------------------------------------------------------------------
+
+def get_path(tree: Any, path: Path):
+    for k in path:
+        tree = tree[k]
+    return tree
+
+
+def set_path(tree: Any, path: Path, value: Any):
+    """Functional set on nested dicts."""
+    if not path:
+        return value
+    head, rest = path[0], path[1:]
+    new = dict(tree)
+    new[head] = set_path(tree[head], rest, value)
+    return new
+
+
+# ---------------------------------------------------------------------------
+# Prune spec
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class CoupledParam:
+    path: Path
+    axis: int
+
+
+@dataclasses.dataclass(frozen=True)
+class PrunableLayer:
+    """One structurally-prunable layer.
+
+    weight:      the tensor holding the filters (conv kernel [kh,kw,cin,cout],
+                 FFN up-proj [d_model, d_ff], ...).
+    filter_axis: the output-filter axis of ``weight``.
+    coupled:     tensors that must be sliced along the same filter dimension
+                 (bias of this layer; NEXT layer's input axis; norms).
+    feature_key: key under which the model reports this layer's feature maps.
+    """
+
+    name: str
+    weight: Path
+    filter_axis: int
+    coupled: tuple[CoupledParam, ...] = ()
+    feature_key: str | None = None
+
+
+@dataclasses.dataclass(frozen=True)
+class PruneSpec:
+    layers: tuple[PrunableLayer, ...]
+
+
+# ---------------------------------------------------------------------------
+# Step 1 — expected pruning rate from curvature spectrum (IMC criterion)
+# ---------------------------------------------------------------------------
+
+def fisher_spectrum(
+    per_sample_grad_fn: Callable[[Any, Any], Any],
+    params: Any,
+    probe_batch: Any,
+) -> jnp.ndarray:
+    """Empirical-Fisher eigenvalues via the Gram trick.
+
+    ``per_sample_grad_fn(params, batch) -> pytree with leading axis n`` must
+    return per-sample gradients (e.g. ``jax.vmap(jax.grad(loss_one))``).
+    Returns eigenvalues sorted ASCENDING (paper convention).
+    """
+    g = per_sample_grad_fn(params, probe_batch)
+    flat = jnp.concatenate(
+        [x.reshape(x.shape[0], -1).astype(jnp.float32) for x in jax.tree.leaves(g)], axis=1
+    )
+    n = flat.shape[0]
+    gram = flat @ flat.T / n                      # [n, n], same nonzero spectrum
+    eigs = jnp.linalg.eigvalsh(gram)              # ascending
+    return jnp.clip(eigs, 0.0, None)
+
+
+def lipschitz_estimate(
+    grad_fn: Callable[[Any, Any], Any],
+    params_a: Any,
+    params_b: Any,
+    batch: Any,
+) -> jnp.ndarray:
+    """L_k ~= ||grad(a) - grad(b)|| / ||a - b||  — finite-difference estimate
+    of the Lipschitz constant of the base function B_k (Section 3.4)."""
+    ga, gb = grad_fn(params_a, batch), grad_fn(params_b, batch)
+    num = jnp.sqrt(sum(jnp.sum(jnp.square(x - y)) for x, y in
+                       zip(jax.tree.leaves(ga), jax.tree.leaves(gb))))
+    den = jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32) - y.astype(jnp.float32)))
+                       for x, y in zip(jax.tree.leaves(params_a), jax.tree.leaves(params_b))))
+    return num / jnp.clip(den, 1e-12, None)
+
+
+def expected_rate_from_spectrum(eigs: jnp.ndarray, lipschitz: jnp.ndarray,
+                                max_rate: float = 0.9) -> jnp.ndarray:
+    """p*_k = m_k / d_k where m_k is the FIRST index (ascending order) with
+    eig[m_k+1] - eig[m_k] > 4 L — the paper's Section 3.4 criterion: the
+    modes below the first spectral gap form the prunable complement of the
+    inertial manifold [62].
+
+    If no gap clears the bar, p*_k = 0 (prune nothing — safe default).
+    """
+    d = eigs.shape[0]
+    gaps = eigs[1:] - eigs[:-1]                      # [d-1]
+    ok = gaps > 4.0 * lipschitz
+    idx = jnp.arange(1, d)
+    m = jnp.min(jnp.where(ok, idx, d))
+    m = jnp.where(m >= d, 0, m)                      # no qualifying gap
+    return jnp.clip(m.astype(jnp.float32) / d, 0.0, max_rate)
+
+
+# ---------------------------------------------------------------------------
+# Step 2 — Formula 15 aggregation
+# ---------------------------------------------------------------------------
+
+def aggregate_rates(
+    rates: jnp.ndarray,       # [K+1] p*_k, index 0 = server
+    sizes: jnp.ndarray,       # [K+1] n_k
+    niid: jnp.ndarray,        # [K+1] D(P_k)
+    eps: float = 1e-8,
+) -> jnp.ndarray:
+    w = jnp.asarray(sizes, jnp.float32) / (jnp.asarray(niid, jnp.float32) + eps)
+    w = w / jnp.sum(w)
+    return jnp.sum(w * jnp.asarray(rates, jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Step 3 — global magnitude threshold -> per-layer rates
+# ---------------------------------------------------------------------------
+
+def global_threshold(params: Any, spec: PruneSpec, p_star: jnp.ndarray) -> jnp.ndarray:
+    """V = |v_(floor(R * p*))| over all prunable weights (Alg. 3 lines 6-7)."""
+    vals = jnp.concatenate(
+        [jnp.abs(get_path(params, l.weight).astype(jnp.float32)).reshape(-1)
+         for l in spec.layers]
+    )
+    r = vals.shape[0]
+    k = jnp.clip((jnp.asarray(p_star, jnp.float32) * r).astype(jnp.int32), 0, r - 1)
+    return jnp.sort(vals)[k]
+
+
+def per_layer_rates(params: Any, spec: PruneSpec, threshold: jnp.ndarray) -> dict[str, jnp.ndarray]:
+    """p*_l = (#weights with |w| < V) / q_l per layer (Alg. 3 lines 9-11)."""
+    out = {}
+    for l in spec.layers:
+        w = jnp.abs(get_path(params, l.weight).astype(jnp.float32))
+        out[l.name] = jnp.mean((w < threshold).astype(jnp.float32))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Step 4 — HRank filter selection
+# ---------------------------------------------------------------------------
+
+def feature_map_ranks(fmap: jnp.ndarray) -> jnp.ndarray:
+    """HRank score per filter.
+
+    fmap: [B, ..., d_l] activations with filters LAST.
+      * conv maps  [B, H, W, d]: per-sample matrix rank of each [H, W] map,
+        averaged over the batch (the HRank criterion).
+      * 1-D features [B, d] (FFN neurons): rank degenerates; we use the
+        batch singular-value mass |a| per neuron (activation energy), the
+        shape-generalized analogue (see DESIGN.md Section 3).
+    Returns [d_l] float scores — HIGHER = keep.
+    """
+    fmap = fmap.astype(jnp.float32)
+    if fmap.ndim >= 4:
+        b = fmap.shape[0]
+        d = fmap.shape[-1]
+        maps = jnp.moveaxis(fmap, -1, 1).reshape(b, d, fmap.shape[1], -1)  # [B,d,H,W*]
+        s = jnp.linalg.svd(maps, compute_uv=False)                          # [B,d,min]
+        tol = jnp.max(s, axis=-1, keepdims=True) * max(maps.shape[-2:]) * 1e-6
+        ranks = jnp.sum(s > tol, axis=-1).astype(jnp.float32)               # [B,d]
+        return jnp.mean(ranks, axis=0)
+    # [B, d] (or flatten middle dims): activation energy per neuron.
+    flat = fmap.reshape(fmap.shape[0], -1, fmap.shape[-1])
+    return jnp.mean(jnp.abs(flat), axis=(0, 1))
+
+
+def select_filters(
+    scores: jnp.ndarray,
+    rate: jnp.ndarray | float,
+    *,
+    align: int | None = None,
+    min_keep: int = 1,
+) -> np.ndarray:
+    """Keep the d_l - floor(rate * d_l) filters with the HIGHEST rank
+    (Alg. 3 lines 13-14).  ``align`` rounds the kept count UP to a multiple
+    (TPU lane alignment), so the realized rate p_l <= p*_l.
+
+    Returns a sorted numpy index array (static — drives re-materialization).
+    """
+    scores = np.asarray(scores)
+    d = scores.shape[0]
+    keep = d - int(np.floor(float(rate) * d))
+    keep = max(keep, min_keep)
+    if align is not None and d >= align:
+        keep = min(d, int(np.ceil(keep / align) * align))
+    order = np.argsort(scores)[::-1]  # descending: highest rank first
+    return np.sort(order[:keep])
+
+
+# ---------------------------------------------------------------------------
+# Structural shrink + masked (jit-static) variants
+# ---------------------------------------------------------------------------
+
+def shrink_params(params: Any, spec: PruneSpec, kept: Mapping[str, np.ndarray]) -> Any:
+    """Re-materialize a genuinely smaller model: slice each pruned layer's
+    filter axis and every coupled tensor (Alg. 3 line 15)."""
+    for l in spec.layers:
+        if l.name not in kept:
+            continue
+        idx = jnp.asarray(kept[l.name])
+        w = get_path(params, l.weight)
+        params = set_path(params, l.weight, jnp.take(w, idx, axis=l.filter_axis))
+        for c in l.coupled:
+            t = get_path(params, c.path)
+            params = set_path(params, c.path, jnp.take(t, idx, axis=c.axis))
+    return params
+
+
+def filter_masks(params: Any, spec: PruneSpec, kept: Mapping[str, np.ndarray]) -> dict[str, jnp.ndarray]:
+    """Binary keep-mask per layer ([d_l] of 0/1) for the static-shape masked
+    execution mode (used inside long-lived jitted training programs where we
+    cannot change shapes; the Pallas ``pruned_matmul`` kernel consumes the
+    compacted index form instead)."""
+    masks = {}
+    for l in spec.layers:
+        d = get_path(params, l.weight).shape[l.filter_axis]
+        m = np.zeros((d,), np.float32)
+        m[np.asarray(kept.get(l.name, np.arange(d)))] = 1.0
+        masks[l.name] = jnp.asarray(m)
+    return masks
+
+
+def model_flops_fraction(params_before: Any, params_after: Any) -> float:
+    """Crude FLOP-reduction proxy: ratio of parameter counts (matmul FLOPs
+    scale linearly in each pruned dimension)."""
+    a = sum(int(x.size) for x in jax.tree.leaves(params_after))
+    b = sum(int(x.size) for x in jax.tree.leaves(params_before))
+    return a / b
+
+
+# ---------------------------------------------------------------------------
+# End-to-end FedAP driver
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class FedAPConfig:
+    prune_round: int = 30          # paper: pruning happens once, at round 30
+    eps: float = 1e-8              # Formula 15
+    align: int | None = None       # 128 on TPU; None on CPU repro
+    max_rate: float = 0.9
+    probe_size: int = 32
+
+
+def fedap_rates(
+    *,
+    spectra: Sequence[jnp.ndarray],
+    lipschitzes: Sequence[jnp.ndarray],
+    sizes: jnp.ndarray,
+    niid: jnp.ndarray,
+    params: Any,
+    spec: PruneSpec,
+    cfg: FedAPConfig,
+) -> tuple[jnp.ndarray, dict[str, jnp.ndarray]]:
+    """Steps 1-3: per-participant rates -> Formula 15 -> per-layer rates."""
+    rates = jnp.stack([
+        expected_rate_from_spectrum(e, l, cfg.max_rate)
+        for e, l in zip(spectra, lipschitzes)
+    ])
+    p_star = aggregate_rates(rates, sizes, niid, cfg.eps)
+    thr = global_threshold(params, spec, p_star)
+    return p_star, per_layer_rates(params, spec, thr)
+
+
+def fedap_prune(
+    params: Any,
+    spec: PruneSpec,
+    layer_rates: Mapping[str, jnp.ndarray],
+    feature_maps: Mapping[str, jnp.ndarray],
+    cfg: FedAPConfig,
+) -> tuple[Any, dict[str, np.ndarray]]:
+    """Step 4 + shrink.  Returns (pruned params, kept-index map)."""
+    kept = {}
+    for l in spec.layers:
+        fkey = l.feature_key or l.name
+        if fkey not in feature_maps:
+            continue
+        scores = feature_map_ranks(feature_maps[fkey])
+        kept[l.name] = select_filters(scores, layer_rates[l.name], align=cfg.align)
+    return shrink_params(params, spec, kept), kept

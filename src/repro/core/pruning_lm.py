@@ -1,0 +1,133 @@
+"""FedAP for the transformer zoo — structured pruning of scanned stacks.
+
+The paper prunes conv filters with HRank feature-map ranks.  For the
+assigned LLM architectures the "filter-like" axes are:
+
+  * FFN hidden units (rows of W_up / W_gate, cols of W_down) — dense archs;
+  * whole experts — MoE archs (router mass = the rank analogue);
+  * mLSTM projection channels — xlstm.
+
+Two adaptations make this work on TPU with scan-over-layers stacks:
+
+  1. UNIFORM KEPT COUNT across the stack: layer params are stacked
+     [L, ...], so every layer must keep the same NUMBER of units (indices
+     may differ per layer — a vectorized take_along_axis gather).  The
+     count comes from the FedAP per-layer rates via the max-preserved rule
+     (p_l <= p*_l, Alg. 3 line 14), then rounds UP to the 128-lane
+     boundary (align).
+
+  2. WEIGHT-NORM x WEIGHT-NORM scores (||wi_col|| * ||wo_row||) stand in
+     for feature-map ranks inside the scan: activations of interior layers
+     are not observable without unrolling, and the product-norm is the
+     standard magnitude surrogate with the same keep-the-energetic-units
+     semantics.  (On the CNN repro path the true HRank criterion is used —
+     see repro.core.pruning.)
+
+Pruning re-materializes a smaller model + config; the framework re-jits
+once (the paper prunes once, at round 30).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+
+def _aligned_keep(d: int, rate: float, align: int | None) -> int:
+    keep = d - int(np.floor(float(rate) * d))
+    keep = max(keep, 1)
+    if align and d >= align:
+        keep = min(d, int(np.ceil(keep / align) * align))
+    return keep
+
+
+def ffn_unit_scores(layers: Any, act: str) -> jnp.ndarray:
+    """[L, d_ff] product-norm scores for stacked dense FFN layers."""
+    mlp = layers["mlp"]
+    s_in = jnp.linalg.norm(mlp["wi"].astype(jnp.float32), axis=1)      # [L, ff]
+    if "wg" in mlp:
+        s_in = s_in * jnp.linalg.norm(mlp["wg"].astype(jnp.float32), axis=1)
+    s_out = jnp.linalg.norm(mlp["wo"].astype(jnp.float32), axis=2)     # [L, ff]
+    return s_in * s_out
+
+
+def expert_scores(layers: Any) -> jnp.ndarray:
+    """[L, E] scores for stacked MoE layers: router column norm (expected
+    routing mass under random inputs) x expert weight norms."""
+    moe = layers["moe"]
+    r = jnp.linalg.norm(moe["router"].astype(jnp.float32), axis=1)     # [L, E]
+    wi = jnp.linalg.norm(moe["wi"].astype(jnp.float32), axis=(2, 3))   # [L, E]
+    wo = jnp.linalg.norm(moe["wo"].astype(jnp.float32), axis=(2, 3))
+    return r * wi * wo
+
+
+def prune_lm_ffn(params: Any, cfg: ModelConfig, rate: float,
+                 *, align: int | None = 128) -> tuple[Any, ModelConfig, dict]:
+    """Structurally shrink the FFN hidden dim of a scanned dense/vlm/hybrid
+    stack.  Returns (new params, new config, info)."""
+    if cfg.family not in ("dense", "vlm", "hybrid"):
+        raise ValueError(f"prune_lm_ffn does not apply to family {cfg.family}")
+    layers = params["layers"]
+    scores = ffn_unit_scores(layers, cfg.act)                          # [L, ff]
+    d_ff = scores.shape[1]
+    keep = _aligned_keep(d_ff, rate, align)
+    idx = jnp.argsort(scores, axis=1)[:, ::-1][:, :keep]               # [L, keep]
+    idx = jnp.sort(idx, axis=1)
+
+    mlp = dict(layers["mlp"])
+    mlp["wi"] = jnp.take_along_axis(layers["mlp"]["wi"], idx[:, None, :], axis=2)
+    if "wg" in mlp:
+        mlp["wg"] = jnp.take_along_axis(layers["mlp"]["wg"], idx[:, None, :], axis=2)
+    mlp["wo"] = jnp.take_along_axis(layers["mlp"]["wo"], idx[:, :, None], axis=1)
+    new_layers = dict(layers)
+    new_layers["mlp"] = mlp
+    new_params = dict(params)
+    new_params["layers"] = new_layers
+    new_cfg = dataclasses.replace(cfg, d_ff=keep)
+    return new_params, new_cfg, {"kept": keep, "of": d_ff,
+                                 "realized_rate": 1.0 - keep / d_ff}
+
+
+def prune_lm_experts(params: Any, cfg: ModelConfig, rate: float,
+                     *, align: int | None = None,
+                     min_keep: int | None = None) -> tuple[Any, ModelConfig, dict]:
+    """Remove whole experts from a scanned MoE stack (expert-parallel-aware:
+    keep counts stay divisible by the TP axis when align is set)."""
+    if not cfg.moe:
+        raise ValueError("not a MoE config")
+    layers = params["layers"]
+    scores = expert_scores(layers)                                     # [L, E]
+    e = scores.shape[1]
+    keep = _aligned_keep(e, rate, align)
+    if min_keep:
+        keep = max(keep, min_keep)
+    keep = min(max(keep, cfg.moe.top_k), e)
+    idx = jnp.sort(jnp.argsort(scores, axis=1)[:, ::-1][:, :keep], axis=1)
+
+    moe = dict(layers["moe"])
+    moe["router"] = jnp.take_along_axis(layers["moe"]["router"], idx[:, None, :], axis=2)
+    for name, ax in [("wi", 1), ("wg", 1), ("wo", 1)]:
+        shaped = idx.reshape(idx.shape[0], keep, 1, 1)
+        moe[name] = jnp.take_along_axis(layers["moe"][name], shaped, axis=ax)
+    new_layers = dict(layers)
+    new_layers["moe"] = moe
+    new_params = dict(params)
+    new_params["layers"] = new_layers
+    new_cfg = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, num_experts=keep))
+    return new_params, new_cfg, {"kept": keep, "of": e,
+                                 "realized_rate": 1.0 - keep / e}
+
+
+def fedap_lm(params: Any, cfg: ModelConfig, p_star: float,
+             *, align: int | None = 128) -> tuple[Any, ModelConfig, dict]:
+    """FedAP entry point for the LLM zoo: dispatch per family."""
+    if cfg.moe:
+        return prune_lm_experts(params, cfg, p_star, align=None,
+                                min_keep=max(8, cfg.moe.top_k * 4))
+    return prune_lm_ffn(params, cfg, p_star, align=align)

@@ -1,0 +1,236 @@
+"""Federated round driver — the paper's 6-step training loop (Section 3.1).
+
+One round:
+  (1) select a random device subset D^t, broadcast w^{t-1};
+  (2) each device runs E local epochs (SGD, or restart-SGDM for FedDUM);
+  (3) devices upload models;
+  (4) server aggregates with FedAvg weights n_k/n';
+  (5) server update on shared data with dynamic tau_eff (FedDU), optionally
+      through the server-momentum pseudo-gradient path (FedDUM);
+  (6) at the predefined round, FedAP prunes the model structurally.
+
+This driver is the *simulation* engine (the paper's 100-device setting,
+vectorized with vmap over the selected clients — all clients share n_k in
+the paper's label-shard protocol, so local step counts are equal and vmap
+is exact).  The pod-scale distributed execution lives in repro/launch.
+
+Momentum modes (covers the paper's baselines):
+  local_momentum = "none"         plain local SGD (FedAvg, FedDU)
+                 = "restart"      FedDUM's zero-restart SGDM — no comm cost
+                 = "communicated" FedDA-style: global momentum broadcast to
+                                  devices and aggregated back (2x comm)
+  server_momentum = True          SGDM on the server pseudo-gradient
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import niid
+from repro.core.momentum import (
+    FedDUMConfig,
+    init_server_momentum,
+    server_momentum_step,
+    server_pseudo_gradient,
+)
+from repro.core.server_update import (
+    FedDUConfig,
+    feddu_apply,
+    normalized_server_gradient_scan,
+    tau_eff,
+)
+from repro.core.pruning import FedAPConfig
+from repro.utils import tree_weighted_mean
+
+
+@dataclasses.dataclass(frozen=True)
+class FLConfig:
+    num_clients: int = 100
+    clients_per_round: int = 10
+    local_epochs: int = 5          # E
+    batch_size: int = 10           # B
+    lr: float = 0.1                # eta (local and server SGD)
+    lr_decay: float = 0.99         # per-round learning-rate decay (paper 4.1)
+    seed: int = 0
+    # Feature switches — FedDUMAP = server update + restart momentum (+FedAP).
+    use_server_update: bool = True       # FedDU
+    local_momentum: str = "none"         # none | restart | communicated
+    server_momentum: bool = False
+    # Server data usage per round: tau = server_epochs * floor(n0 / B_server).
+    server_epochs: int = 1
+    server_batch_size: int = 32
+    feddu: FedDUConfig = dataclasses.field(default_factory=FedDUConfig)
+    feddum: FedDUMConfig = dataclasses.field(default_factory=FedDUMConfig)
+    fedap: FedAPConfig = dataclasses.field(default_factory=FedAPConfig)
+
+
+def feddumap_config(**kw) -> FLConfig:
+    """The full method: FedDU + FedDUM (FedAP is wired via callback)."""
+    kw.setdefault("use_server_update", True)
+    kw.setdefault("local_momentum", "restart")
+    kw.setdefault("server_momentum", True)
+    return FLConfig(**kw)
+
+
+class FederatedTrainer:
+    """Simulation-grade FL trainer.
+
+    model: an object exposing
+        init(rng) -> params
+        loss_and_acc(params, x, y) -> (scalar loss, scalar acc)
+    data: repro.data.pipeline.FederatedData
+    """
+
+    def __init__(self, model, data, cfg: FLConfig):
+        self.model, self.data, self.cfg = model, data, cfg
+        self.rng = np.random.default_rng(cfg.seed)
+        self._build()
+
+    # -- static, jit-compiled round step (rebuilt after pruning) ------------
+    def _build(self):
+        cfg, model = self.cfg, self.model
+
+        def loss_fn(params, x, y):
+            return model.loss_and_acc(params, x, y)[0]
+
+        grad_fn = jax.grad(loss_fn)
+
+        def local_train(params, m0, xs, ys, lr):
+            """E local epochs on one client.  xs: [steps, B, ...]."""
+            use_m = cfg.local_momentum != "none"
+            beta = cfg.feddum.beta_local
+
+            def body(carry, batch):
+                p, m = carry
+                g = grad_fn(p, batch[0], batch[1])
+                if use_m:
+                    m = jax.tree.map(
+                        lambda mi, gi: beta * mi + (1 - beta) * gi.astype(jnp.float32), m, g)
+                    upd = m
+                else:
+                    upd = g
+                p = jax.tree.map(lambda pi, u: (pi - lr * u).astype(pi.dtype), p, upd)
+                return (p, m), None
+
+            (params, m), _ = jax.lax.scan(body, (params, m0), (xs, ys))
+            return params, m
+
+        def round_step(params, server_m, global_m, client_xs, client_ys, sizes,
+                       server_xs, server_ys, d_round, d_server, n0, round_idx, lr):
+            """One full round. client_xs: [K, steps, B, ...]."""
+            w_prev = params
+            if cfg.local_momentum == "communicated":
+                m0 = global_m                         # FedDA: broadcast momentum
+            else:
+                m0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+            locals_, local_ms = jax.vmap(
+                local_train, in_axes=(None, None, 0, 0, None))(params, m0, client_xs,
+                                                               client_ys, lr)
+            per_client = [jax.tree.map(lambda l, i=i: l[i], locals_)
+                          for i in range(cfg.clients_per_round)]
+            w_half = tree_weighted_mean(per_client, sizes)
+            if cfg.local_momentum == "communicated":  # FedDA aggregates momentum too
+                global_m = tree_weighted_mean(
+                    [jax.tree.map(lambda l, i=i: l[i], local_ms)
+                     for i in range(cfg.clients_per_round)], sizes)
+
+            if cfg.use_server_update:
+                # acc of the aggregated model on the server data (Formula 7).
+                acc = model.loss_and_acc(
+                    w_half, server_xs.reshape((-1,) + server_xs.shape[2:]),
+                    server_ys.reshape(-1))[1]
+                tau = server_xs.shape[0]
+                t_eff = tau_eff(cfg.feddu, acc=acc, round_idx=round_idx, n0=n0,
+                                n_prime=jnp.sum(sizes), d_round=d_round,
+                                d_server=d_server, tau=tau)
+                g0 = normalized_server_gradient_scan(
+                    w_half, (server_xs, server_ys),
+                    lambda p, b: grad_fn(p, b[0], b[1]), lr)
+                proposed = feddu_apply(w_half, g0, t_eff, lr)
+            else:
+                proposed = w_half
+                t_eff = jnp.zeros(())
+
+            if cfg.server_momentum:
+                pseudo = server_pseudo_gradient(w_prev, proposed)
+                new_params, server_m = server_momentum_step(w_prev, server_m, pseudo,
+                                                            cfg.feddum)
+            else:
+                new_params = proposed
+            return new_params, server_m, global_m, t_eff
+
+        self._round = jax.jit(round_step)
+        self._eval = jax.jit(model.loss_and_acc)
+
+    # -- data plumbing -------------------------------------------------------
+    def _client_batches(self, k: int):
+        cfg, d = self.cfg, self.data
+        n_k = int(d.sizes[k])
+        steps = max(1, n_k // cfg.batch_size) * cfg.local_epochs
+        idx = np.concatenate([
+            self.rng.permutation(n_k) for _ in range(cfg.local_epochs + 1)
+        ])[: steps * cfg.batch_size]
+        xs = d.client_x[k][idx].reshape(steps, cfg.batch_size, *d.client_x.shape[2:])
+        ys = d.client_y[k][idx].reshape(steps, cfg.batch_size)
+        return xs, ys
+
+    def _server_batches(self):
+        cfg, d = self.cfg, self.data
+        n0 = d.server_x.shape[0]
+        tau = max(1, n0 // cfg.server_batch_size) * cfg.server_epochs
+        idx = np.concatenate([
+            self.rng.permutation(n0) for _ in range(cfg.server_epochs + 1)
+        ])[: tau * cfg.server_batch_size]
+        xs = d.server_x[idx].reshape(tau, cfg.server_batch_size, *d.server_x.shape[1:])
+        ys = d.server_y[idx].reshape(tau, cfg.server_batch_size)
+        return xs, ys
+
+    # -- public API ----------------------------------------------------------
+    def run(self, num_rounds: int, *, eval_every: int = 1,
+            on_round_end: Callable | None = None, params=None):
+        cfg, d = self.cfg, self.data
+        params = self.model.init(jax.random.key(cfg.seed)) if params is None else params
+        server_m = init_server_momentum(params)
+        global_m = init_server_momentum(params)
+        p_bar = niid.global_distribution(d.client_dists, d.sizes)
+        d_server = niid.non_iid_degree(d.server_dist, p_bar)
+        n0 = float(d.server_x.shape[0])
+        history = {"round": [], "acc": [], "loss": [], "tau_eff": [], "time": []}
+        t0 = time.time()
+
+        for t in range(num_rounds):
+            sel = self.rng.choice(cfg.num_clients, cfg.clients_per_round, replace=False)
+            xs, ys = zip(*[self._client_batches(k) for k in sel])
+            client_xs, client_ys = np.stack(xs), np.stack(ys)
+            sxs, sys_ = self._server_batches()
+            p_round = niid.round_distribution(d.client_dists, d.sizes, jnp.asarray(sel))
+            d_round = niid.non_iid_degree(p_round, p_bar)
+            lr = cfg.lr * (cfg.lr_decay ** t)
+            params, server_m, global_m, t_eff = self._round(
+                params, server_m, global_m, jnp.asarray(client_xs),
+                jnp.asarray(client_ys), jnp.asarray(d.sizes[sel], jnp.float32),
+                jnp.asarray(sxs), jnp.asarray(sys_),
+                d_round, d_server, n0, jnp.asarray(t, jnp.float32), lr)
+
+            if (t + 1) % eval_every == 0 or t == num_rounds - 1:
+                loss, acc = self._eval(params, d.test_x, d.test_y)
+                history["round"].append(t)
+                history["acc"].append(float(acc))
+                history["loss"].append(float(loss))
+                history["tau_eff"].append(float(t_eff))
+                history["time"].append(time.time() - t0)
+
+            if on_round_end is not None:
+                maybe = on_round_end(self, t, params)
+                if maybe is not None:          # e.g. FedAP re-materialized the model
+                    params = maybe
+                    server_m = init_server_momentum(params)
+                    global_m = init_server_momentum(params)
+                    self._build()              # re-jit for the new shapes
+        return params, history

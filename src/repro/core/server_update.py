@@ -1,0 +1,150 @@
+"""FedDU — dynamic server update on shared insensitive server data.
+
+Implements paper Formulas 4-7:
+
+    w^t        = w^{t-1/2} - tau_eff^{t-1} * eta * g0_bar(w^{t-1/2})        (4)
+    g0_bar     = (1/tau) * sum_{i=1..tau} g0(w^{t-1/2, i})                  (6)
+    tau_eff^t  = f'(acc) * n0*D(Pbar') / (n0*D(Pbar') + n'*D(P0))
+                 * C * decay^t * tau                                        (7)
+
+The gradients are *normalized* by tau (FedNova-style, [71]) so that a large
+server dataset cannot drag the objective toward the server distribution
+(objective inconsistency).  tau_eff decays geometrically, so FedDU provably
+degrades to FedAvg — convergence is inherited (Section 3.2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Iterable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import tree_scale, tree_sub, tree_add, tree_zeros_like
+
+
+def f_prime(acc: jnp.ndarray, kind: str = "1-acc", eps: float = 1e-8) -> jnp.ndarray:
+    """f'(acc) — accuracy gate for the server update.  The paper evaluates
+    ``1 - acc`` and ``1/(acc+eps)`` (Table 3) and selects ``1 - acc``."""
+    acc = jnp.asarray(acc, jnp.float32)
+    if kind == "1-acc":
+        return 1.0 - acc
+    if kind == "inv":
+        return 1.0 / (acc + eps)
+    raise ValueError(f"unknown f'(acc) kind: {kind}")
+
+
+@dataclasses.dataclass(frozen=True)
+class FedDUConfig:
+    """Hyper-parameters of the dynamic server update (Formula 7)."""
+
+    C: float = 1.0            # paper Table 4: C = 1 is best
+    decay: float = 0.99       # geometric decay ensures convergence to FedAvg
+    f_prime_kind: str = "1-acc"  # paper Table 3: '1-acc' beats '1/(acc+eps)'
+    eps: float = 1e-8
+    # Static override for the ablation FedDU-S (Table 2). None = dynamic.
+    static_tau_eff: float | None = None
+
+
+def tau_eff(
+    cfg: FedDUConfig,
+    *,
+    acc: jnp.ndarray,
+    round_idx: jnp.ndarray,
+    n0: jnp.ndarray,
+    n_prime: jnp.ndarray,
+    d_round: jnp.ndarray,
+    d_server: jnp.ndarray,
+    tau: jnp.ndarray,
+) -> jnp.ndarray:
+    """Formula 7.  All arguments may be traced scalars.
+
+    n0:       number of samples on the server.
+    n_prime:  total samples on the selected devices this round.
+    d_round:  D(Pbar'^t)  non-IID degree of this round's selected devices.
+    d_server: D(P0)       non-IID degree of the server data.
+    tau:      ceil(n0 * E / B) server iterations per round.
+    """
+    if cfg.static_tau_eff is not None:
+        return jnp.asarray(cfg.static_tau_eff, jnp.float32)
+    n0 = jnp.asarray(n0, jnp.float32)
+    n_prime = jnp.asarray(n_prime, jnp.float32)
+    num = n0 * d_round
+    den = num + n_prime * d_server + cfg.eps
+    gate = f_prime(acc, cfg.f_prime_kind, cfg.eps)
+    t = jnp.asarray(round_idx, jnp.float32)
+    return gate * (num / den) * cfg.C * (cfg.decay ** t) * jnp.asarray(tau, jnp.float32)
+
+
+def normalized_server_gradient(
+    params: Any,
+    server_batches: Sequence[Any],
+    grad_fn: Callable[[Any, Any], Any],
+    eta: float,
+) -> Any:
+    """g0_bar (Formula 6): run tau = len(server_batches) SGD iterations from
+    ``params`` on the server data and return the *average* per-step gradient.
+
+    Equivalently (and how we compute it): (w_start - w_end) / (tau * eta).
+    This telescoping identity is exact for plain SGD and avoids storing
+    per-step gradients.
+    """
+    tau = len(server_batches)
+    if tau == 0:
+        return tree_zeros_like(params)
+
+    w = params
+    for batch in server_batches:
+        g = grad_fn(w, batch)
+        w = jax.tree.map(lambda p, gi: (p - eta * gi).astype(p.dtype), w, g)
+    # (w_start - w_end) / (tau*eta) == mean of gradients along the path.
+    return jax.tree.map(
+        lambda a, b: ((a.astype(jnp.float32) - b.astype(jnp.float32)) / (tau * eta)),
+        params,
+        w,
+    )
+
+
+def normalized_server_gradient_scan(
+    params: Any,
+    server_batch_stack: Any,
+    grad_fn: Callable[[Any, Any], Any],
+    eta: float,
+) -> Any:
+    """Same as :func:`normalized_server_gradient` but with a ``lax.scan`` over
+    a stacked batch pytree (leading axis = tau).  Used inside jitted
+    distributed train steps so tau does not unroll the HLO."""
+    tau = jax.tree.leaves(server_batch_stack)[0].shape[0]
+
+    def body(w, batch):
+        g = grad_fn(w, batch)
+        w = jax.tree.map(lambda p, gi: (p - eta * gi).astype(p.dtype), w, g)
+        return w, None
+
+    w_end, _ = jax.lax.scan(body, params, server_batch_stack)
+    return jax.tree.map(
+        lambda a, b: (a.astype(jnp.float32) - b.astype(jnp.float32)) / (tau * eta),
+        params,
+        w_end,
+    )
+
+
+def feddu_apply(
+    w_half: Any,
+    g0_bar: Any,
+    t_eff: jnp.ndarray,
+    eta: float,
+) -> Any:
+    """Formula 4: w^t = w^{t-1/2} - tau_eff * eta * g0_bar."""
+    scale = jnp.asarray(t_eff, jnp.float32) * eta
+    return jax.tree.map(
+        lambda p, g: (p.astype(jnp.float32) - scale * g).astype(p.dtype), w_half, g0_bar
+    )
+
+
+def server_update_term(g0_bar: Any, t_eff: jnp.ndarray, eta: float) -> Any:
+    """tau_eff * eta * g0_bar — the additive server correction, exposed
+    separately because FedDUM folds it into the server pseudo-gradient
+    (Formula 12) instead of applying it directly."""
+    scale = jnp.asarray(t_eff, jnp.float32) * eta
+    return jax.tree.map(lambda g: scale * g, g0_bar)

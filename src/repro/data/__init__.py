@@ -1,0 +1,12 @@
+from repro.data.pipeline import FederatedData, build_federated_data
+from repro.data.partition import label_shard_partition, dirichlet_partition
+from repro.data.synthetic import synthetic_classification, synthetic_tokens
+
+__all__ = [
+    "FederatedData",
+    "build_federated_data",
+    "label_shard_partition",
+    "dirichlet_partition",
+    "synthetic_classification",
+    "synthetic_tokens",
+]

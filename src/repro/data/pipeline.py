@@ -1,0 +1,84 @@
+"""Federated dataset container + builder (paper Section 4.1 protocol).
+
+CIFAR-10 protocol transplanted to the synthetic dataset:
+  * 40000 training images are device data, label-shard partitioned over
+    100 clients (2 shards each);
+  * the server draws p * 40000 images from the REMAINING 10000 training
+    images (p in {1%, 5%, 10%}), with a controllable non-IID degree;
+  * the held-out test split scores the global model.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.data import partition as part
+from repro.data.synthetic import SyntheticSpec, synthetic_classification
+
+
+@dataclasses.dataclass
+class FederatedData:
+    client_x: np.ndarray      # [N, n_k, ...]  (equal n_k: label-shard protocol)
+    client_y: np.ndarray      # [N, n_k]
+    sizes: np.ndarray         # [N] float n_k
+    client_dists: np.ndarray  # [N, num_classes] P_k
+    server_x: np.ndarray      # [n0, ...]
+    server_y: np.ndarray      # [n0]
+    server_dist: np.ndarray   # [num_classes] P_0
+    test_x: np.ndarray
+    test_y: np.ndarray
+
+
+def _dists(ys: np.ndarray, num_classes: int) -> np.ndarray:
+    d = np.stack([np.bincount(y, minlength=num_classes) for y in ys]).astype(np.float32)
+    return d / np.clip(d.sum(1, keepdims=True), 1, None)
+
+
+def build_federated_data(
+    *,
+    num_clients: int = 100,
+    server_fraction: float = 0.05,     # p
+    server_niid: str = "iid",          # 'iid' | 'mild' | 'severe' (Fig. 6)
+    device_pool: int = 40000,
+    spec: SyntheticSpec | None = None,
+    partition: str = "label_shard",    # or 'dirichlet'
+    dirichlet_alpha: float = 0.5,
+    seed: int = 0,
+) -> FederatedData:
+    spec = spec or SyntheticSpec()
+    train_x, train_y, test_x, test_y = synthetic_classification(spec)
+    device_pool = min(device_pool, len(train_x) - 1000)
+    dev_x, dev_y = train_x[:device_pool], train_y[:device_pool]
+    rest = np.arange(device_pool, len(train_x))
+
+    if partition == "label_shard":
+        idxs = part.label_shard_partition(dev_y, num_clients, seed=seed)
+    elif partition == "dirichlet":
+        idxs = part.dirichlet_partition(dev_y, num_clients, alpha=dirichlet_alpha, seed=seed)
+        m = min(len(ix) for ix in idxs)          # equalize for the vmapped engine
+        idxs = [ix[:m] for ix in idxs]
+    else:
+        raise ValueError(partition)
+
+    client_x = np.stack([dev_x[ix] for ix in idxs])
+    client_y = np.stack([dev_y[ix] for ix in idxs])
+
+    n0 = max(1, int(server_fraction * device_pool))
+    n0 = min(n0, len(rest))
+    server_idx = part.server_subset(train_y, rest, n0, niid_target=server_niid, seed=seed + 7)
+    server_y = train_y[server_idx]
+    server_dist = np.bincount(server_y, minlength=spec.num_classes).astype(np.float32)
+    server_dist /= server_dist.sum()
+
+    return FederatedData(
+        client_x=client_x,
+        client_y=client_y,
+        sizes=np.full(num_clients, client_x.shape[1], np.float32),
+        client_dists=_dists(client_y, spec.num_classes),
+        server_x=train_x[server_idx],
+        server_y=server_y,
+        server_dist=server_dist,
+        test_x=test_x,
+        test_y=test_y,
+    )

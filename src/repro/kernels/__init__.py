@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+  flash_attention — blocked online-softmax GQA attention (train/prefill)
+  decode_attention — flash-decode vs. KV cache (decode_32k / long_500k)
+  ssd_scan        — Mamba2 SSD chunked scan (zamba2)
+  masked_matmul   — FedAP structured-pruning block-skip matmul
+
+Each kernel ships with a pure-jnp oracle in ref.py; tests sweep
+shapes/dtypes in interpret mode and assert allclose.
+"""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,110 @@
+"""Flash attention (TPU Pallas): blocked online-softmax GQA attention.
+
+Canonical TPU structure: grid (batch, q_heads, q_blocks, kv_blocks) with the
+kv dimension innermost; running max / sum / accumulator live in VMEM scratch
+and persist across the kv grid dimension.  GQA is handled IN THE INDEX MAP:
+with the [g, kv] head ordering used by the models (head h = g * KV + kv),
+the kv head for query head h is simply ``h % KV`` — no K/V replication.
+
+Causal and sliding-window masks are applied per block pair.  Block shapes
+are MXU-aligned (q/kv blocks multiples of 128 recommended; head_dim is the
+lane dim).  VMEM working set per step:
+  q (bq x hd) + k,v (bk x hd each) + acc (bq x hd f32) + p (bq x bk f32)
+e.g. bq=bk=256, hd=128: ~0.6 MB << 16 MB VMEM.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  sm_scale: float, causal: bool, window, block_q: int,
+                  block_k: int, num_kv_blocks: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)            # [bq, hd]
+    k = k_ref[0, 0].astype(jnp.float32)            # [bk, hd]
+    v = v_ref[0, 0].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * sm_scale  # [bq, bk]
+
+    qpos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+    kpos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    ok = jnp.ones(s.shape, jnp.bool_)
+    if causal:
+        ok &= kpos <= qpos
+    if window is not None:
+        ok &= kpos > qpos - window
+    s = jnp.where(ok, s, NEG_INF)
+
+    m_prev = m_scr[...]                            # [bq, 1]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)
+    l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())))
+    m_scr[...] = m_new
+
+    @pl.when(ki == num_kv_blocks - 1)
+    def _finish():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "block_q", "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window=None,
+                    block_q: int = 256, block_k: int = 256,
+                    interpret: bool = False):
+    """q [B, Sq, H, hd]; k/v [B, Skv, KV, hd] -> [B, Sq, H, hd].
+
+    Requires Sq % block_q == 0 and Skv % block_k == 0 (callers pad).
+    """
+    b, sq, h, hd = q.shape
+    skv, kvh = k.shape[1], k.shape[2]
+    assert h % kvh == 0 and sq % block_q == 0 and skv % block_k == 0
+    sm_scale = 1.0 / math.sqrt(hd)
+    nq, nk = sq // block_q, skv // block_k
+
+    qt = q.transpose(0, 2, 1, 3)                    # [B, H, Sq, hd]
+    kt = k.transpose(0, 2, 1, 3)                    # [B, KV, Skv, hd]
+    vt = v.transpose(0, 2, 1, 3)
+
+    kernel = functools.partial(
+        _flash_kernel, sm_scale=sm_scale, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, num_kv_blocks=nk)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, h, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, hd), lambda b_, h_, q_, k_: (b_, h_, q_, 0)),
+            pl.BlockSpec((1, 1, block_k, hd), lambda b_, h_, q_, k_: (b_, h_ % kvh, k_, 0)),
+            pl.BlockSpec((1, 1, block_k, hd), lambda b_, h_, q_, k_: (b_, h_ % kvh, k_, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, hd), lambda b_, h_, q_, k_: (b_, h_, q_, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out.transpose(0, 2, 1, 3)

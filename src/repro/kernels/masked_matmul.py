@@ -1,0 +1,70 @@
+"""FedAP structured-pruning matmul (TPU Pallas).
+
+``masked_matmul(x, w, block_mask)`` computes ``x @ w`` where ``block_mask``
+([N / block_n] of 0/1) marks column blocks of ``w`` as pruned.  Pruned
+blocks are SKIPPED on the MXU (``pl.when`` guards the dot), so structured
+pruning's FLOP savings are realized with static shapes inside a live jit —
+the mechanism FedAP uses between the pruning round and the re-jit to the
+compacted model (DESIGN.md Section 3).
+
+Block layout: grid (M/bm, N/bn, K/bk), K innermost, f32 accumulator in VMEM
+scratch.  Mask granularity = bn (128-aligned, the MXU lane width), matching
+FedAP's 128-aligned kept-filter counts.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _masked_mm_kernel(x_ref, w_ref, mask_ref, o_ref, acc_scr, *, nk: int):
+    ki = pl.program_id(2)
+    keep = mask_ref[0] > 0
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    @pl.when(keep)
+    def _mac():
+        acc_scr[...] += jax.lax.dot_general(
+            x_ref[...].astype(jnp.float32), w_ref[...].astype(jnp.float32),
+            (((1,), (0,)), ((), ())))
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        o_ref[...] = jnp.where(keep, acc_scr[...], 0.0).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k",
+                                             "interpret"))
+def masked_matmul(x, w, block_mask, *, block_m: int = 128, block_n: int = 128,
+                  block_k: int = 128, interpret: bool = False):
+    """x [M, K] @ w [K, N] with pruned column blocks skipped.
+
+    block_mask: [N // block_n] float/int (1 = keep, 0 = pruned).
+    """
+    m, kdim = x.shape
+    _, n = w.shape
+    assert m % block_m == 0 and n % block_n == 0 and kdim % block_k == 0
+    assert block_mask.shape == (n // block_n,)
+    nk = kdim // block_k
+
+    kernel = functools.partial(_masked_mm_kernel, nk=nk)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // block_m, n // block_n, nk),
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, k: (i, k)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, k: (k, j)),
+            pl.BlockSpec((1,), lambda i, j, k: (j,)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        interpret=interpret,
+    )(x, w, jnp.asarray(block_mask))

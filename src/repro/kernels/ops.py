@@ -1,0 +1,58 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On a real TPU runtime these dispatch to the compiled kernels; in this
+container (CPU) they run in interpret mode when ``REPRO_PALLAS_INTERPRET``
+is set (the tests set it), and the model layers only route here when
+``attn_impl='pallas'`` is requested.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention as _decode
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.masked_matmul import masked_matmul as _masked_mm
+from repro.kernels.ssd_scan import ssd_scan as _ssd
+
+
+def _interpret() -> bool:
+    if os.environ.get("REPRO_PALLAS_INTERPRET"):
+        return True
+    return jax.default_backend() != "tpu"
+
+
+def flash_attention(q, k, v, *, causal=True, window=None,
+                    block_q=256, block_k=256):
+    sq, skv = q.shape[1], k.shape[1]
+    bq = min(block_q, sq)
+    bk = min(block_k, skv)
+    if sq % bq or skv % bk:
+        return ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    return _flash(q, k, v, causal=causal, window=window, block_q=bq,
+                  block_k=bk, interpret=_interpret())
+
+
+def decode_attention(q, k, v, *, block_k=512):
+    s = k.shape[1]
+    bk = min(block_k, s)
+    if s % bk:
+        return ref.decode_attention_ref(q, k, v)
+    return _decode(q, k, v, block_k=bk, interpret=_interpret())
+
+
+def ssd_scan(x, bmat, cmat, dt, a_log, d, dt_bias, *, chunk=128):
+    s = x.shape[1]
+    ch = min(chunk, s)
+    if s % ch:
+        return ref.ssd_scan_ref(x, bmat, cmat, dt, a_log, d, dt_bias)
+    return _ssd(x, bmat, cmat, dt, a_log, d, dt_bias, chunk=ch,
+                interpret=_interpret())
+
+
+def masked_matmul(x, w, block_mask, *, block_n=128):
+    return _masked_mm(x, w, block_mask, block_n=block_n,
+                      interpret=_interpret())

@@ -1,0 +1,72 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=None):
+    """q [B,Sq,H,hd], k/v [B,Skv,KV,hd] — [g, kv] head grouping."""
+    b, sq, h, hd = q.shape
+    skv, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, sq, g, kvh, hd).astype(jnp.float32)
+    scores = jnp.einsum("bqgkd,bskd->bgkqs", qg, k.astype(jnp.float32))
+    scores = scores / math.sqrt(hd)
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(skv)[None, :]
+    ok = jnp.ones((sq, skv), bool)
+    if causal:
+        ok &= kpos <= qpos
+    if window is not None:
+        ok &= kpos > qpos - window
+    scores = jnp.where(ok, scores, -jnp.inf)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bgkqs,bskd->bqgkd", w, v.astype(jnp.float32))
+    return out.reshape(b, sq, h, hd).astype(q.dtype)
+
+
+def decode_attention_ref(q, k, v):
+    """q [B,1,H,hd], cache k/v [B,S,KV,hd]; every slot attended."""
+    b, _, h, hd = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, 1, g, kvh, hd).astype(jnp.float32)
+    scores = jnp.einsum("bqgkd,bskd->bgkqs", qg, k.astype(jnp.float32))
+    scores = scores / math.sqrt(hd)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bgkqs,bskd->bqgkd", w, v.astype(jnp.float32))
+    return out.reshape(b, 1, h, hd).astype(q.dtype)
+
+
+def ssd_scan_ref(x, bmat, cmat, dt, a_log, d, dt_bias):
+    """Naive sequential SSD recurrence (the definition)."""
+    bsz, s, nh, p = x.shape
+    n = bmat.shape[-1]
+    dtv = jax.nn.softplus(dt.astype(jnp.float32) + dt_bias)
+    a = jnp.exp(-dtv * jnp.exp(a_log))
+    xf = x.astype(jnp.float32)
+
+    def body(h, t):
+        xt, bt, ct, at, dtt = t
+        h = h * at[..., None, None] + jnp.einsum("bhp,bn->bhpn", xt * dtt[..., None], bt)
+        y = jnp.einsum("bn,bhpn->bhp", ct, h)
+        return h, y
+
+    h0 = jnp.zeros((bsz, nh, p, n), jnp.float32)
+    _, ys = jax.lax.scan(
+        body, h0,
+        (xf.transpose(1, 0, 2, 3), bmat.astype(jnp.float32).transpose(1, 0, 2),
+         cmat.astype(jnp.float32).transpose(1, 0, 2), a.transpose(1, 0, 2),
+         dtv.transpose(1, 0, 2)))
+    y = ys.transpose(1, 0, 2, 3) + xf * d[:, None]
+    return y.astype(x.dtype)
+
+
+def masked_matmul_ref(x, w, block_mask, *, block_n: int = 128):
+    """x @ w with pruned column blocks zeroed."""
+    full_mask = jnp.repeat(jnp.asarray(block_mask, jnp.float32), block_n)
+    out = x.astype(jnp.float32) @ w.astype(jnp.float32)
+    return (out * full_mask[None, :]).astype(x.dtype)

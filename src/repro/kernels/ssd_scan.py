@@ -1,0 +1,97 @@
+"""Mamba2 SSD chunked scan (TPU Pallas).
+
+Recurrence per head:  H_t = a_t H_{t-1} + (dt_t x_t) B_t^T,  y_t = C_t H_t + D x_t
+with a_t = exp(-softplus(dt_t + bias) * exp(A_log)).
+
+Grid (batch, chunks), chunk dimension SEQUENTIAL: the carried state
+H [nh, p, N] lives in VMEM scratch and persists across chunk steps — the
+Pallas analogue of the chunk-level lax.scan in the reference.  Within a
+chunk everything is dense matmul work (MXU): the intra-chunk decay matrix
+[chunk, chunk] and two dot_generals.
+
+VMEM per step (chunk=256, nh=32, p=64, N=64):
+  x (256 x 2048) + B,C (256 x 64) + decay (256 x 256 x nh f32 — dominant)
+The decay tensor is materialized per head-group to stay under VMEM; this
+kernel keeps it whole for clarity (nh <= 48 fits at chunk 128).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, b_ref, c_ref, dt_ref, alog_ref, d_ref, bias_ref,
+                o_ref, h_scr, *, chunk: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    x = x_ref[0].astype(jnp.float32)               # [chunk, nh, p]
+    bm = b_ref[0].astype(jnp.float32)              # [chunk, N]
+    cm = c_ref[0].astype(jnp.float32)              # [chunk, N]
+    dt = dt_ref[0].astype(jnp.float32)             # [chunk, nh]
+    a_log = alog_ref[...]                          # [nh]
+    d = d_ref[...]                                 # [nh]
+    bias = bias_ref[...]                           # [nh]
+
+    dtv = jax.nn.softplus(dt + bias)               # [chunk, nh]
+    la = -dtv * jnp.exp(a_log)                     # log a_t  [chunk, nh]
+    xs = x * dtv[..., None]                        # [chunk, nh, p]
+
+    cum = jnp.cumsum(la, axis=0)                   # [chunk, nh]
+    total = cum[-1]                                # [nh]
+    # intra-chunk: y_i += sum_{j<=i} (C_i . B_j) exp(cum_i - cum_j) xs_j
+    li = cum[:, None, :]                           # [i, 1, nh]
+    lj = cum[None, :, :]                           # [1, j, nh]
+    mask = jnp.tril(jnp.ones((chunk, chunk), jnp.float32))[:, :, None]
+    # mask INSIDE the exp: for j > i the exponent is positive and large
+    # (cum is decreasing), and exp(+big) * 0 would be inf * 0 = NaN.
+    decay = jnp.exp(jnp.where(mask > 0, li - lj, -1e30))  # [i, j, nh]
+    inner = jax.lax.dot_general(cm, bm, (((1,), (1,)), ((), ())))  # [i, j]
+    w = inner[:, :, None] * decay                  # [i, j, nh]
+    y_intra = jnp.einsum("ijh,jhp->ihp", w, xs)
+    # carried state contribution: y_i += C_i (exp(cum_i) * H)
+    carried = jnp.exp(cum)[:, :, None, None] * h_scr[...][None]    # [i, nh, p, N]
+    y_carry = jnp.einsum("in,ihpn->ihp", cm, carried)
+    # state update: H' = exp(total) H + sum_j exp(total - cum_j) xs_j B_j^T
+    decay_end = jnp.exp(total[None] - cum)         # [j, nh]
+    h_new = h_scr[...] * jnp.exp(total)[:, None, None] + jnp.einsum(
+        "jhp,jn,jh->hpn", xs, bm, decay_end)
+    h_scr[...] = h_new
+
+    o_ref[0] = (y_intra + y_carry + x * d[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, bmat, cmat, dt, a_log, d, dt_bias, *, chunk: int = 128,
+             interpret: bool = False):
+    """x [B,S,nh,p], bmat/cmat [B,S,N], dt [B,S,nh] -> y [B,S,nh,p]."""
+    bsz, s, nh, p = x.shape
+    n = bmat.shape[-1]
+    assert s % chunk == 0
+    nchunk = s // chunk
+
+    kernel = functools.partial(_ssd_kernel, chunk=chunk)
+    return pl.pallas_call(
+        kernel,
+        grid=(bsz, nchunk),
+        in_specs=[
+            pl.BlockSpec((1, chunk, nh, p), lambda b_, c_: (b_, c_, 0, 0)),
+            pl.BlockSpec((1, chunk, n), lambda b_, c_: (b_, c_, 0)),
+            pl.BlockSpec((1, chunk, n), lambda b_, c_: (b_, c_, 0)),
+            pl.BlockSpec((1, chunk, nh), lambda b_, c_: (b_, c_, 0)),
+            pl.BlockSpec((nh,), lambda b_, c_: (0,)),
+            pl.BlockSpec((nh,), lambda b_, c_: (0,)),
+            pl.BlockSpec((nh,), lambda b_, c_: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, nh, p), lambda b_, c_: (b_, c_, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, s, nh, p), x.dtype),
+        scratch_shapes=[pltpu.VMEM((nh, p, n), jnp.float32)],
+        interpret=interpret,
+    )(x, bmat, cmat, dt, a_log, d, dt_bias)

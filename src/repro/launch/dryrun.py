@@ -1,0 +1,197 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# --------------------------------------------------------------------------
+# Multi-pod dry-run: prove every (arch x input-shape x mesh) lowers and
+# compiles with coherent sharding, and extract the roofline terms.
+#
+#   PYTHONPATH=src python -m repro.launch.dryrun --arch olmo-1b \
+#       --shape train_4k --mesh pod,multipod --out benchmarks/results/dryrun
+#
+# The XLA_FLAGS line above MUST run before any jax import (device count is
+# locked at first init).  Tests and benchmarks do NOT import this module's
+# side effects — they see 1 device.
+# --------------------------------------------------------------------------
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_NAMES, INPUT_SHAPES, get_config
+from repro.launch import hlo_analysis as H
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import (
+    FLRunConfig,
+    fl_batch_specs,
+    make_decode_step,
+    make_fl_train_step,
+    make_prefill_step,
+)
+from repro.models.api import build_model, decode_cache_len, input_specs
+from repro.sharding.fl_specs import (
+    fl_batch_partition_specs,
+    fl_state_specs,
+    serve_batch_specs,
+)
+from repro.sharding.specs import make_plan, param_specs
+from repro.sharding import cache_specs as make_cache_specs
+from repro.sharding.ctx import activation_sharding
+
+
+def _with_sharding(shapes, specs, mesh):
+    from jax.sharding import NamedSharding
+
+    return jax.tree.map(
+        lambda s, p: jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                          sharding=NamedSharding(mesh, p)),
+        shapes, specs)
+
+
+def dryrun_pair(arch: str, shape_name: str, *, multi_pod: bool,
+                donate: bool = True, extra_flags: dict | None = None) -> dict:
+    """Lower + compile one (arch, shape, mesh).  Returns the result record."""
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    plan = make_plan(mesh, cfg)
+    chips = mesh.size
+    t0 = time.time()
+
+    if shape.kind == "train":
+        run = FLRunConfig(local_steps=1, server_tau=1)
+        init_state, train_step = make_fl_train_step(cfg, run, plan.num_clients or 1)
+        state_shapes = jax.eval_shape(init_state, jax.random.key(0))
+        batch_shapes = fl_batch_specs(cfg, shape, max(plan.num_clients, 1), run,
+                                      abstract=True)
+        model = build_model(cfg)
+        sspecs = fl_state_specs(state_shapes, model.axes(), plan)
+        bspecs = fl_batch_partition_specs(batch_shapes, plan)
+        state_in = _with_sharding(state_shapes, sspecs, mesh)
+        batch_in = _with_sharding(batch_shapes, bspecs, mesh)
+        with mesh, activation_sharding(mesh, plan.batch_axes):
+            lowered = jax.jit(train_step).lower(state_in, batch_in)
+            compiled = lowered.compile()
+    elif shape.kind == "prefill":
+        model, prefill_step = make_prefill_step(cfg)
+        params_shapes = model.param_shapes()
+        pspecs = param_specs(params_shapes, model.axes(), plan)
+        batch_shapes = input_specs(cfg, shape, abstract=True)
+        bspecs = serve_batch_specs(batch_shapes, plan)
+        params_in = _with_sharding(params_shapes, pspecs, mesh)
+        batch_in = _with_sharding(batch_shapes, bspecs, mesh)
+        serve_axes = plan.client_axes + plan.batch_axes
+        with mesh, activation_sharding(mesh, serve_axes):
+            lowered = jax.jit(prefill_step).lower(params_in, batch_in)
+            compiled = lowered.compile()
+    else:  # decode
+        model, decode_step = make_decode_step(cfg)
+        params_shapes = model.param_shapes()
+        pspecs = param_specs(params_shapes, model.axes(), plan)
+        cache_len = decode_cache_len(cfg, shape)
+        window = cfg.sliding_window if shape.name == "long_500k" else None
+        cache_shapes = jax.eval_shape(
+            lambda: model.init_cache(shape.global_batch, cache_len, window=window))
+        cspecs = make_cache_specs(cache_shapes, plan, cfg)
+        batch_shapes = input_specs(cfg, shape, abstract=True)
+        bspecs = serve_batch_specs(batch_shapes, plan)
+        params_in = _with_sharding(params_shapes, pspecs, mesh)
+        cache_in = _with_sharding(cache_shapes, cspecs, mesh)
+        batch_in = _with_sharding(batch_shapes, bspecs, mesh)
+        serve_axes = plan.client_axes + plan.batch_axes
+        with mesh, activation_sharding(mesh, serve_axes):
+            lowered = jax.jit(decode_step, donate_argnums=(1,)).lower(
+                params_in, cache_in, batch_in)
+            compiled = lowered.compile()
+
+    compile_s = time.time() - t0
+    cost = compiled.cost_analysis() or {}
+    mem = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    # Trip-count-aware per-device cost model (XLA's cost_analysis counts
+    # while bodies once — see hlo_cost.py).  The partitioned module is the
+    # PER-DEVICE program, so terms use chips=1.
+    from repro.launch import hlo_cost
+    tot = hlo_cost.analyze(hlo)
+    terms = H.roofline_terms(flops=tot.flops, bytes_accessed=tot.bytes,
+                             wire_bytes=tot.wire_bytes, chips=1)
+    mflops = H.model_flops(cfg, shape, training=shape.kind == "train")
+
+    record = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": chips,
+        "num_clients": plan.num_clients,
+        "fl_client_axis": cfg.fl_client_axis,
+        "compile_s": round(compile_s, 1),
+        "hlo_flops_per_device": tot.flops,
+        "hlo_bytes_per_device": tot.bytes,
+        "collective_wire_bytes_per_device": tot.wire_bytes,
+        "collective_counts": {k: int(v) for k, v in tot.collective_counts.items()},
+        "collective_bytes_by_kind": {k: float(v) for k, v in tot.collective_bytes.items()},
+        "xla_cost_analysis_flops": float(cost.get("flops", 0.0)),
+        "roofline": terms,
+        "model_flops": mflops,
+        "useful_flops_ratio": (mflops / (tot.flops * chips)) if tot.flops else None,
+        "memory_analysis": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "generated_code_bytes": getattr(mem, "generated_code_size_in_bytes", None),
+        },
+        "per_device_bytes": {
+            "arguments": (getattr(mem, "argument_size_in_bytes", 0) or 0) / chips,
+            "temp": (getattr(mem, "temp_size_in_bytes", 0) or 0) / chips,
+        },
+        "ok": True,
+    }
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="pod", help="pod | multipod | both")
+    ap.add_argument("--out", default="benchmarks/results/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    archs = list(ARCH_NAMES) if args.arch == "all" else args.arch.split(",")
+    shapes = list(INPUT_SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = {"pod": [False], "multipod": [True], "both": [False, True]}[args.mesh]
+    out = Path(args.out)
+    out.mkdir(parents=True, exist_ok=True)
+
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch}__{shape}__{'2x16x16' if mp else '16x16'}"
+                path = out / f"{tag}.json"
+                if args.skip_existing and path.exists():
+                    ok = json.loads(path.read_text()).get("ok")
+                    if ok:
+                        print(f"[skip] {tag}")
+                        continue
+                print(f"[run ] {tag} ...", flush=True)
+                try:
+                    rec = dryrun_pair(arch, shape, multi_pod=mp)
+                    print(f"[ ok ] {tag}: compile={rec['compile_s']}s "
+                          f"bottleneck={rec['roofline']['bottleneck']} "
+                          f"flops/dev={rec['hlo_flops_per_device']:.3e}", flush=True)
+                except Exception as e:  # noqa: BLE001 — record and continue
+                    rec = {"arch": arch, "shape": shape,
+                           "mesh": "2x16x16" if mp else "16x16",
+                           "ok": False, "error": f"{type(e).__name__}: {e}",
+                           "traceback": traceback.format_exc()[-4000:]}
+                    print(f"[FAIL] {tag}: {e}", flush=True)
+                path.write_text(json.dumps(rec, indent=2))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,188 @@
+"""Roofline-term extraction from compiled/lowered HLO.
+
+Three terms per (arch x shape x mesh) — DESIGN.md / EXPERIMENTS.md §Roofline:
+
+  compute    = HLO_FLOPs / (chips * PEAK_FLOPS)
+  memory     = HLO_bytes / (chips * HBM_BW)
+  collective = collective_wire_bytes / (chips * ICI_BW)
+
+FLOPs/bytes come from ``compiled.cost_analysis()``.  Collective bytes are
+NOT in cost_analysis: we parse the optimized HLO text, resolve every
+collective op's operand shapes through a symbol table of instruction
+result types, and convert to wire bytes with the standard ring factors:
+
+  all-reduce       2 (n-1)/n     (reduce-scatter + all-gather phases)
+  all-gather       (n-1)/n
+  reduce-scatter   (n-1)/n
+  all-to-all       (n-1)/n
+  collective-permute 1
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s
+per ICI link (3 links/chip; we charge the busiest-link model: bytes
+crossing each chip boundary / link bw).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Any
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?(%?[\w.\-]+)\s*=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^ ]*)\s+([\w\-]+)")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Bytes of one HLO type string (possibly a tuple type)."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: dict
+    bytes_by_kind: dict
+    wire_bytes: float           # ring-adjusted, summed over ops
+
+    @property
+    def total_bytes(self) -> float:
+        return float(sum(self.bytes_by_kind.values()))
+
+
+def parse_collectives(hlo_text: str, *, ring_n: int = 16) -> CollectiveStats:
+    """Scan optimized HLO; sum operand bytes of every collective.
+
+    For `op(...)` the operand shapes are resolved from the instruction
+    symbol table (fallback: the op's own result type, exact for
+    all-reduce / collective-permute, output-size for all-gather).
+    """
+    # symbol table: instruction name -> result type string
+    table: dict[str, str] = {}
+    instrs: list[tuple[str, str, str, str]] = []  # (name, type, opcode, line)
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, ty, opcode = m.groups()
+        table[name.lstrip("%")] = ty
+        base = opcode.split(".")[0]
+        if base in _COLLECTIVES or any(line.lstrip().split("=", 1)[-1].lstrip()
+                                       .startswith(c) for c in _COLLECTIVES):
+            instrs.append((name.lstrip("%"), ty, base, line))
+
+    counts: dict[str, int] = {}
+    bytes_by_kind: dict[str, float] = {}
+    wire = 0.0
+    factor = {
+        "all-reduce": 2.0 * (ring_n - 1) / ring_n,
+        "all-gather": (ring_n - 1) / ring_n,
+        "reduce-scatter": (ring_n - 1) / ring_n,
+        "all-to-all": (ring_n - 1) / ring_n,
+        "collective-permute": 1.0,
+    }
+    for name, ty, base, line in instrs:
+        kind = next((c for c in _COLLECTIVES if c in line), base)
+        # operand bytes: resolve %operand references in the call parens
+        ops = re.findall(r"%([\w.\-]+)", line.split("(", 1)[-1])
+        op_bytes = sum(_shape_bytes(table.get(o, "")) for o in ops)
+        if op_bytes == 0:
+            op_bytes = _shape_bytes(ty)
+        counts[kind] = counts.get(kind, 0) + 1
+        bytes_by_kind[kind] = bytes_by_kind.get(kind, 0.0) + op_bytes
+        wire += op_bytes * factor.get(kind, 1.0)
+    return CollectiveStats(counts=counts, bytes_by_kind=bytes_by_kind, wire_bytes=wire)
+
+
+def roofline_terms(*, flops: float, bytes_accessed: float, wire_bytes: float,
+                   chips: int) -> dict[str, float]:
+    compute = flops / (chips * PEAK_FLOPS)
+    memory = bytes_accessed / (chips * HBM_BW)
+    collective = wire_bytes / (chips * ICI_BW)
+    dom = max(("compute", compute), ("memory", memory),
+              ("collective", collective), key=lambda kv: kv[1])[0]
+    return {
+        "compute_s": compute,
+        "memory_s": memory,
+        "collective_s": collective,
+        "bottleneck": dom,
+    }
+
+
+def model_flops(cfg, shape, *, training: bool) -> float:
+    """MODEL_FLOPS = 6 N D (dense) / 6 N_active D (MoE) for training;
+    2 N D for inference (D = processed tokens)."""
+    n = active_param_count(cfg)
+    if shape.kind == "train":
+        d = shape.global_batch * shape.seq_len
+        return 6.0 * n * d
+    if shape.kind == "prefill":
+        d = shape.global_batch * shape.seq_len
+        return 2.0 * n * d
+    d = shape.global_batch * 1          # one decoded token per sequence
+    return 2.0 * n * d
+
+
+def param_count(cfg) -> float:
+    """Total parameters (analytic, matches init shapes)."""
+    d, l, v = cfg.d_model, cfg.num_layers, cfg.vocab_size
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    attn = d * hd * (h + 2 * kv) + h * hd * d
+    if cfg.family == "hybrid":
+        m = cfg.ssm
+        d_in = m.expand * d
+        nh = m.num_ssm_heads or max(1, d_in // 64)
+        mixer = d * (2 * d_in + 2 * m.state_dim + nh) + d_in * d
+        ffn = 3 * d * cfg.d_ff
+        shared_attn = attn
+        return l * (mixer + ffn) + shared_attn + 2 * v * d
+    if cfg.family == "ssm":
+        f = int(cfg.xlstm.proj_factor * d)
+        per = d * 2 * f + 3 * f * (f // cfg.num_heads) * cfg.num_heads + f * d
+        return l * per + 2 * v * d
+    if cfg.moe:
+        m = cfg.moe
+        ffn = m.num_experts * 3 * d * m.expert_d_ff + d * m.num_experts
+        if m.dense_d_ff:
+            ffn += 3 * d * m.dense_d_ff
+        if m.shared_expert:
+            ffn += 3 * d * m.expert_d_ff
+    else:
+        ffn = (3 if cfg.act == "silu" else 2) * d * cfg.d_ff
+    n = l * (attn + ffn) + 2 * v * d
+    if cfg.family == "encdec":
+        n += cfg.encoder.num_layers * (attn + (2 * d * cfg.d_ff)) + l * attn  # enc + cross
+    return n
+
+
+def active_param_count(cfg) -> float:
+    """Parameters touched per token (MoE: top_k of num_experts)."""
+    n = param_count(cfg)
+    if cfg.moe:
+        m = cfg.moe
+        every = m.num_experts * 3 * cfg.d_model * m.expert_d_ff * cfg.num_layers
+        act = m.top_k * 3 * cfg.d_model * m.expert_d_ff * cfg.num_layers
+        n = n - every + act
+    return n

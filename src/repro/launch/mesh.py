@@ -1,0 +1,26 @@
+"""Production mesh builders.
+
+Single pod: 16 x 16 = 256 chips (TPU v5e pod), axes (data, model).
+Multi-pod:  2 x 16 x 16 = 512 chips, axes (pod, data, model) — the 'pod'
+axis hosts cross-silo FL clients for the giant architectures and extends
+the client axis for the small ones.
+
+Functions, not module constants: importing this module must never touch
+jax device state (the dry-run sets XLA_FLAGS before first jax init).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(*, data: int | None = None, model: int = 1):
+    """Small mesh over the actually-present local devices (tests, CPU)."""
+    n = len(jax.devices())
+    data = data or (n // model)
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,265 @@
+"""Pod-scale FL steps: the paper's round as ONE SPMD program.
+
+``fl_train_step`` is FedDUMAP's round (minus the one-shot FedAP prune,
+which re-materializes between rounds):
+
+    local E steps        — per-client restart-SGDM (FedDUM Formula 11);
+                           NO collective over the client axis: clients
+                           diverge inside the step.
+    aggregate            — weighted mean over the client dim (one weight
+                           all-reduce over the client axis; this IS the
+                           paper's "upload models + FedAvg" step 3-4).
+    FedDU server update  — tau server SGD steps on the shared batch,
+                           normalized (Formula 6), scaled by tau_eff
+                           (Formula 7); data-parallel over the whole mesh.
+    FedDUM server SGDM   — pseudo-gradient momentum (Formulas 8/12).
+
+State between rounds is just {global params, server momentum, round} —
+FL clients are stateless (the momentum restart is what makes this one
+program possible with zero extra communication).
+
+Serve steps (``prefill_step`` / ``decode_step``) run the aggregated global
+model — plain distributed inference.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.core.server_update import FedDUConfig, tau_eff
+from repro.models.api import build_model, decode_cache_len, input_specs
+from repro.sharding.specs import MeshPlan
+
+
+@dataclasses.dataclass(frozen=True)
+class FLRunConfig:
+    lr: float = 1e-3              # eta' (local) and eta (server SGD)
+    beta_local: float = 0.9       # FedDUM Formula 11
+    beta_server: float = 0.9      # FedDUM Formula 8
+    eta_server: float = 1.0
+    local_steps: int = 1          # local iterations per round (E*n_k/B)
+    server_tau: int = 1           # server iterations per round
+    server_batch: int = 32
+    feddu: FedDUConfig = dataclasses.field(default_factory=FedDUConfig)
+    use_server_update: bool = True
+    use_momentum: bool = True
+
+
+def token_accuracy(model, params, batch) -> jnp.ndarray:
+    logits, _ = model.apply(params, batch)
+    ok = (jnp.argmax(logits, -1) == batch["labels"]).astype(jnp.float32)
+    mask = batch.get("loss_mask")
+    if mask is not None:
+        return jnp.sum(ok * mask) / jnp.clip(jnp.sum(mask), 1.0, None)
+    return jnp.mean(ok)
+
+
+def loss_and_accuracy(model, params, batch):
+    """Single-forward loss + token accuracy (the Formula-7 acc gate fused
+    into the first server gradient step — §Perf iteration B2: the separate
+    accuracy forward cost one extra server-batch pass per round)."""
+    logits, aux = model.apply(params, batch)
+    labels = batch["labels"]
+    mask = batch.get("loss_mask")
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32))
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    ok = (jnp.argmax(logits, -1) == labels).astype(jnp.float32)
+    if mask is not None:
+        denom = jnp.clip(jnp.sum(mask), 1.0, None)
+        loss = jnp.sum(nll * mask) / denom + aux
+        acc = jnp.sum(ok * mask) / denom
+    else:
+        loss = jnp.sum(nll) / nll.size + aux
+        acc = jnp.mean(ok)
+    return loss, acc
+
+
+def make_fl_train_step(cfg: ModelConfig, run: FLRunConfig, num_clients: int):
+    """Returns (init_state_fn(rng), train_step(state, batch) -> state_out).
+
+    batch:
+      client: batch pytree with leading [C, steps, ...] dims
+      server: batch pytree with leading [tau, ...] dim
+      sizes:  [C] f32 n_k
+      d_round, d_server: scalars (non-IID degrees, Formula 2)
+      n0: scalar f32
+    """
+    model = build_model(cfg)
+    grad_fn = jax.grad(model.loss)
+
+    def init_state(rng):
+        params = model.init(rng)
+        m = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return {"params": params, "server_m": m,
+                "round": jnp.zeros((), jnp.float32)}
+
+    def local_train(params, client_batch):
+        """Restart-SGDM over ``local_steps`` batches (Formula 11)."""
+        m0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+        def step(carry, b):
+            p, m = carry
+            g = grad_fn(p, b)
+            if run.use_momentum:
+                m = jax.tree.map(
+                    lambda mi, gi: run.beta_local * mi
+                    + (1 - run.beta_local) * gi.astype(jnp.float32), m, g)
+                upd = m
+            else:
+                upd = g
+            p = jax.tree.map(lambda pi, u: (pi - run.lr * u).astype(pi.dtype), p, upd)
+            return (p, m), None
+
+        (p, _), _ = jax.lax.scan(step, (params, m0), client_batch)
+        return p
+
+    def train_step(state, batch):
+        params = state["params"]
+
+        # (2) local epochs, vmapped over the client dim — no client collective
+        locals_ = jax.vmap(local_train, in_axes=(None, 0))(params, batch["client"])
+
+        # (4) FedAvg aggregation: ONE weighted all-reduce over the client axis
+        w = batch["sizes"] / jnp.sum(batch["sizes"])
+        w_half = jax.tree.map(
+            lambda l: jnp.einsum("c,c...->...", w.astype(jnp.float32),
+                                 l.astype(jnp.float32)).astype(l.dtype), locals_)
+
+        # (5) FedDU dynamic server update.  The Formula-7 accuracy gate is
+        # computed from the FIRST server step's own forward (value_and_grad
+        # with aux) — no separate evaluation pass (§Perf B2).
+        if run.use_server_update:
+            tau = jax.tree.leaves(batch["server"])[0].shape[0]
+            la_grad = jax.value_and_grad(
+                lambda p, b: loss_and_accuracy(model, p, b), has_aux=True)
+
+            def sstep(carry, b):
+                p, acc0, is_first = carry
+                (_, acc), g = la_grad(p, b)
+                acc0 = jnp.where(is_first, acc, acc0)
+                p = jax.tree.map(lambda pi, gi: (pi - run.lr * gi).astype(pi.dtype), p, g)
+                return (p, acc0, jnp.zeros((), bool)), None
+
+            (w_end, acc, _), _ = jax.lax.scan(
+                sstep, (w_half, jnp.zeros(()), jnp.ones((), bool)), batch["server"])
+            g0 = jax.tree.map(
+                lambda a, b_: (a.astype(jnp.float32) - b_.astype(jnp.float32))
+                / (tau * run.lr), w_half, w_end)
+            t_eff = tau_eff(run.feddu, acc=acc, round_idx=state["round"],
+                            n0=batch["n0"], n_prime=jnp.sum(batch["sizes"]),
+                            d_round=batch["d_round"], d_server=batch["d_server"],
+                            tau=tau)
+            proposed = jax.tree.map(
+                lambda p, g: (p.astype(jnp.float32) - t_eff * run.lr * g).astype(p.dtype),
+                w_half, g0)
+        else:
+            proposed = w_half
+            t_eff = jnp.zeros(())
+
+        # FedDUM server momentum on the pseudo-gradient
+        if run.use_momentum:
+            pseudo = jax.tree.map(
+                lambda a, b_: a.astype(jnp.float32) - b_.astype(jnp.float32),
+                params, proposed)
+            m = jax.tree.map(
+                lambda mi, g: run.beta_server * mi + (1 - run.beta_server) * g,
+                state["server_m"], pseudo)
+            new_params = jax.tree.map(
+                lambda p, mi: (p.astype(jnp.float32) - run.eta_server * mi).astype(p.dtype),
+                params, m)
+        else:
+            m = state["server_m"]
+            new_params = proposed
+
+        return {"params": new_params, "server_m": m, "round": state["round"] + 1}, t_eff
+
+    return init_state, train_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    model = build_model(cfg)
+
+    def prefill_step(params, batch):
+        logits, _ = model.apply(params, batch)
+        # return only the last position (serving returns next-token logits)
+        return logits[:, -1, :]
+
+    return model, prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    model = build_model(cfg)
+
+    def decode_step(params, cache, batch):
+        return model.decode_step(params, cache, batch)
+
+    return model, decode_step
+
+
+# ---------------------------------------------------------------------------
+# FL batch construction for (arch x shape)
+# ---------------------------------------------------------------------------
+
+def fl_batch_specs(cfg: ModelConfig, shape: InputShape, num_clients: int,
+                   run: FLRunConfig, *, abstract: bool = True, seed: int = 0):
+    """The train-shape batch: the global batch is split over C clients;
+    the server batch rides along (tau leading dim)."""
+    import numpy as np
+
+    c = num_clients
+    b_c = max(1, shape.global_batch // c)
+    base = input_specs(cfg, shape, abstract=abstract, seed=seed)
+
+    def expand(leaf, lead):
+        if abstract:
+            return jax.ShapeDtypeStruct(lead + leaf.shape, leaf.dtype)
+        reps = 1
+        for d in lead:
+            reps *= d
+        return jnp.broadcast_to(leaf, lead + leaf.shape)
+
+    def reshard_client(leaf):
+        # [B, ...] -> [C, steps, b_c, ...]
+        shp = (c, run.local_steps, b_c) + leaf.shape[1:]
+        if abstract:
+            return jax.ShapeDtypeStruct(shp, leaf.dtype)
+        sliced = leaf[: c * b_c]
+        tiled = jnp.reshape(sliced, (c, 1, b_c) + leaf.shape[1:])
+        return jnp.broadcast_to(tiled, shp)
+
+    def reshard_positions(leaf):
+        # [P, B, S] -> [C, steps, P, b_c, S]
+        shp = (c, run.local_steps, leaf.shape[0], b_c) + leaf.shape[2:]
+        if abstract:
+            return jax.ShapeDtypeStruct(shp, leaf.dtype)
+        sliced = leaf[:, : c * b_c]
+        tiled = jnp.transpose(
+            jnp.reshape(sliced, (leaf.shape[0], c, b_c) + leaf.shape[2:]),
+            (1, 0, 2) + tuple(range(3, leaf.ndim + 1)))[:, None]
+        return jnp.broadcast_to(tiled, shp)
+
+    client = {}
+    for k, v in base.items():
+        client[k] = reshard_positions(v) if k == "positions" else reshard_client(v)
+
+    server_base = input_specs(cfg, dataclasses.replace(
+        shape, global_batch=run.server_batch), abstract=abstract, seed=seed + 1)
+    server = {k: expand(v, (run.server_tau,)) for k, v in server_base.items()}
+
+    scalar = (lambda v: jax.ShapeDtypeStruct((), jnp.float32)) if abstract else \
+        (lambda v: jnp.asarray(v, jnp.float32))
+    sizes = (jax.ShapeDtypeStruct((c,), jnp.float32) if abstract
+             else jnp.ones((c,), jnp.float32))
+    return {
+        "client": client,
+        "server": server,
+        "sizes": sizes,
+        "d_round": scalar(0.3),
+        "d_server": scalar(0.01),
+        "n0": scalar(2048.0),
+    }

@@ -1,0 +1,3 @@
+from repro.models.cnn import LeNet5, PaperModel, ResNet18, SimpleCNN, VGG11
+
+__all__ = ["LeNet5", "PaperModel", "ResNet18", "SimpleCNN", "VGG11"]

@@ -1,0 +1,414 @@
+"""The paper's evaluation models (Section 4.1), pure-JAX functional.
+
+* CNN      — 3 conv (32/64/64, 3x3) + FC(64) + softmax head; ~122k params.
+* LeNet5   — classic 6/16 conv + 120/84 FC.
+* VGG11    — conv 64-128-256x2-512x4 + FC head (CIFAR variant).
+* ResNet18 — basic blocks with GroupNorm (BN is unsound under FL
+             aggregation; GN is the standard substitution).
+
+Design constraints that matter for FedAP:
+  * ``apply`` infers every channel count from the parameter shapes, so a
+    structurally-pruned parameter tree runs through the SAME code.
+  * FC weights that consume flattened conv maps are stored as
+    [spatial, channels, out] so a channel prune is a single axis-1 slice
+    (see CoupledParam in repro.core.pruning).
+  * ``feature_maps`` returns post-activation maps keyed by layer name —
+    the HRank statistic is computed on these.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.pruning import CoupledParam, PrunableLayer, PruneSpec
+
+
+# ---------------------------------------------------------------------------
+# primitives
+# ---------------------------------------------------------------------------
+
+def conv2d(x, w, b=None, *, stride=1, padding="SAME"):
+    out = jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    if b is not None:
+        out = out + b
+    return out
+
+
+def max_pool(x, size=2, stride=2):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, size, size, 1), (1, stride, stride, 1), "SAME")
+
+
+def avg_pool_global(x):
+    return jnp.mean(x, axis=(1, 2))
+
+
+def group_norm(x, scale, bias, groups=8, eps=1e-5):
+    b, h, w, c = x.shape
+    g = math.gcd(groups, c)
+    xg = x.reshape(b, h, w, g, c // g)
+    mean = jnp.mean(xg, axis=(1, 2, 4), keepdims=True)
+    var = jnp.var(xg, axis=(1, 2, 4), keepdims=True)
+    xg = (xg - mean) / jnp.sqrt(var + eps)
+    return xg.reshape(b, h, w, c) * scale + bias
+
+
+def _he(rng, shape, fan_in):
+    return (jax.random.normal(rng, shape) * jnp.sqrt(2.0 / fan_in)).astype(jnp.float32)
+
+
+def _conv_init(rng, kh, kw, cin, cout):
+    return {"w": _he(rng, (kh, kw, cin, cout), kh * kw * cin),
+            "b": jnp.zeros((cout,), jnp.float32)}
+
+
+def _dense_init(rng, fin, fout):
+    return {"w": _he(rng, (fin, fout), fin), "b": jnp.zeros((fout,), jnp.float32)}
+
+
+def softmax_xent_acc(logits, y):
+    logp = jax.nn.log_softmax(logits)
+    loss = -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+    acc = jnp.mean((jnp.argmax(logits, -1) == y).astype(jnp.float32))
+    return loss, acc
+
+
+# ---------------------------------------------------------------------------
+# model base
+# ---------------------------------------------------------------------------
+
+class PaperModel:
+    """Functional-model facade shared by all paper models."""
+
+    def init(self, rng) -> Any:
+        raise NotImplementedError
+
+    def apply(self, params, x, *, collect: bool = False):
+        raise NotImplementedError
+
+    def loss_and_acc(self, params, x, y):
+        logits = self.apply(params, x)
+        return softmax_xent_acc(logits, y)
+
+    def feature_maps(self, params, x) -> dict[str, jnp.ndarray]:
+        _, fmaps = self.apply(params, x, collect=True)
+        return fmaps
+
+    def prune_spec(self, params) -> PruneSpec:
+        raise NotImplementedError
+
+    def with_pruned(self, kept) -> "PaperModel":
+        return self  # apply() is shape-polymorphic
+
+    def flops_per_example(self, params, image_shape) -> float:
+        """Analytic MAC-based FLOPs (matches the paper's MFLOPs columns)."""
+        raise NotImplementedError
+
+
+# ---------------------------------------------------------------------------
+# CNN — the paper's synthetic 122570-param network
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SimpleCNN(PaperModel):
+    num_classes: int = 10
+    image_shape: tuple = (32, 32, 3)
+    channels: tuple = (32, 64, 64)
+    fc_width: int = 64
+
+    def init(self, rng):
+        c = self.image_shape[-1]
+        k = jax.random.split(rng, 5)
+        h, w = self.image_shape[:2]
+        # conv1 + pool, conv2 + pool, conv3 (no pool)
+        h1, w1 = (h + 1) // 2, (w + 1) // 2
+        h2, w2 = (h1 + 1) // 2, (w1 + 1) // 2
+        spatial = h2 * w2
+        params = {
+            "conv1": _conv_init(k[0], 3, 3, c, self.channels[0]),
+            "conv2": _conv_init(k[1], 3, 3, self.channels[0], self.channels[1]),
+            "conv3": _conv_init(k[2], 3, 3, self.channels[1], self.channels[2]),
+            "fc1": {"w": _he(k[3], (spatial, self.channels[2], self.fc_width),
+                             spatial * self.channels[2]),
+                    "b": jnp.zeros((self.fc_width,), jnp.float32)},
+            "out": _dense_init(k[4], self.fc_width, self.num_classes),
+        }
+        return params
+
+    def apply(self, params, x, *, collect=False):
+        fmaps = {}
+        h = jax.nn.relu(conv2d(x, params["conv1"]["w"], params["conv1"]["b"]))
+        fmaps["conv1"] = h
+        h = max_pool(h)
+        h = jax.nn.relu(conv2d(h, params["conv2"]["w"], params["conv2"]["b"]))
+        fmaps["conv2"] = h
+        h = max_pool(h)
+        h = jax.nn.relu(conv2d(h, params["conv3"]["w"], params["conv3"]["b"]))
+        fmaps["conv3"] = h
+        b = h.shape[0]
+        h = h.reshape(b, -1, h.shape[-1])                       # [B, spatial, C]
+        h = jax.nn.relu(jnp.einsum("bpc,pcf->bf", h, params["fc1"]["w"]) + params["fc1"]["b"])
+        fmaps["fc1"] = h
+        logits = h @ params["out"]["w"] + params["out"]["b"]
+        return (logits, fmaps) if collect else logits
+
+    def prune_spec(self, params):
+        return PruneSpec(layers=(
+            PrunableLayer("conv1", ("conv1", "w"), 3,
+                          (CoupledParam(("conv1", "b"), 0), CoupledParam(("conv2", "w"), 2))),
+            PrunableLayer("conv2", ("conv2", "w"), 3,
+                          (CoupledParam(("conv2", "b"), 0), CoupledParam(("conv3", "w"), 2))),
+            PrunableLayer("conv3", ("conv3", "w"), 3,
+                          (CoupledParam(("conv3", "b"), 0), CoupledParam(("fc1", "w"), 1))),
+        ))
+
+    def flops_per_example(self, params, image_shape=None):
+        image_shape = image_shape or self.image_shape
+        h, w, _ = image_shape
+        f = 0.0
+        shapes = [(h, w), ((h + 1) // 2, (w + 1) // 2), ((h + 3) // 4, (w + 3) // 4)]
+        for i, name in enumerate(["conv1", "conv2", "conv3"]):
+            kh, kw, cin, cout = params[name]["w"].shape
+            f += 2 * kh * kw * cin * cout * shapes[i][0] * shapes[i][1]
+        f += 2 * params["fc1"]["w"].size + 2 * params["out"]["w"].size
+        return f
+
+
+# ---------------------------------------------------------------------------
+# LeNet5
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class LeNet5(PaperModel):
+    num_classes: int = 10
+    image_shape: tuple = (32, 32, 3)
+
+    def init(self, rng):
+        c = self.image_shape[-1]
+        k = jax.random.split(rng, 5)
+        h, w = self.image_shape[:2]
+        h1, w1 = (h + 1) // 2, (w + 1) // 2
+        h2, w2 = (h1 + 1) // 2, (w1 + 1) // 2
+        return {
+            "conv1": _conv_init(k[0], 5, 5, c, 6),
+            "conv2": _conv_init(k[1], 5, 5, 6, 16),
+            "fc1": {"w": _he(k[2], (h2 * w2, 16, 120), h2 * w2 * 16),
+                    "b": jnp.zeros((120,), jnp.float32)},
+            "fc2": _dense_init(k[3], 120, 84),
+            "out": _dense_init(k[4], 84, self.num_classes),
+        }
+
+    def apply(self, params, x, *, collect=False):
+        fmaps = {}
+        h = jax.nn.relu(conv2d(x, params["conv1"]["w"], params["conv1"]["b"]))
+        fmaps["conv1"] = h
+        h = max_pool(h)
+        h = jax.nn.relu(conv2d(h, params["conv2"]["w"], params["conv2"]["b"]))
+        fmaps["conv2"] = h
+        h = max_pool(h)
+        b = h.shape[0]
+        h = h.reshape(b, -1, h.shape[-1])
+        h = jax.nn.relu(jnp.einsum("bpc,pcf->bf", h, params["fc1"]["w"]) + params["fc1"]["b"])
+        fmaps["fc1"] = h
+        h = jax.nn.relu(h @ params["fc2"]["w"] + params["fc2"]["b"])
+        fmaps["fc2"] = h
+        logits = h @ params["out"]["w"] + params["out"]["b"]
+        return (logits, fmaps) if collect else logits
+
+    def prune_spec(self, params):
+        return PruneSpec(layers=(
+            PrunableLayer("conv1", ("conv1", "w"), 3,
+                          (CoupledParam(("conv1", "b"), 0), CoupledParam(("conv2", "w"), 2))),
+            PrunableLayer("conv2", ("conv2", "w"), 3,
+                          (CoupledParam(("conv2", "b"), 0), CoupledParam(("fc1", "w"), 1))),
+            PrunableLayer("fc1", ("fc1", "w"), 2,
+                          (CoupledParam(("fc1", "b"), 0), CoupledParam(("fc2", "w"), 0))),
+            PrunableLayer("fc2", ("fc2", "w"), 1,
+                          (CoupledParam(("fc2", "b"), 0), CoupledParam(("out", "w"), 0))),
+        ))
+
+    def flops_per_example(self, params, image_shape=None):
+        image_shape = image_shape or self.image_shape
+        h, w, _ = image_shape
+        f = 0.0
+        shapes = [(h, w), ((h + 1) // 2, (w + 1) // 2)]
+        for i, name in enumerate(["conv1", "conv2"]):
+            kh, kw, cin, cout = params[name]["w"].shape
+            f += 2 * kh * kw * cin * cout * shapes[i][0] * shapes[i][1]
+        for name in ["fc1", "fc2", "out"]:
+            f += 2 * params[name]["w"].size
+        return f
+
+
+# ---------------------------------------------------------------------------
+# VGG11 (CIFAR variant)
+# ---------------------------------------------------------------------------
+
+_VGG11_PLAN = [64, "M", 128, "M", 256, 256, "M", 512, 512, "M", 512, 512, "M"]
+
+
+@dataclasses.dataclass
+class VGG11(PaperModel):
+    num_classes: int = 10
+    image_shape: tuple = (32, 32, 3)
+    width_mult: float = 1.0
+
+    def _plan(self):
+        return [v if v == "M" else max(8, int(v * self.width_mult)) for v in _VGG11_PLAN]
+
+    def init(self, rng):
+        plan = self._plan()
+        convs = [v for v in plan if v != "M"]
+        keys = jax.random.split(rng, len(convs) + 1)
+        params = {}
+        cin = self.image_shape[-1]
+        ci = 0
+        for v in plan:
+            if v == "M":
+                continue
+            params[f"conv{ci}"] = _conv_init(keys[ci], 3, 3, cin, v)
+            cin = v
+            ci += 1
+        params["out"] = _dense_init(keys[-1], cin, self.num_classes)
+        return params
+
+    def apply(self, params, x, *, collect=False):
+        fmaps = {}
+        h = x
+        ci = 0
+        for v in self._plan():
+            if v == "M":
+                h = max_pool(h)
+            else:
+                p = params[f"conv{ci}"]
+                h = jax.nn.relu(conv2d(h, p["w"], p["b"]))
+                fmaps[f"conv{ci}"] = h
+                ci += 1
+        h = avg_pool_global(h)
+        logits = h @ params["out"]["w"] + params["out"]["b"]
+        return (logits, fmaps) if collect else logits
+
+    def prune_spec(self, params):
+        n_convs = sum(1 for v in _VGG11_PLAN if v != "M")
+        layers = []
+        for i in range(n_convs):
+            nxt = (CoupledParam((f"conv{i + 1}", "w"), 2) if i + 1 < n_convs
+                   else CoupledParam(("out", "w"), 0))
+            layers.append(PrunableLayer(
+                f"conv{i}", (f"conv{i}", "w"), 3,
+                (CoupledParam((f"conv{i}", "b"), 0), nxt)))
+        return PruneSpec(layers=tuple(layers))
+
+    def flops_per_example(self, params, image_shape=None):
+        image_shape = image_shape or self.image_shape
+        h, w, _ = image_shape
+        f, ci = 0.0, 0
+        for v in self._plan():
+            if v == "M":
+                h, w = (h + 1) // 2, (w + 1) // 2
+            else:
+                kh, kw, cin, cout = params[f"conv{ci}"]["w"].shape
+                f += 2 * kh * kw * cin * cout * h * w
+                ci += 1
+        f += 2 * params["out"]["w"].size
+        return f
+
+
+# ---------------------------------------------------------------------------
+# ResNet18 with GroupNorm
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ResNet18(PaperModel):
+    num_classes: int = 100
+    image_shape: tuple = (32, 32, 3)
+    width: int = 64
+
+    _stages = (2, 2, 2, 2)
+
+    def init(self, rng):
+        w0 = self.width
+        keys = iter(jax.random.split(rng, 64))
+        params = {"stem": _conv_init(next(keys), 3, 3, self.image_shape[-1], w0)}
+        params["stem_gn"] = {"scale": jnp.ones((w0,)), "bias": jnp.zeros((w0,))}
+        cin = w0
+        for s, blocks in enumerate(self._stages):
+            cout = w0 * (2 ** s)
+            for b in range(blocks):
+                name = f"s{s}b{b}"
+                stride = 2 if (b == 0 and s > 0) else 1
+                blk = {
+                    "conv1": _conv_init(next(keys), 3, 3, cin, cout),
+                    "gn1": {"scale": jnp.ones((cout,)), "bias": jnp.zeros((cout,))},
+                    "conv2": _conv_init(next(keys), 3, 3, cout, cout),
+                    "gn2": {"scale": jnp.ones((cout,)), "bias": jnp.zeros((cout,))},
+                }
+                if stride != 1 or cin != cout:
+                    blk["proj"] = _conv_init(next(keys), 1, 1, cin, cout)
+                params[name] = blk
+                cin = cout
+        params["out"] = _dense_init(next(keys), cin, self.num_classes)
+        return params
+
+    def apply(self, params, x, *, collect=False):
+        fmaps = {}
+        h = jax.nn.relu(group_norm(conv2d(x, params["stem"]["w"], params["stem"]["b"]),
+                                   params["stem_gn"]["scale"], params["stem_gn"]["bias"]))
+        for s, blocks in enumerate(self._stages):
+            for b in range(blocks):
+                name = f"s{s}b{b}"
+                blk = params[name]
+                stride = 2 if (b == 0 and s > 0) else 1
+                y = jax.nn.relu(group_norm(
+                    conv2d(h, blk["conv1"]["w"], blk["conv1"]["b"], stride=stride),
+                    blk["gn1"]["scale"], blk["gn1"]["bias"]))
+                fmaps[f"{name}.conv1"] = y
+                y = group_norm(conv2d(y, blk["conv2"]["w"], blk["conv2"]["b"]),
+                               blk["gn2"]["scale"], blk["gn2"]["bias"])
+                sc = h
+                if "proj" in blk:
+                    sc = conv2d(h, blk["proj"]["w"], blk["proj"]["b"], stride=stride)
+                h = jax.nn.relu(y + sc)
+        h = avg_pool_global(h)
+        logits = h @ params["out"]["w"] + params["out"]["b"]
+        return (logits, fmaps) if collect else logits
+
+    def prune_spec(self, params):
+        # Prune only each block's FIRST conv: its output feeds conv2's input
+        # only, so residual shapes are untouched (standard residual-safe rule).
+        layers = []
+        for s, blocks in enumerate(self._stages):
+            for b in range(blocks):
+                name = f"s{s}b{b}"
+                layers.append(PrunableLayer(
+                    f"{name}.conv1", (name, "conv1", "w"), 3,
+                    (CoupledParam((name, "conv1", "b"), 0),
+                     CoupledParam((name, "gn1", "scale"), 0),
+                     CoupledParam((name, "gn1", "bias"), 0),
+                     CoupledParam((name, "conv2", "w"), 2))))
+        return PruneSpec(layers=tuple(layers))
+
+    def flops_per_example(self, params, image_shape=None):
+        image_shape = image_shape or self.image_shape
+        h, w, _ = image_shape
+        f = 2 * 9 * self.image_shape[-1] * params["stem"]["w"].shape[-1] * h * w
+        for s, blocks in enumerate(self._stages):
+            for b in range(blocks):
+                name = f"s{s}b{b}"
+                blk = params[name]
+                stride = 2 if (b == 0 and s > 0) else 1
+                h, w = (h + stride - 1) // stride, (w + stride - 1) // stride
+                for cname in ["conv1", "conv2"]:
+                    kh, kw, cin, cout = blk[cname]["w"].shape
+                    f += 2 * kh * kw * cin * cout * h * w
+                if "proj" in blk:
+                    kh, kw, cin, cout = blk["proj"]["w"].shape
+                    f += 2 * kh * kw * cin * cout * h * w
+        f += 2 * params["out"]["w"].size
+        return f

@@ -1,0 +1,11 @@
+from repro.optim.optimizers import (
+    Optimizer,
+    sgd,
+    sgdm,
+    adam,
+    adagrad,
+    yogi,
+    apply_updates,
+)
+
+__all__ = ["Optimizer", "sgd", "sgdm", "adam", "adagrad", "yogi", "apply_updates"]

@@ -1,0 +1,143 @@
+"""Minimal functional optimizers (no optax dependency).
+
+API mirrors optax: ``opt.init(params) -> state``,
+``opt.update(grads, state, params) -> (updates, state)``, and updates are
+*subtracted* via :func:`apply_updates`.
+
+SGDM follows the paper's Formula 8 convention:
+
+    m^t = beta * m^{t-1} + (1 - beta) * g
+    w^t = w^{t-1} - eta * m^t
+
+i.e. the (1 - beta) damping variant, NOT the torch ``momentum`` variant.
+FedDUM relies on this exact form on both the server and the devices.
+
+Momentum/second-moment state is kept in float32 regardless of the param
+dtype (bf16-safe), matching production mixed-precision practice.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[..., Any]  # (grads, state, params) -> (updates, state)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p - u).astype(p.dtype), params, updates)
+
+
+def _f32_zeros(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, dtype=jnp.float32), params)
+
+
+def sgd(lr: float) -> Optimizer:
+    def init(params):
+        return ()
+
+    def update(grads, state, params=None):
+        return jax.tree.map(lambda g: lr * g, grads), state
+
+    return Optimizer(init, update)
+
+
+def sgdm(lr: float, beta: float = 0.9) -> Optimizer:
+    """SGD with momentum, paper Formula 8 (damped)."""
+
+    def init(params):
+        return _f32_zeros(params)
+
+    def update(grads, m, params=None):
+        m = jax.tree.map(
+            lambda mi, g: beta * mi + (1.0 - beta) * g.astype(jnp.float32), m, grads
+        )
+        return jax.tree.map(lambda mi, g: (lr * mi).astype(g.dtype), m, grads), m
+
+    return Optimizer(init, update)
+
+
+class AdamState(NamedTuple):
+    m: Any
+    v: Any
+    count: jnp.ndarray
+
+
+def adam(lr: float, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8) -> Optimizer:
+    def init(params):
+        return AdamState(_f32_zeros(params), _f32_zeros(params), jnp.zeros((), jnp.int32))
+
+    def update(grads, state, params=None):
+        count = state.count + 1
+        m = jax.tree.map(lambda mi, g: b1 * mi + (1 - b1) * g.astype(jnp.float32), state.m, grads)
+        v = jax.tree.map(
+            lambda vi, g: b2 * vi + (1 - b2) * jnp.square(g.astype(jnp.float32)), state.v, grads
+        )
+        bc1 = 1 - b1 ** count.astype(jnp.float32)
+        bc2 = 1 - b2 ** count.astype(jnp.float32)
+        updates = jax.tree.map(
+            lambda mi, vi, g: (lr * (mi / bc1) / (jnp.sqrt(vi / bc2) + eps)).astype(g.dtype),
+            m,
+            v,
+            grads,
+        )
+        return updates, AdamState(m, v, count)
+
+    return Optimizer(init, update)
+
+
+def adagrad(lr: float, eps: float = 1e-8) -> Optimizer:
+    def init(params):
+        return _f32_zeros(params)
+
+    def update(grads, acc, params=None):
+        acc = jax.tree.map(lambda a, g: a + jnp.square(g.astype(jnp.float32)), acc, grads)
+        updates = jax.tree.map(
+            lambda a, g: (lr * g.astype(jnp.float32) / (jnp.sqrt(a) + eps)).astype(g.dtype),
+            acc,
+            grads,
+        )
+        return updates, acc
+
+    return Optimizer(init, update)
+
+
+class YogiState(NamedTuple):
+    m: Any
+    v: Any
+    count: jnp.ndarray
+
+
+def yogi(lr: float, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-3) -> Optimizer:
+    """Yogi (Reddi et al., 2018) — the paper's 'server-side momentum' baseline
+    family (adaptive methods for nonconvex optimization)."""
+
+    def init(params):
+        return YogiState(_f32_zeros(params), _f32_zeros(params), jnp.zeros((), jnp.int32))
+
+    def update(grads, state, params=None):
+        count = state.count + 1
+        m = jax.tree.map(lambda mi, g: b1 * mi + (1 - b1) * g.astype(jnp.float32), state.m, grads)
+
+        def _v(vi, g):
+            g2 = jnp.square(g.astype(jnp.float32))
+            return vi - (1 - b2) * jnp.sign(vi - g2) * g2
+
+        v = jax.tree.map(_v, state.v, grads)
+        bc1 = 1 - b1 ** count.astype(jnp.float32)
+        updates = jax.tree.map(
+            lambda mi, vi, g: (lr * (mi / bc1) / (jnp.sqrt(jnp.maximum(vi, 0.0)) + eps)).astype(
+                g.dtype
+            ),
+            m,
+            v,
+            grads,
+        )
+        return updates, YogiState(m, v, count)
+
+    return Optimizer(init, update)

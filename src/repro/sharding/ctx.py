@@ -1,0 +1,52 @@
+"""Activation-sharding context.
+
+GSPMD propagates FSDP *parameter* shardings into activations unless told
+otherwise (an embedding whose d_model dim is sharded over 'data' makes the
+residual stream d-sharded and batch-REPLICATED — measured 16x memory blowup
+on llama3-405b prefill; see EXPERIMENTS.md §Perf).  Production frameworks
+pin the residual stream with with_sharding_constraint; models here call
+:func:`constrain_batch` at block boundaries, and the launch layer decides
+the actual axes via this context (models stay mesh-agnostic).
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_ACTIVE: contextvars.ContextVar = contextvars.ContextVar("act_sharding", default=None)
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh, batch_axes: tuple):
+    """Enable activation constraints while tracing (lower under this)."""
+    tok = _ACTIVE.set((mesh, tuple(batch_axes)))
+    try:
+        yield
+    finally:
+        _ACTIVE.reset(tok)
+
+
+def constrain_batch(x, batch_dim: int = 0):
+    """Pin dim ``batch_dim`` of ``x`` to the configured batch axes and leave
+    every other dim unsharded-by-constraint (GSPMD may still refine)."""
+    ctx = _ACTIVE.get()
+    if ctx is None:
+        return x
+    mesh, batch_axes = ctx
+    if not batch_axes or x.ndim <= batch_dim:
+        return x
+    if x.shape[batch_dim] % _size(mesh, batch_axes) != 0:
+        return x
+    parts = [None] * x.ndim
+    parts[batch_dim] = batch_axes if len(batch_axes) > 1 else batch_axes[0]
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*parts)))
+
+
+def _size(mesh, axes):
+    s = 1
+    for a in axes:
+        s *= mesh.shape[a]
+    return s

@@ -1,0 +1,202 @@
+"""Logical-axis -> mesh PartitionSpec rules.
+
+The mesh is (data=16, model=16) single-pod or (pod=2, data=16, model=16)
+multi-pod (see repro.launch.mesh).  FL semantics determine the *client*
+axis (DESIGN.md Section 4):
+
+  * data-client archs (<= ~10B): clients live on 'data' (x 'pod' when
+    multi-pod) — parameters carry a leading client dim sharded over those
+    axes; TP shards head/ffn dims over 'model'.
+  * pod-client archs (cross-silo giants): clients live on 'pod'; inside a
+    silo parameters are FSDP-sharded over 'data' and TP-sharded over
+    'model'.
+
+Every mapping is divisibility-checked against the actual dim size; a
+non-divisible dim falls back to replication (e.g. whisper's 12 heads on a
+16-way model axis) — the production-safe default.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Any, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+# logical axis -> candidate mesh-axis role
+_TP_AXES = {"vocab", "heads", "kv_heads", "mlp", "expert_mlp", "experts", "ssm_inner"}
+_FSDP_AXES = {"embed"}
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshPlan:
+    mesh: Mesh
+    multi_pod: bool
+    client_axes: tuple          # mesh axes hosting FL clients
+    fsdp_axes: tuple            # mesh axes for parameter FSDP
+    tp_axes: tuple              # mesh axes for tensor parallelism
+    batch_axes: tuple           # mesh axes sharding the within-client batch
+    num_clients: int
+
+    def axis_size(self, names: tuple) -> int:
+        s = 1
+        for n in names:
+            s *= self.mesh.shape[n]
+        return s
+
+
+def make_plan(mesh: Mesh, cfg: ModelConfig) -> MeshPlan:
+    multi_pod = "pod" in mesh.shape
+    if cfg.fl_client_axis == "data":
+        client_axes = ("pod", "data") if multi_pod else ("data",)
+        fsdp_axes = ()
+        batch_axes = ()
+    elif cfg.fl_client_axis == "pod":
+        client_axes = ("pod",) if multi_pod else ()
+        fsdp_axes = ("data",) if cfg.fsdp else ()
+        batch_axes = ("data",)
+    else:
+        client_axes = ()
+        fsdp_axes = ("data",) if cfg.fsdp else ()
+        batch_axes = ("data",) if not multi_pod else ("pod", "data")
+    num_clients = 1
+    for a in client_axes:
+        num_clients *= mesh.shape[a]
+    return MeshPlan(mesh=mesh, multi_pod=multi_pod, client_axes=client_axes,
+                    fsdp_axes=fsdp_axes, tp_axes=("model",),
+                    batch_axes=batch_axes, num_clients=num_clients)
+
+
+# §Perf C1 note: jit input shardings must divide evenly, so non-divisible
+# head counts are handled by WEIGHT-LEVEL padding at init (REPRO_PAD_HEADS
+# in repro.models.layers.init_attention), not by relaxing this check.
+
+
+def _divisible(dim: int, plan: MeshPlan, axes: tuple) -> bool:
+    return dim % plan.axis_size(axes) == 0 if axes else True
+
+
+def _shardable(name: str, dim: int, plan: MeshPlan, axes: tuple) -> bool:
+    return _divisible(dim, plan, axes)
+
+
+def _spec_for(shape: tuple, logical: tuple, plan: MeshPlan,
+              *, client_leading: bool) -> P:
+    """PartitionSpec for one tensor given its logical axis names."""
+    parts: list = []
+    used: set = set()
+    offset = 0
+    if client_leading:
+        ca = tuple(a for a in plan.client_axes)
+        if ca and _divisible(shape[0], plan, ca):
+            parts.append(ca if len(ca) > 1 else ca[0])
+            used.update(ca)
+        else:
+            parts.append(None)
+        offset = 1
+    for i, name in enumerate(logical):
+        dim = shape[offset + i]
+        target: Optional[tuple] = None
+        if name in _TP_AXES:
+            target = plan.tp_axes
+        elif name in _FSDP_AXES and plan.fsdp_axes:
+            target = plan.fsdp_axes
+        if target and not used.intersection(target) and _shardable(name, dim, plan, target):
+            parts.append(target if len(target) > 1 else target[0])
+            used.update(target)
+        else:
+            parts.append(None)
+    return P(*parts)
+
+
+def param_specs(shapes: Any, axes: Any, plan: MeshPlan,
+                *, client_leading: bool = False) -> Any:
+    """PartitionSpec tree matching the param tree.
+
+    shapes: pytree of ShapeDtypeStruct (or arrays); axes: logical-axis tree.
+    client_leading: params carry a leading FL-client dim (the federated
+    training state).
+    """
+    # axes-tree leaves are plain tuples (pytree nodes), so flatten the two
+    # trees separately with parallel leaf orders and zip.
+    s_leaves, s_def = jax.tree.flatten(shapes)
+    a_leaves = jax.tree.leaves(axes, is_leaf=lambda x: isinstance(x, tuple))
+    if len(s_leaves) != len(a_leaves):
+        raise ValueError(f"param/axes tree mismatch: {len(s_leaves)} vs {len(a_leaves)}")
+    specs = [_spec_for(s.shape, ax, plan, client_leading=client_leading)
+             for s, ax in zip(s_leaves, a_leaves)]
+    return jax.tree.unflatten(s_def, specs)
+
+
+def _tree_spec(tree: Any, fn) -> Any:
+    return jax.tree.map(fn, tree)
+
+
+def batch_specs(batch: Any, plan: MeshPlan, *, client_leading: bool = False) -> Any:
+    """Shard the batch: leading client dim over client axes (if present),
+    then the batch dim over batch_axes; everything else replicated."""
+    def one(leaf):
+        shp = leaf.shape
+        parts: list = []
+        i = 0
+        if client_leading:
+            ca = plan.client_axes
+            ok = ca and shp[0] % plan.axis_size(ca) == 0
+            parts.append((ca if len(ca) > 1 else ca[0]) if ok else None)
+            i = 1
+            # [C, steps, b, ...]: steps unsharded
+            if len(shp) > 1:
+                parts.append(None)
+                i = 2
+        ba = plan.batch_axes
+        if i < len(shp) and ba and shp[i] % plan.axis_size(ba) == 0:
+            parts.append(ba if len(ba) > 1 else ba[0])
+            i += 1
+        while i < len(shp):
+            parts.append(None)
+            i += 1
+        return P(*parts[: len(shp)])
+
+    # positions [P,B,S] have batch at dim 1 — handled specially by caller if
+    # needed; here dim-0 heuristics suffice for dry-run coherence.
+    return _tree_spec(batch, one)
+
+
+def cache_specs(cache_shapes: Any, plan: MeshPlan, cfg: ModelConfig) -> Any:
+    """KV caches: [L, B, S, KV, hd] -> batch over batch_axes (+client axes
+    merged during inference), kv heads over model when divisible; SSM
+    states analogous."""
+    all_batch = tuple(a for a in (plan.client_axes + plan.batch_axes))
+
+    def one(leaf):
+        shp = leaf.shape
+        nd = len(shp)
+        parts = [None] * nd
+        kvh = cfg.padded_num_kv_heads
+
+        def fits(dim, axes):
+            return axes and dim % plan.axis_size(axes) == 0
+
+        if nd == 5:        # [L, B, S, KV, hd]
+            if fits(shp[1], all_batch):
+                parts[1] = all_batch if len(all_batch) > 1 else all_batch[0]
+            if shp[3] == kvh and fits(shp[3], plan.tp_axes):
+                parts[3] = plan.tp_axes[0]
+        elif nd == 4:      # [B, S, KV, hd] or [L, B, ...] ssm
+            if fits(shp[0], all_batch):
+                parts[0] = all_batch if len(all_batch) > 1 else all_batch[0]
+            elif fits(shp[1], all_batch):
+                parts[1] = all_batch if len(all_batch) > 1 else all_batch[0]
+            if shp[2] == kvh and fits(shp[2], plan.tp_axes):
+                parts[2] = plan.tp_axes[0]
+        elif nd >= 1:
+            if fits(shp[0], all_batch):
+                parts[0] = all_batch if len(all_batch) > 1 else all_batch[0]
+            elif nd > 1 and fits(shp[1], all_batch):
+                parts[1] = all_batch if len(all_batch) > 1 else all_batch[0]
+        return P(*parts)
+
+    return _tree_spec(cache_shapes, one)

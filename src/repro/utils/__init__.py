@@ -1,0 +1,23 @@
+from repro.utils.tree import (
+    tree_add,
+    tree_sub,
+    tree_scale,
+    tree_zeros_like,
+    tree_weighted_mean,
+    tree_dot,
+    tree_norm,
+    tree_cast,
+    tree_size,
+)
+
+__all__ = [
+    "tree_add",
+    "tree_sub",
+    "tree_scale",
+    "tree_zeros_like",
+    "tree_weighted_mean",
+    "tree_dot",
+    "tree_norm",
+    "tree_cast",
+    "tree_size",
+]

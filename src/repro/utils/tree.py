@@ -1,0 +1,62 @@
+"""Pytree arithmetic used throughout the FL core.
+
+Every FL algorithm in this repo manipulates whole parameter pytrees
+(weights, momenta, pseudo-gradients).  These helpers keep that code
+readable and ensure dtype discipline (accumulation in the leaf dtype,
+explicit casts only via ``tree_cast``).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_add(a, b):
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_sub(a, b):
+    return jax.tree.map(jnp.subtract, a, b)
+
+
+def tree_scale(a, s):
+    return jax.tree.map(lambda x: x * s, a)
+
+
+def tree_zeros_like(a):
+    return jax.tree.map(jnp.zeros_like, a)
+
+
+def tree_weighted_mean(trees, weights):
+    """Weighted mean of a list of pytrees. ``weights`` is a 1-D array-like;
+    it is normalized internally (FedAvg's n_k / n')."""
+    w = jnp.asarray(weights, dtype=jnp.float32)
+    w = w / jnp.sum(w)
+
+    def _combine(*leaves):
+        acc = leaves[0] * w[0].astype(leaves[0].dtype)
+        for i, leaf in enumerate(leaves[1:], start=1):
+            acc = acc + leaf * w[i].astype(leaf.dtype)
+        return acc
+
+    return jax.tree.map(_combine, *trees)
+
+
+def tree_dot(a, b):
+    leaves = jax.tree.leaves(jax.tree.map(lambda x, y: jnp.vdot(x, y), a, b))
+    return sum(leaves)
+
+
+def tree_norm(a):
+    return jnp.sqrt(
+        sum(jax.tree.leaves(jax.tree.map(lambda x: jnp.sum(jnp.square(x.astype(jnp.float32))), a)))
+    )
+
+
+def tree_cast(a, dtype):
+    return jax.tree.map(lambda x: x.astype(dtype), a)
+
+
+def tree_size(a) -> int:
+    """Total number of scalar parameters in the pytree."""
+    return sum(int(x.size) for x in jax.tree.leaves(a))

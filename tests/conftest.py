@@ -1,0 +1,7 @@
+import os
+
+# Kernel tests run the TPU kernels in interpret mode on CPU.
+os.environ.setdefault("REPRO_PALLAS_INTERPRET", "1")
+# Keep tests on the single real device (the dry-run sets 512 host devices
+# ONLY inside repro.launch.dryrun, never here).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")

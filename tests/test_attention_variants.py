@@ -1,0 +1,110 @@
+"""§Perf attention variants: tree decomposition, head padding, windows."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.models.layers as L
+from repro.configs import get_config
+from repro.configs.base import InputShape
+from repro.models.api import build_model, input_specs
+
+RNG = np.random.default_rng(3)
+
+
+def _qkv(b, s, h, kv, hd, dtype=jnp.float32):
+    return (jnp.asarray(RNG.standard_normal((b, s, h, hd)), dtype),
+            jnp.asarray(RNG.standard_normal((b, s, kv, hd)), dtype),
+            jnp.asarray(RNG.standard_normal((b, s, kv, hd)), dtype))
+
+
+class TestTreeAttention:
+    @pytest.mark.parametrize("s,leaf", [(2048, 512), (4096, 1024), (1536, 512)])
+    def test_matches_blocked(self, s, leaf):
+        q, k, v = _qkv(1, s, 4, 2, 64)
+        want = L.attention_blocked(q, k, v, causal=True, block_q=512)
+        out, _ = L._attention_tree(q, k, v, leaf=leaf)
+        np.testing.assert_allclose(out, want, atol=2e-5, rtol=2e-5)
+
+    def test_lse_matches_logsumexp(self):
+        q, k, v = _qkv(1, 256, 2, 2, 32)
+        _, lse = L._attention_lse(q, k, v, causal=True, window=None, q_offset=0)
+        # direct logsumexp of the causal scores
+        scores = jnp.einsum("bqhd,bshd->bhqs", q, k) / np.sqrt(32)
+        mask = jnp.tril(jnp.ones((256, 256)))
+        scores = jnp.where(mask[None, None] > 0, scores, -jnp.inf)
+        want = jax.nn.logsumexp(scores, axis=-1).transpose(0, 2, 1)
+        np.testing.assert_allclose(lse, want, atol=1e-4, rtol=1e-4)
+
+    def test_merge_is_softmax_exact(self):
+        q, k, v = _qkv(2, 128, 2, 1, 32)
+        full = L.attention_ref(q, k, v, causal=False)
+        a = L._attention_lse(q, k[:, :48], v[:, :48], causal=False,
+                             window=None, q_offset=0)
+        b = L._attention_lse(q, k[:, 48:], v[:, 48:], causal=False,
+                             window=None, q_offset=0)
+        merged, _ = L._merge_partial([a, b])
+        np.testing.assert_allclose(merged, full, atol=2e-5, rtol=2e-5)
+
+    def test_dispatch_uses_tree_for_long_causal(self):
+        q, k, v = _qkv(1, 4096, 2, 1, 32)
+        old = L.ATTN_MODE
+        try:
+            L.ATTN_MODE = "tree"
+            out_tree = L.attention(q, k, v, causal=True)
+            L.ATTN_MODE = "blocked"
+            out_blk = L.attention(q, k, v, causal=True)
+        finally:
+            L.ATTN_MODE = old
+        np.testing.assert_allclose(out_tree, out_blk, atol=3e-5, rtol=3e-5)
+
+
+class TestHeadPadding:
+    def test_padded_init_shapes(self):
+        cfg = get_config("arctic-480b")          # 56 heads, pad to 64
+        p, _ = L.init_attention(jax.random.key(0), cfg, jnp.float32)
+        assert p["wq"].shape[1] == 64
+        assert p["wo"].shape[0] == 64
+        # dead heads' output rows are exactly zero
+        assert float(jnp.sum(jnp.abs(p["wo"][56:]))) == 0.0
+
+    def test_mha_arch_pads_kv_too(self):
+        cfg = get_config("whisper-small")        # 12 MHA heads -> 16/16
+        assert cfg.padded_num_heads == 16
+        assert cfg.padded_num_kv_heads == 16
+
+    def test_gqa_arch_keeps_kv(self):
+        cfg = get_config("arctic-480b")          # kv=8 divides 64
+        assert cfg.padded_num_heads == 64
+        assert cfg.padded_num_kv_heads == 8
+
+    def test_no_padding_when_divisible(self):
+        cfg = get_config("llama3-405b")
+        assert cfg.padded_num_heads == cfg.num_heads == 128
+
+    def test_padded_forward_finite_and_head_masked(self):
+        """Dead heads must not contribute: zeroing live wo rows zeroes the
+        whole attention output."""
+        cfg = get_config("qwen2-vl-7b").reduced(pad_heads_to=16)
+        model = build_model(cfg)
+        params = model.init(jax.random.key(0))
+        batch = input_specs(cfg, InputShape("t", 64, 2, "train"), abstract=False)
+        loss = model.loss(params, batch)
+        assert bool(jnp.isfinite(loss))
+        live = cfg.num_heads
+        wo = params["layers"]["attn"]["wo"]
+        assert float(jnp.sum(jnp.abs(wo[:, live:]))) == 0.0
+
+
+class TestWindows:
+    def test_window_equals_full_when_large(self):
+        q, k, v = _qkv(1, 512, 4, 2, 64)
+        a = L.attention_ref(q, k, v, causal=True, window=4096)
+        b = L.attention_ref(q, k, v, causal=True)
+        np.testing.assert_allclose(a, b, atol=1e-6)
+
+    def test_small_window_restricts(self):
+        q, k, v = _qkv(1, 256, 2, 2, 32)
+        a = L.attention_ref(q, k, v, causal=True, window=1)
+        # window=1: each position attends only itself -> output = v
+        np.testing.assert_allclose(a, v, atol=1e-5, rtol=1e-5)

@@ -1,0 +1,104 @@
+"""The trip-count-aware HLO cost model, validated on known-cost programs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch import hlo_cost
+
+
+def _cost_of(fn, *args):
+    compiled = jax.jit(fn).lower(*args).compile()
+    return hlo_cost.analyze(compiled.as_text())
+
+
+class TestFlops:
+    def test_single_matmul(self):
+        a = jnp.zeros((256, 512), jnp.float32)
+        b = jnp.zeros((512, 128), jnp.float32)
+        tot = _cost_of(lambda x, y: x @ y, a, b)
+        expect = 2 * 256 * 512 * 128
+        assert tot.flops == pytest.approx(expect, rel=0.01)
+
+    def test_scan_multiplies_by_trip_count(self):
+        a = jnp.zeros((128, 128), jnp.float32)
+
+        def f(x):
+            def body(c, _):
+                return c @ a, None
+            out, _ = jax.lax.scan(body, x, None, length=10)
+            return out
+
+        tot = _cost_of(f, jnp.zeros((128, 128), jnp.float32))
+        expect = 10 * 2 * 128 ** 3
+        assert tot.flops == pytest.approx(expect, rel=0.05)
+
+    def test_nested_scans_multiply(self):
+        a = jnp.zeros((128, 128), jnp.float32)
+
+        def f(x):
+            def inner(c, _):
+                return c @ a, None
+
+            def outer(c, _):
+                c, _ = jax.lax.scan(inner, c, None, length=4)
+                return c, None
+
+            out, _ = jax.lax.scan(outer, x, None, length=3)
+            return out
+
+        tot = _cost_of(f, jnp.zeros((128, 128), jnp.float32))
+        expect = 12 * 2 * 128 ** 3
+        assert tot.flops == pytest.approx(expect, rel=0.05)
+
+
+class TestBytes:
+    def test_elementwise_traffic(self):
+        x = jnp.zeros((1 << 20,), jnp.float32)
+        tot = _cost_of(lambda v: v * 2.0 + 1.0, x)
+        # read x + write out = 8 MiB (fused), small constant overhead ok
+        assert 0.8e7 <= tot.bytes <= 3e7
+
+    def test_scan_accumulates_bytes(self):
+        x = jnp.zeros((1 << 18,), jnp.float32)
+
+        def f(v):
+            def body(c, _):
+                return c * 1.5, None
+            out, _ = jax.lax.scan(body, v, None, length=8)
+            return out
+
+        tot = _cost_of(f, x)
+        single = 2 * x.size * 4
+        assert tot.bytes >= 0.8 * 8 * single
+
+
+class TestParsing:
+    def test_tuple_types_with_index_comments(self):
+        # regression: '/*index=5*/' inside tuple types broke the instruction
+        # regex and silently dropped all while-loops
+        line = ("  %while.1 = (s32[], bf16[1,2]{1,0}, /*index=2*/f32[3,4]{1,0}) "
+                "while(%tuple.1), condition=%cond.1, body=%body.1")
+        parsed = hlo_cost.HloCostModel._split_instr(line)
+        assert parsed is not None
+        name, ty, opcode, _ = parsed
+        assert opcode == "while"
+        assert "f32[3,4]" in ty
+
+    def test_collective_not_confused_by_operand_names(self):
+        # regression: 'fusion(%all-gather.3)' must NOT count as a collective
+        txt = """
+HloModule m, entry_computation_layout={()->f32[8]{0}}
+
+%fused.1 (p0: f32[8]) -> f32[8] {
+  %p0 = f32[8]{0} parameter(0)
+  ROOT %neg = f32[8]{0} negate(%p0)
+}
+
+ENTRY %main.1 () -> f32[8] {
+  %all-gather.3 = f32[8]{0} constant({1,1,1,1,1,1,1,1})
+  ROOT %fusion.1 = f32[8]{0} fusion(%all-gather.3), kind=kLoop, calls=%fused.1
+}
+"""
+        tot = hlo_cost.analyze(txt)
+        assert tot.collective_counts == {}

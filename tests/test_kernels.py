@@ -1,0 +1,174 @@
+"""Per-kernel allclose vs. the ref.py oracles, swept over shapes/dtypes.
+
+All kernels run in interpret mode (pl.pallas_call(..., interpret=True)):
+the kernel body executes in Python on CPU, which validates the block
+decomposition, index maps, scratch accumulation, and masking logic.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.masked_matmul import masked_matmul
+from repro.kernels.ssd_scan import ssd_scan
+
+RNG = np.random.default_rng(42)
+
+
+def _rand(shape, dtype):
+    return jnp.asarray(RNG.standard_normal(shape), dtype)
+
+
+def _tol(dtype):
+    return dict(atol=2e-2, rtol=2e-2) if dtype == jnp.bfloat16 else \
+        dict(atol=2e-5, rtol=2e-5)
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("b,s,h,kv,hd", [
+        (1, 256, 4, 4, 64),     # MHA
+        (2, 512, 8, 2, 64),     # GQA 4:1
+        (1, 256, 8, 1, 128),    # MQA
+        (2, 384, 6, 3, 32),     # non-pow2 seq (384 = 3 * 128)
+    ])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_causal(self, b, s, h, kv, hd, dtype):
+        q, k, v = (_rand((b, s, h, hd), dtype), _rand((b, s, kv, hd), dtype),
+                   _rand((b, s, kv, hd), dtype))
+        out = flash_attention(q, k, v, causal=True, block_q=128, block_k=128,
+                              interpret=True)
+        want = ref.flash_attention_ref(q, k, v, causal=True)
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(want, np.float32), **_tol(dtype))
+
+    @pytest.mark.parametrize("window", [64, 128, 256])
+    def test_sliding_window(self, window):
+        q = _rand((1, 512, 4, 64), jnp.float32)
+        k = _rand((1, 512, 2, 64), jnp.float32)
+        v = _rand((1, 512, 2, 64), jnp.float32)
+        out = flash_attention(q, k, v, causal=True, window=window,
+                              block_q=128, block_k=128, interpret=True)
+        want = ref.flash_attention_ref(q, k, v, causal=True, window=window)
+        np.testing.assert_allclose(out, want, atol=2e-5, rtol=2e-5)
+
+    def test_non_causal(self):
+        q = _rand((2, 256, 4, 64), jnp.float32)
+        k = _rand((2, 256, 4, 64), jnp.float32)
+        v = _rand((2, 256, 4, 64), jnp.float32)
+        out = flash_attention(q, k, v, causal=False, block_q=128, block_k=128,
+                              interpret=True)
+        want = ref.flash_attention_ref(q, k, v, causal=False)
+        np.testing.assert_allclose(out, want, atol=2e-5, rtol=2e-5)
+
+    def test_cross_lengths(self):
+        q = _rand((1, 128, 4, 64), jnp.float32)
+        k = _rand((1, 512, 2, 64), jnp.float32)
+        v = _rand((1, 512, 2, 64), jnp.float32)
+        out = flash_attention(q, k, v, causal=False, block_q=128, block_k=128,
+                              interpret=True)
+        want = ref.flash_attention_ref(q, k, v, causal=False)
+        np.testing.assert_allclose(out, want, atol=2e-5, rtol=2e-5)
+
+    @pytest.mark.parametrize("bq,bk", [(128, 256), (256, 128), (64, 64)])
+    def test_block_shape_invariance(self, bq, bk):
+        q = _rand((1, 512, 4, 64), jnp.float32)
+        k = _rand((1, 512, 2, 64), jnp.float32)
+        v = _rand((1, 512, 2, 64), jnp.float32)
+        out = flash_attention(q, k, v, causal=True, block_q=bq, block_k=bk,
+                              interpret=True)
+        want = ref.flash_attention_ref(q, k, v, causal=True)
+        np.testing.assert_allclose(out, want, atol=2e-5, rtol=2e-5)
+
+
+class TestDecodeAttention:
+    @pytest.mark.parametrize("b,s,h,kv,hd", [
+        (2, 512, 8, 8, 64),
+        (4, 1024, 8, 2, 128),
+        (1, 256, 16, 1, 64),
+    ])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_matches_ref(self, b, s, h, kv, hd, dtype):
+        q = _rand((b, 1, h, hd), dtype)
+        k = _rand((b, s, kv, hd), dtype)
+        v = _rand((b, s, kv, hd), dtype)
+        out = decode_attention(q, k, v, block_k=128, interpret=True)
+        want = ref.decode_attention_ref(q, k, v)
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(want, np.float32), **_tol(dtype))
+
+    def test_consistent_with_flash_last_position(self):
+        """Decoding the last token of a prefix == full attention's last row."""
+        b, s, h, kv, hd = 1, 256, 4, 2, 64
+        q = _rand((b, s, h, hd), jnp.float32)
+        k = _rand((b, s, kv, hd), jnp.float32)
+        v = _rand((b, s, kv, hd), jnp.float32)
+        full = ref.flash_attention_ref(q, k, v, causal=True)
+        dec = decode_attention(q[:, -1:], k, v, block_k=128, interpret=True)
+        np.testing.assert_allclose(dec[:, 0], full[:, -1], atol=2e-5, rtol=2e-5)
+
+
+class TestSSDScan:
+    @pytest.mark.parametrize("b,s,nh,p,n,chunk", [
+        (2, 256, 4, 8, 16, 64),
+        (1, 512, 2, 16, 8, 128),
+        (3, 128, 8, 4, 4, 32),
+    ])
+    def test_matches_sequential_ref(self, b, s, nh, p, n, chunk):
+        x = _rand((b, s, nh, p), jnp.float32)
+        bm = _rand((b, s, n), jnp.float32)
+        cm = _rand((b, s, n), jnp.float32)
+        dt = _rand((b, s, nh), jnp.float32)
+        al = _rand((nh,), jnp.float32) * 0.1
+        d = jnp.ones((nh,))
+        db = jnp.zeros((nh,))
+        out = ssd_scan(x, bm, cm, dt, al, d, db, chunk=chunk, interpret=True)
+        want = ref.ssd_scan_ref(x, bm, cm, dt, al, d, db)
+        np.testing.assert_allclose(out, want, atol=2e-4, rtol=2e-4)
+
+    def test_chunk_invariance(self):
+        b, s, nh, p, n = 1, 256, 2, 4, 8
+        args = (_rand((b, s, nh, p), jnp.float32), _rand((b, s, n), jnp.float32),
+                _rand((b, s, n), jnp.float32), _rand((b, s, nh), jnp.float32),
+                _rand((nh,), jnp.float32) * 0.1, jnp.ones((nh,)), jnp.zeros((nh,)))
+        a = ssd_scan(*args, chunk=32, interpret=True)
+        b_ = ssd_scan(*args, chunk=128, interpret=True)
+        np.testing.assert_allclose(a, b_, atol=2e-4, rtol=2e-4)
+
+
+class TestMaskedMatmul:
+    @pytest.mark.parametrize("m,k,n", [(128, 256, 512), (256, 128, 256)])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_matches_ref(self, m, k, n, dtype):
+        x = _rand((m, k), dtype)
+        w = _rand((k, n), dtype)
+        mask = jnp.asarray(RNG.integers(0, 2, n // 128), jnp.float32)
+        out = masked_matmul(x, w, mask, interpret=True)
+        want = ref.masked_matmul_ref(x, w, mask)
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(want, np.float32), **_tol(dtype))
+
+    def test_all_kept_equals_dense(self):
+        x = _rand((128, 128), jnp.float32)
+        w = _rand((128, 256), jnp.float32)
+        out = masked_matmul(x, w, jnp.ones((2,)), interpret=True)
+        np.testing.assert_allclose(out, x @ w, atol=2e-4, rtol=2e-4)
+
+    def test_all_pruned_is_zero(self):
+        x = _rand((128, 128), jnp.float32)
+        w = _rand((128, 256), jnp.float32)
+        out = masked_matmul(x, w, jnp.zeros((2,)), interpret=True)
+        assert float(jnp.max(jnp.abs(out))) == 0.0
+
+
+class TestOpsDispatch:
+    def test_ops_fallback_on_ragged_shapes(self):
+        """Non-divisible shapes fall back to the oracle (still correct)."""
+        q = _rand((1, 100, 4, 64), jnp.float32)
+        k = _rand((1, 100, 2, 64), jnp.float32)
+        v = _rand((1, 100, 2, 64), jnp.float32)
+        out = ops.flash_attention(q, k, v, causal=True)
+        want = ref.flash_attention_ref(q, k, v, causal=True)
+        np.testing.assert_allclose(out, want, atol=1e-5, rtol=1e-5)

@@ -1,0 +1,75 @@
+"""Non-IID degree (Formulas 2-3): unit + hypothesis property tests."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import niid
+
+
+def _dist(vals):
+    v = np.asarray(vals, np.float64) + 1e-9
+    return v / v.sum()
+
+
+dists = st.lists(st.floats(0.0, 1.0), min_size=4, max_size=4).filter(
+    lambda v: sum(v) > 1e-3).map(_dist)
+
+
+class TestKL:
+    def test_zero_for_identical(self):
+        p = jnp.asarray([0.25, 0.25, 0.5])
+        assert float(niid.kl_divergence(p, p)) == pytest.approx(0.0, abs=1e-6)
+
+    def test_known_value(self):
+        p = jnp.asarray([1.0, 0.0])
+        q = jnp.asarray([0.5, 0.5])
+        assert float(niid.kl_divergence(p, q)) == pytest.approx(np.log(2), abs=1e-5)
+
+    def test_handles_zero_entries(self):
+        p = jnp.asarray([0.5, 0.5, 0.0])
+        q = jnp.asarray([0.3, 0.3, 0.4])
+        assert np.isfinite(float(niid.kl_divergence(p, q)))
+
+
+class TestJS:
+    @given(dists, dists)
+    @settings(max_examples=50, deadline=None)
+    def test_nonnegative_symmetric_bounded(self, p, q):
+        a = float(niid.js_divergence(jnp.asarray(p), jnp.asarray(q)))
+        b = float(niid.js_divergence(jnp.asarray(q), jnp.asarray(p)))
+        assert a >= -1e-6
+        assert a == pytest.approx(b, abs=1e-5)
+        assert a <= np.log(2) + 1e-6
+
+    @given(dists)
+    @settings(max_examples=20, deadline=None)
+    def test_zero_iff_equal(self, p):
+        assert float(niid.js_divergence(jnp.asarray(p), jnp.asarray(p))) == \
+            pytest.approx(0.0, abs=1e-6)
+
+
+class TestDegrees:
+    def test_label_distribution(self):
+        y = jnp.asarray([0, 0, 1, 2])
+        d = niid.label_distribution(y, 4)
+        np.testing.assert_allclose(d, [0.5, 0.25, 0.25, 0.0], atol=1e-6)
+
+    def test_global_distribution_weighted(self):
+        dists = jnp.asarray([[1.0, 0.0], [0.0, 1.0]])
+        sizes = jnp.asarray([3.0, 1.0])
+        np.testing.assert_allclose(niid.global_distribution(dists, sizes),
+                                   [0.75, 0.25], atol=1e-6)
+
+    def test_more_skewed_has_higher_degree(self):
+        p_bar = jnp.asarray([0.25, 0.25, 0.25, 0.25])
+        mild = jnp.asarray([0.4, 0.3, 0.2, 0.1])
+        severe = jnp.asarray([1.0, 0.0, 0.0, 0.0])
+        assert float(niid.non_iid_degree(severe, p_bar)) > \
+            float(niid.non_iid_degree(mild, p_bar))
+
+    def test_round_distribution_selects(self):
+        dists = jnp.asarray([[1.0, 0.0], [0.0, 1.0], [0.5, 0.5]])
+        sizes = jnp.asarray([1.0, 1.0, 2.0])
+        out = niid.round_distribution(dists, sizes, jnp.asarray([0, 1]))
+        np.testing.assert_allclose(out, [0.5, 0.5], atol=1e-6)

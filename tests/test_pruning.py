@@ -1,0 +1,152 @@
+"""FedAP (Algorithm 3): rates, threshold, HRank selection, shrink."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.pruning import (
+    CoupledParam,
+    FedAPConfig,
+    PrunableLayer,
+    PruneSpec,
+    aggregate_rates,
+    expected_rate_from_spectrum,
+    feature_map_ranks,
+    filter_masks,
+    global_threshold,
+    per_layer_rates,
+    select_filters,
+    shrink_params,
+)
+
+
+class TestEigenGapRule:
+    def test_clear_gap_selected(self):
+        eigs = jnp.asarray([0.0, 0.1, 0.2, 10.0, 11.0])
+        # gap 0.2 -> 10.0 = 9.8 > 4 * 1.0 at index m=3 (ascending)
+        rate = expected_rate_from_spectrum(eigs, jnp.asarray(1.0))
+        assert float(rate) == pytest.approx(3 / 5)
+
+    def test_first_gap_not_largest_index(self):
+        """Paper: 'take the FIRST m_k' — two qualifying gaps, the earlier
+        one wins (regression: max-index selection pruned ~90%)."""
+        eigs = jnp.asarray([0.0, 0.1, 10.0, 10.1, 10.2, 50.0, 51.0, 52.0])
+        rate = expected_rate_from_spectrum(eigs, jnp.asarray(1.0))
+        assert float(rate) == pytest.approx(2 / 8)
+
+    def test_no_gap_means_no_pruning(self):
+        eigs = jnp.linspace(0.0, 1.0, 10)
+        rate = expected_rate_from_spectrum(eigs, jnp.asarray(5.0))
+        assert float(rate) == 0.0
+
+    def test_capped_at_max_rate(self):
+        eigs = jnp.asarray([0.0] * 9 + [1000.0])
+        rate = expected_rate_from_spectrum(eigs, jnp.asarray(0.001), max_rate=0.5)
+        assert float(rate) <= 0.5
+
+
+class TestFormula15:
+    def test_low_niid_dominates(self):
+        """A participant whose data is near-IID (small D) gets MORE weight."""
+        rates = jnp.asarray([0.9, 0.1])
+        sizes = jnp.asarray([100.0, 100.0])
+        niid = jnp.asarray([1e-6, 1.0])      # first participant near-IID
+        out = float(aggregate_rates(rates, sizes, niid))
+        assert out > 0.8
+
+    def test_size_weighting(self):
+        rates = jnp.asarray([0.9, 0.1])
+        sizes = jnp.asarray([1000.0, 1.0])
+        niid = jnp.asarray([0.5, 0.5])
+        assert float(aggregate_rates(rates, sizes, niid)) > 0.8
+
+    @given(st.lists(st.floats(0.0, 1.0), min_size=3, max_size=3))
+    @settings(max_examples=30, deadline=None)
+    def test_convex_combination(self, rates):
+        sizes = jnp.asarray([10.0, 20.0, 30.0])
+        niid = jnp.asarray([0.1, 0.2, 0.3])
+        out = float(aggregate_rates(jnp.asarray(rates), sizes, niid))
+        assert min(rates) - 1e-6 <= out <= max(rates) + 1e-6
+
+
+class TestThresholdAndLayerRates:
+    def _spec(self):
+        return PruneSpec(layers=(
+            PrunableLayer("a", ("a", "w"), 1),
+            PrunableLayer("b", ("b", "w"), 1),
+        ))
+
+    def test_global_threshold_quantile(self):
+        params = {"a": {"w": jnp.asarray([[0.1, 0.2, 0.3, 0.4]])},
+                  "b": {"w": jnp.asarray([[0.5, 0.6, 0.7, 0.8]])}}
+        thr = global_threshold(params, self._spec(), jnp.asarray(0.5))
+        assert float(thr) == pytest.approx(0.5)
+
+    def test_per_layer_rates_reflect_magnitudes(self):
+        params = {"a": {"w": jnp.asarray([[0.01, 0.02, 0.9, 0.9]])},
+                  "b": {"w": jnp.asarray([[0.9, 0.9, 0.9, 0.9]])}}
+        rates = per_layer_rates(params, self._spec(), jnp.asarray(0.5))
+        assert float(rates["a"]) == pytest.approx(0.5)
+        assert float(rates["b"]) == pytest.approx(0.0)
+
+
+class TestSelection:
+    def test_keeps_highest_scores(self):
+        scores = np.asarray([5.0, 1.0, 4.0, 2.0, 3.0, 0.0])
+        kept = select_filters(scores, 0.5)
+        assert set(kept) == {0, 2, 4}
+
+    def test_alignment_prunes_less_never_more(self):
+        scores = np.arange(256).astype(float)
+        kept = select_filters(scores, 0.3, align=128)
+        # 256 * 0.7 = 179.2 -> aligned UP to 256
+        assert len(kept) == 256 or len(kept) % 128 == 0
+        assert len(kept) >= 256 - int(0.3 * 256)
+
+    @given(st.integers(4, 64), st.floats(0.0, 0.95))
+    @settings(max_examples=40, deadline=None)
+    def test_min_keep(self, d, rate):
+        kept = select_filters(np.random.default_rng(0).random(d), rate)
+        assert 1 <= len(kept) <= d
+
+
+class TestShrink:
+    def test_coupled_shapes(self):
+        params = {
+            "conv": {"w": jnp.zeros((3, 3, 4, 16)), "b": jnp.zeros((16,))},
+            "next": {"w": jnp.zeros((3, 3, 16, 8))},
+        }
+        spec = PruneSpec(layers=(
+            PrunableLayer("conv", ("conv", "w"), 3,
+                          (CoupledParam(("conv", "b"), 0),
+                           CoupledParam(("next", "w"), 2))),
+        ))
+        kept = {"conv": np.asarray([0, 3, 7, 11])}
+        out = shrink_params(params, spec, kept)
+        assert out["conv"]["w"].shape == (3, 3, 4, 4)
+        assert out["conv"]["b"].shape == (4,)
+        assert out["next"]["w"].shape == (3, 3, 4, 8)
+
+    def test_masks_match_kept(self):
+        params = {"conv": {"w": jnp.zeros((3, 3, 4, 8))}}
+        spec = PruneSpec(layers=(PrunableLayer("conv", ("conv", "w"), 3),))
+        masks = filter_masks(params, spec, {"conv": np.asarray([1, 2])})
+        np.testing.assert_allclose(masks["conv"], [0, 1, 1, 0, 0, 0, 0, 0])
+
+
+class TestHRankScores:
+    def test_conv_rank_orders_by_information(self):
+        rng = np.random.default_rng(0)
+        b, hw, d = 4, 8, 3
+        rank1 = np.outer(rng.standard_normal(hw), rng.standard_normal(hw))
+        full = rng.standard_normal((hw, hw))
+        fmap = np.stack([np.zeros((hw, hw)), rank1, full], axis=-1)
+        fmap = np.broadcast_to(fmap, (b, hw, hw, d))
+        scores = feature_map_ranks(jnp.asarray(fmap))
+        assert float(scores[0]) < float(scores[1]) < float(scores[2])
+
+    def test_fc_energy(self):
+        fmap = jnp.asarray([[0.0, 1.0, 2.0]] * 5)
+        scores = feature_map_ranks(fmap)
+        assert float(scores[0]) < float(scores[1]) < float(scores[2])

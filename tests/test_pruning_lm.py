@@ -1,0 +1,74 @@
+"""FedAP on the transformer zoo (pruning_lm): shrink + still-runs tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import InputShape
+from repro.core.pruning_lm import fedap_lm, prune_lm_experts, prune_lm_ffn
+from repro.models.api import build_model, input_specs
+from repro.utils import tree_size
+
+TRAIN = InputShape("t", 64, 2, "train")
+
+
+class TestFFNPrune:
+    @pytest.mark.parametrize("arch", ["olmo-1b", "qwen2-vl-7b", "zamba2-1.2b"])
+    def test_shrinks_and_runs(self, arch):
+        cfg = get_config(arch).reduced()
+        model = build_model(cfg)
+        params = model.init(jax.random.key(0))
+        before = tree_size(params)
+        new_params, new_cfg, info = prune_lm_ffn(params, cfg, 0.4, align=64)
+        assert new_cfg.d_ff < cfg.d_ff
+        assert info["realized_rate"] <= 0.4 + 1e-6    # p_l <= p*_l
+        assert tree_size(new_params) < before
+        new_model = build_model(new_cfg)
+        batch = input_specs(new_cfg, TRAIN, abstract=False)
+        loss = new_model.loss(new_params, batch)
+        assert bool(jnp.isfinite(loss))
+
+    def test_keeps_high_norm_units(self):
+        cfg = get_config("olmo-1b").reduced()
+        model = build_model(cfg)
+        params = model.init(jax.random.key(0))
+        # inflate the norm of units [0:8] in every layer — they must survive
+        wi = params["layers"]["mlp"]["wi"]
+        params["layers"]["mlp"]["wi"] = wi.at[:, :, :8].mul(100.0)
+        new_params, new_cfg, _ = prune_lm_ffn(params, cfg, 0.5, align=None)
+        big = jnp.linalg.norm(new_params["layers"]["mlp"]["wi"], axis=1)
+        # the 8 inflated units dominate the kept set's norm mass
+        assert float(jnp.max(big)) > 50.0
+
+
+class TestExpertPrune:
+    @pytest.mark.parametrize("arch", ["arctic-480b", "llama4-maverick-400b-a17b"])
+    def test_moe_prunes_experts(self, arch):
+        cfg = get_config(arch).reduced()
+        model = build_model(cfg)
+        params = model.init(jax.random.key(0))
+        new_params, new_cfg, info = prune_lm_experts(params, cfg, 0.5,
+                                                     min_keep=2)
+        assert new_cfg.moe.num_experts < cfg.moe.num_experts
+        assert new_cfg.moe.num_experts >= new_cfg.moe.top_k
+        new_model = build_model(new_cfg)
+        batch = input_specs(new_cfg, TRAIN, abstract=False)
+        loss = new_model.loss(new_params, batch)
+        assert bool(jnp.isfinite(loss))
+
+
+class TestDispatch:
+    def test_moe_routes_to_expert_prune(self):
+        cfg = get_config("arctic-480b").reduced()
+        model = build_model(cfg)
+        params = model.init(jax.random.key(0))
+        _, new_cfg, _ = fedap_lm(params, cfg, 0.3)
+        assert new_cfg.moe.num_experts <= cfg.moe.num_experts
+
+    def test_dense_routes_to_ffn_prune(self):
+        cfg = get_config("olmo-1b").reduced()
+        model = build_model(cfg)
+        params = model.init(jax.random.key(0))
+        _, new_cfg, _ = fedap_lm(params, cfg, 0.3, align=64)
+        assert new_cfg.d_ff < cfg.d_ff

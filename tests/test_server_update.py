@@ -1,0 +1,101 @@
+"""FedDU (Formulas 4-7): tau_eff dynamics + normalized-gradient identity."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.server_update import (
+    FedDUConfig,
+    f_prime,
+    feddu_apply,
+    normalized_server_gradient,
+    normalized_server_gradient_scan,
+    tau_eff,
+)
+
+
+def _te(cfg=FedDUConfig(), **kw):
+    base = dict(acc=0.5, round_idx=0, n0=2000.0, n_prime=4000.0,
+                d_round=0.3, d_server=0.01, tau=100)
+    base.update(kw)
+    return float(tau_eff(cfg, **base))
+
+
+class TestTauEff:
+    def test_decays_geometrically(self):
+        cfg = FedDUConfig(decay=0.9)
+        vals = [_te(cfg, round_idx=t) for t in range(5)]
+        ratios = [vals[i + 1] / vals[i] for i in range(4)]
+        np.testing.assert_allclose(ratios, 0.9, rtol=1e-5)
+
+    def test_high_accuracy_shrinks_update(self):
+        assert _te(acc=0.9) < _te(acc=0.1)
+
+    def test_iid_server_data_gets_more_steps(self):
+        # smaller D(P0) -> larger tau_eff (server data closer to global dist)
+        assert _te(d_server=1e-6) > _te(d_server=0.5)
+
+    def test_skewed_round_gets_more_server_help(self):
+        # larger D(Pbar'): the selected devices are unrepresentative
+        assert _te(d_round=0.6) > _te(d_round=0.05)
+
+    def test_bounded_by_C_decay_tau(self):
+        cfg = FedDUConfig(C=1.0, decay=0.99)
+        assert _te(cfg, acc=0.0, d_server=0.0, round_idx=0) <= 100.0 + 1e-5
+
+    def test_static_override(self):
+        cfg = FedDUConfig(static_tau_eff=7.0)
+        assert _te(cfg, acc=0.123, round_idx=9) == pytest.approx(7.0)
+
+    @given(st.floats(0.0, 1.0), st.integers(0, 200))
+    @settings(max_examples=40, deadline=None)
+    def test_nonnegative(self, acc, t):
+        assert _te(acc=acc, round_idx=t) >= 0.0
+
+    def test_f_prime_variants(self):
+        assert float(f_prime(0.3, "1-acc")) == pytest.approx(0.7)
+        assert float(f_prime(0.5, "inv")) == pytest.approx(2.0, rel=1e-4)
+
+
+class TestNormalizedGradient:
+    def _setup(self):
+        def grad_fn(p, batch):
+            return jax.tree.map(lambda x: x * 0.1 + batch, p)
+        params = {"w": jnp.ones((3,))}
+        batches = [jnp.asarray(0.5), jnp.asarray(-0.2), jnp.asarray(0.1)]
+        return params, batches, grad_fn
+
+    def test_telescoping_equals_mean_gradient_path(self):
+        """(w0 - w_end)/(tau*eta) == mean of per-step gradients (exact for SGD)."""
+        params, batches, grad_fn = self._setup()
+        eta = 0.01
+        g = normalized_server_gradient(params, batches, grad_fn, eta)
+        # explicit path
+        w = params
+        gs = []
+        for b in batches:
+            gi = grad_fn(w, b)
+            gs.append(gi)
+            w = jax.tree.map(lambda p, x: p - eta * x, w, gi)
+        mean = jax.tree.map(lambda *xs: sum(xs) / len(xs), *gs)
+        np.testing.assert_allclose(g["w"], mean["w"], rtol=1e-5)
+
+    def test_scan_variant_matches_loop(self):
+        params, batches, grad_fn = self._setup()
+        stack = jnp.stack(batches)
+        a = normalized_server_gradient(params, batches, grad_fn, 0.05)
+        b = normalized_server_gradient_scan(params, stack, grad_fn, 0.05)
+        np.testing.assert_allclose(a["w"], b["w"], rtol=1e-5)
+
+    def test_feddu_apply_direction(self):
+        w = {"w": jnp.ones((2,))}
+        g = {"w": jnp.ones((2,))}
+        out = feddu_apply(w, g, t_eff=2.0, eta=0.1)
+        np.testing.assert_allclose(out["w"], 1.0 - 0.2, rtol=1e-6)
+
+    def test_zero_tau_eff_is_identity(self):
+        w = {"w": jnp.ones((2,))}
+        g = {"w": jnp.full((2,), 13.0)}
+        out = feddu_apply(w, g, t_eff=0.0, eta=0.1)
+        np.testing.assert_allclose(out["w"], w["w"], rtol=1e-6)

@@ -1,0 +1,113 @@
+"""Sharding plan + PartitionSpec rules (single-device mesh stand-ins)."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.models.api import build_model
+from repro.sharding.specs import MeshPlan, _spec_for, make_plan, param_specs
+
+
+class FakeMesh:
+    """Duck-typed mesh: only .shape and .size are consulted by the specs."""
+
+    def __init__(self, shape: dict):
+        self.shape = shape
+        self.size = 1
+        for v in shape.values():
+            self.size *= v
+
+
+def plan_for(arch, multi_pod=False):
+    mesh = FakeMesh({"pod": 2, "data": 16, "model": 16} if multi_pod
+                    else {"data": 16, "model": 16})
+    return make_plan(mesh, get_config(arch))
+
+
+class TestPlan:
+    def test_data_client_arch(self):
+        p = plan_for("olmo-1b")
+        assert p.client_axes == ("data",)
+        assert p.num_clients == 16
+        assert p.fsdp_axes == ()
+
+    def test_data_client_multipod_extends_clients(self):
+        p = plan_for("olmo-1b", multi_pod=True)
+        assert p.client_axes == ("pod", "data")
+        assert p.num_clients == 32
+
+    def test_pod_client_arch_single_pod(self):
+        p = plan_for("llama3-405b")
+        assert p.client_axes == ()
+        assert p.num_clients == 1
+        assert p.fsdp_axes == ("data",)
+        assert p.batch_axes == ("data",)
+
+    def test_pod_client_arch_multi_pod(self):
+        p = plan_for("llama3-405b", multi_pod=True)
+        assert p.client_axes == ("pod",)
+        assert p.num_clients == 2
+
+
+class TestSpecRules:
+    def test_divisible_tp_dim_sharded(self):
+        p = plan_for("llama3-405b")
+        spec = _spec_for((16384, 128, 128), ("embed", "heads", "head_dim"), p,
+                         client_leading=False)
+        assert spec == P("data", "model", None)
+
+    def test_non_divisible_falls_back_to_replication(self):
+        p = plan_for("whisper-small")
+        # whisper: 12 heads on a 16-way model axis -> replicate
+        spec = _spec_for((768, 12, 64), ("embed", "heads", "head_dim"), p,
+                         client_leading=False)
+        assert spec == P(None, None, None)
+
+    def test_vocab_sharded_when_divisible(self):
+        p = plan_for("llama3-405b")
+        spec = _spec_for((128256, 16384), ("vocab", "embed"), p,
+                         client_leading=False)
+        assert spec == P("model", "data")
+
+    def test_experts_sharded(self):
+        p = plan_for("arctic-480b")
+        spec = _spec_for((128, 7168, 4864),
+                         ("experts", "embed", "expert_mlp"), p,
+                         client_leading=False)
+        assert spec[0] == "model"   # experts over TP axis (expert parallel)
+        assert spec[1] == "data"    # fsdp
+
+    def test_no_double_axis_use(self):
+        """A mesh axis must not shard two dims of one tensor."""
+        p = plan_for("deepseek-67b")
+        spec = _spec_for((22016, 22016), ("mlp", "expert_mlp"), p,
+                         client_leading=False)
+        used = [s for s in spec if s is not None]
+        assert len(set(used)) == len(used)
+
+
+class TestParamSpecsTree:
+    @pytest.mark.parametrize("arch", ["olmo-1b", "arctic-480b", "zamba2-1.2b",
+                                      "whisper-small", "xlstm-125m"])
+    def test_full_tree_covered(self, arch):
+        cfg = get_config(arch)
+        model = build_model(cfg)
+        shapes = model.param_shapes()
+        plan = plan_for(arch)
+        specs = param_specs(shapes, model.axes(), plan)
+        n_shapes = len(jax.tree.leaves(shapes))
+        n_specs = len(jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P)))
+        assert n_shapes == n_specs
+        # every spec is consistent with its tensor rank and divisibility
+        for s, sp in zip(jax.tree.leaves(shapes),
+                         jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))):
+            assert len(sp) <= len(s.shape)
+            for dim, part in zip(s.shape, tuple(sp)):
+                if part is None:
+                    continue
+                axes = part if isinstance(part, tuple) else (part,)
+                size = 1
+                for a in axes:
+                    size *= plan.mesh.shape[a]
+                assert dim % size == 0, (arch, s.shape, sp)
