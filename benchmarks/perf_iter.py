@@ -13,6 +13,15 @@ Variants (environment/config knobs; see EXPERIMENTS.md §Perf):
   remat_dots  — cfg.remat='dots' (save matmul outputs in the bwd)
   moe_cap1    — MoE capacity_factor 1.0 (vs 1.25)
   block2k     — attention q-block 2048 (vs 1024)
+
+FL engine benchmark (no arch/shape needed; emits BENCH_fl_engine.json):
+
+  PYTHONPATH=src python -m benchmarks.perf_iter --fl-engine
+
+compares rounds/sec of the pre-refactor architecture (host-side NumPy
+client sampling + one jitted round dispatch per round) against the
+scan-compiled engine (device-side sampling, one lax.scan program for the
+whole run) on the simulation-scale FedDUMAP configuration.
 """
 import argparse
 import dataclasses
@@ -38,14 +47,163 @@ VARIANTS = {
 }
 
 
+def bench_fl_engine(out_dir: str, *, num_rounds: int = 30) -> dict:
+    """Rounds/sec: per-round Python dispatch (the pre-refactor driver
+    architecture: host np.random batch sampling + one jitted call per
+    round) vs. the scan-compiled engine (device-side sampling, one
+    lax.scan program).
+
+    Two workloads bracket the regimes:
+      cnn  — the paper's simulation CNN; per-round compute dominates, so
+             the two architectures tie on a single CPU device (the scan
+             win here is on accelerators, where every host round-trip
+             stalls the device);
+      mlp  — a tiny model where per-round compute is ~ms; orchestration
+             (host sampling, H2D transfers, dispatch) dominates and the
+             scan engine's advantage is directly visible.
+    """
+    import time
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import engine, feddumap_config, FederatedTrainer
+    from repro.data import build_federated_data
+    from repro.data.synthetic import SyntheticSpec
+    from repro.models import SimpleCNN
+
+    class TinyMLP:
+        """192 -> 32 -> 10 MLP over the flattened synthetic images."""
+
+        def init(self, rng):
+            k1, k2 = jax.random.split(rng)
+            d = 8 * 8 * 3
+            return {
+                "w1": jax.random.normal(k1, (d, 32)) * (2.0 / d) ** 0.5,
+                "b1": jnp.zeros((32,)),
+                "w2": jax.random.normal(k2, (32, 10)) * 0.25,
+                "b2": jnp.zeros((10,)),
+            }
+
+        def loss_and_acc(self, params, x, y):
+            from repro.models.cnn import softmax_xent_acc
+            h = jax.nn.relu(x.reshape(x.shape[0], -1) @ params["w1"]
+                            + params["b1"])
+            return softmax_xent_acc(h @ params["w2"] + params["b2"], y)
+
+    spec = SyntheticSpec(num_classes=10, image_shape=(8, 8, 3),
+                         train_size=3000, test_size=300, noise_scale=0.5)
+    data = build_federated_data(num_clients=20, server_fraction=0.1,
+                                device_pool=2000, spec=spec)
+    cnn = SimpleCNN(num_classes=10, image_shape=(8, 8, 3),
+                    channels=(8, 8, 8), fc_width=16)
+    cfg = feddumap_config(num_clients=20, clients_per_round=5, local_epochs=1,
+                          batch_size=10, lr=0.05)
+
+    def one_workload(model):
+        trainer = FederatedTrainer(model, data, cfg)
+
+        # scan engine: one compiled lax.scan over all rounds
+        trainer.run(num_rounds, eval_every=num_rounds)          # compile
+        t0 = time.perf_counter()
+        trainer.run(num_rounds, eval_every=num_rounds)
+        scan_s = time.perf_counter() - t0
+
+        # legacy architecture: host np.random sampling + one round_step
+        # dispatch per round (what core/rounds.py did before the refactor)
+        rng = np.random.default_rng(cfg.seed)
+        n_k = data.client_x.shape[1]
+        steps = max(1, n_k // cfg.batch_size) * cfg.local_epochs
+        n0 = data.server_x.shape[0]
+        tau = max(1, n0 // cfg.server_batch_size) * cfg.server_epochs
+        d_dev = trainer._device_data()
+
+        def host_round_batch():
+            from repro.core import niid
+            sel = rng.choice(cfg.num_clients, cfg.clients_per_round,
+                             replace=False)
+            xs, ys = [], []
+            for k in sel:
+                idx = np.concatenate([rng.permutation(n_k)
+                                      for _ in range(cfg.local_epochs + 1)]
+                                     )[: steps * cfg.batch_size]
+                xs.append(data.client_x[k][idx].reshape(
+                    steps, cfg.batch_size, *data.client_x.shape[2:]))
+                ys.append(data.client_y[k][idx].reshape(steps, cfg.batch_size))
+            sidx = np.concatenate([rng.permutation(n0)
+                                   for _ in range(cfg.server_epochs + 1)]
+                                  )[: tau * cfg.server_batch_size]
+            p_round = niid.round_distribution(d_dev["client_dists"],
+                                              d_dev["sizes"], jnp.asarray(sel))
+            return {
+                "client": (jnp.asarray(np.stack(xs)),
+                           jnp.asarray(np.stack(ys))),
+                "sizes": jnp.asarray(data.sizes[sel], jnp.float32),
+                "server": (jnp.asarray(data.server_x[sidx].reshape(
+                    tau, cfg.server_batch_size, *data.server_x.shape[1:])),
+                    jnp.asarray(data.server_y[sidx].reshape(
+                        tau, cfg.server_batch_size), jnp.int32)),
+                "d_round": niid.non_iid_degree(p_round, d_dev["p_bar"]),
+                "d_server": d_dev["d_server"],
+                "n0": jnp.asarray(float(n0), jnp.float32),
+            }
+
+        params = model.init(jax.random.key(cfg.seed))
+        state = engine.init_round_state(params, trainer.engine_config)
+        state, _ = trainer.round_step(state, host_round_batch())    # compile
+        jax.block_until_ready(state)
+        t0 = time.perf_counter()
+        for _ in range(num_rounds):
+            state, _ = trainer.round_step(state, host_round_batch())
+        jax.block_until_ready(state)
+        loop_s = time.perf_counter() - t0
+
+        return {
+            "local_steps": steps, "server_tau": tau,
+            "python_loop_rounds_per_s": num_rounds / loop_s,
+            "scan_rounds_per_s": num_rounds / scan_s,
+            "speedup": loop_s / scan_s,
+        }
+
+    rec = {
+        "bench": "fl_engine",
+        "num_rounds": num_rounds,
+        "config": {"num_clients": cfg.num_clients,
+                   "clients_per_round": cfg.clients_per_round,
+                   "algorithm": "feddumap"},
+        "workloads": {"cnn": one_workload(cnn), "mlp": one_workload(TinyMLP())},
+    }
+    out = Path(out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+    path = out / "BENCH_fl_engine.json"
+    path.write_text(json.dumps(rec, indent=2))
+    for name, w in rec["workloads"].items():
+        print(f"fl_engine[{name}]: python-loop "
+              f"{w['python_loop_rounds_per_s']:.2f} rounds/s  scan "
+              f"{w['scan_rounds_per_s']:.2f} rounds/s  "
+              f"speedup {w['speedup']:.2f}x")
+    print(f"-> {path}")
+    return rec
+
+
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--shape", required=True)
-    ap.add_argument("--variant", required=True, choices=list(VARIANTS))
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--variant", choices=list(VARIANTS))
     ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--fl-engine", action="store_true",
+                    help="rounds/sec: python-loop driver vs. scan engine")
+    ap.add_argument("--rounds", type=int, default=30)
     ap.add_argument("--out", default="benchmarks/results/perf")
     args = ap.parse_args()
+
+    if args.fl_engine:
+        bench_fl_engine(args.out, num_rounds=args.rounds)
+        return
+    if not (args.arch and args.shape and args.variant):
+        ap.error("--arch/--shape/--variant are required without --fl-engine")
 
     spec = VARIANTS[args.variant]
     for k, v in spec.get("env", {}).items():

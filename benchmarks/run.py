@@ -76,7 +76,7 @@ def bench_round_step():
     data = build_federated_data(num_clients=10, server_fraction=0.1,
                                 device_pool=2000, spec=spec)
     model = SimpleCNN(num_classes=10, image_shape=(10, 10, 3))
-    from repro.core.momentum import init_server_momentum
+    from repro.core import engine
 
     for name, cfg in [
         ("fedavg", baselines.fedavg_config(num_clients=10, clients_per_round=5,
@@ -88,16 +88,19 @@ def bench_round_step():
     ]:
         tr = FederatedTrainer(model, data, cfg)
         params = model.init(jax.random.key(0))
-        sm = init_server_momentum(params)
-        gm = init_server_momentum(params)
-        sel = np.arange(5)
-        xs, ys = zip(*[tr._client_batches(k) for k in sel])
-        cx, cy = jnp.asarray(np.stack(xs)), jnp.asarray(np.stack(ys))
-        sxs, sys_ = tr._server_batches()
-        args = (params, sm, gm, cx, cy, jnp.ones(5), jnp.asarray(sxs),
-                jnp.asarray(sys_), jnp.float32(0.3), jnp.float32(0.01),
-                jnp.float32(200.0), jnp.float32(0), jnp.float32(0.05))
-        us = _timeit(lambda *a: tr._round(*a)[0], *args, iters=5, warmup=2)
+        state = engine.init_round_state(params, tr.engine_config)
+        data_dev = tr._device_data()
+        n_k = data.client_x.shape[1]
+        n0 = data.server_x.shape[0]
+        batch = engine.sample_round_batches(
+            jax.random.key(1), data_dev,
+            clients_per_round=cfg.clients_per_round,
+            batch_size=cfg.batch_size,
+            local_steps=max(1, n_k // cfg.batch_size) * cfg.local_epochs,
+            server_batch=cfg.server_batch_size,
+            server_tau=max(1, n0 // cfg.server_batch_size) * cfg.server_epochs)
+        us = _timeit(lambda s, b: tr.round_step(s, b)[0]["params"],
+                     state, batch, iters=5, warmup=2)
         _row(f"fl_round_{name}", us, f"rounds/s={1e6 / us:.2f}")
 
 

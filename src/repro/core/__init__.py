@@ -5,18 +5,34 @@ Public surface:
   server_update   — FedDU dynamic server update, Formulas 4-7
   momentum        — FedDUM decoupled two-sided momentum, Formulas 8/11/12
   pruning, fedap  — FedAP layer-adaptive structured pruning, Algorithm 3
-  rounds          — the 6-step federated round engine
+  engine          — the unified scan/shard_map-safe round (round_core)
+  ref_engine      — pure-NumPy oracle for differential-testing the engine
+  rounds          — scan-compiled simulation driver over the engine
   baselines       — FedAvg / Data-sharing / Hybrid-FL / ServerM / DeviceM /
                     FedDA / FedDF / FedKT / IMC / PruneFL / HRank
 """
-from repro.core import baselines, fedap, momentum, niid, pruning, pruning_lm, rounds, server_update
+from repro.core import (
+    baselines,
+    engine,
+    fedap,
+    momentum,
+    niid,
+    pruning,
+    pruning_lm,
+    ref_engine,
+    rounds,
+    server_update,
+)
+from repro.core.engine import EngineConfig, init_round_state, round_core
 from repro.core.rounds import FederatedTrainer, FLConfig, feddumap_config
 from repro.core.server_update import FedDUConfig, tau_eff
 from repro.core.momentum import FedDUMConfig
 from repro.core.pruning import FedAPConfig, PruneSpec, PrunableLayer, CoupledParam
 
 __all__ = [
-    "baselines", "fedap", "momentum", "niid", "pruning", "pruning_lm", "rounds", "server_update",
+    "baselines", "engine", "fedap", "momentum", "niid", "pruning", "pruning_lm",
+    "ref_engine", "rounds", "server_update",
+    "EngineConfig", "init_round_state", "round_core",
     "FederatedTrainer", "FLConfig", "feddumap_config",
     "FedDUConfig", "FedDUMConfig", "FedAPConfig",
     "PruneSpec", "PrunableLayer", "CoupledParam", "tau_eff",

@@ -1,0 +1,236 @@
+"""The unified federated round engine — ONE implementation of the paper's
+round (steps 1-5 of Section 3.1), shared by every execution path.
+
+``round_core`` is a pure function of (config, model fns, state, batch) and is
+safe under ``jit``, ``lax.scan``, ``vmap`` and ``shard_map``:
+
+  * the simulation driver (`repro.core.rounds.FederatedTrainer`) scans it
+    over rounds, with client selection and batch sampling done ON DEVICE
+    through `jax.random` keys threaded in the scan carry — no host sync;
+  * the pod-scale SPMD path (`repro.launch.steps.make_fl_train_step`) wraps
+    it once per mesh program and shard_maps it via `sharding/fl_specs.py`.
+
+Model access is abstracted to two callables over an opaque batch pytree:
+
+  grad_fn(params, batch)          -> grads            (local/server SGD)
+  loss_and_acc_fn(params, batch)  -> (loss, acc)      (Formula-7 acc gate)
+
+The Formula-7 accuracy gate is taken from the FIRST server step's own
+forward (``value_and_grad`` with aux) rather than a separate evaluation
+pass over the full server set — one server-batch forward saved per round
+(§Perf iteration B2).  The pure-NumPy oracle in `repro.core.ref_engine`
+implements the same semantics naively and is the differential-test target.
+
+Round state is a dict ``{"params", "server_m", ["global_m"], "round"}``;
+``global_m`` is present only for ``local_momentum == "communicated"``
+(FedDA), where the globally-aggregated momentum buffer is broadcast back
+to the devices (2x communication — the baseline FedDUM's restart removes).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.momentum import (
+    FedDUMConfig,
+    server_momentum_step,
+    server_pseudo_gradient,
+)
+from repro.core.server_update import FedDUConfig, feddu_apply, tau_eff
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Algorithm switches of the unified round — covers FedAvg / FedDU /
+    FedDUM / FedDA / FedDUMAP (FedAP prunes BETWEEN rounds; see rounds.py)."""
+
+    lr: float = 0.1                 # eta: local AND server SGD step size
+    lr_decay: float = 1.0           # per-round geometric decay (paper 4.1)
+    use_server_update: bool = True  # FedDU (Formulas 4-7)
+    local_momentum: str = "none"    # none | restart | communicated
+    server_momentum: bool = False   # FedDUM server SGDM (Formulas 8/12)
+    feddu: FedDUConfig = dataclasses.field(default_factory=FedDUConfig)
+    feddum: FedDUMConfig = dataclasses.field(default_factory=FedDUMConfig)
+
+    def __post_init__(self):
+        if self.local_momentum not in ("none", "restart", "communicated"):
+            raise ValueError(f"unknown local_momentum: {self.local_momentum}")
+
+
+def init_round_state(params: Any, cfg: EngineConfig) -> dict:
+    """{"params", "server_m", ["global_m"], "round"} — the scan carry."""
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    state = {"params": params, "server_m": zeros,
+             "round": jnp.zeros((), jnp.float32)}
+    if cfg.local_momentum == "communicated":
+        state["global_m"] = jax.tree.map(jnp.copy, zeros)
+    return state
+
+
+def local_train(cfg: EngineConfig, grad_fn: Callable, params: Any, m0: Any,
+                batches: Any, lr) -> tuple[Any, Any]:
+    """E local epochs on ONE client (Formula 11 when momentum is on).
+
+    ``batches`` is a pytree with a leading [steps] axis; scanned, so the
+    local loop never unrolls into the HLO.
+    """
+    use_m = cfg.local_momentum != "none"
+    beta = cfg.feddum.beta_local
+
+    def body(carry, batch):
+        p, m = carry
+        g = grad_fn(p, batch)
+        if use_m:
+            m = jax.tree.map(
+                lambda mi, gi: beta * mi + (1 - beta) * gi.astype(jnp.float32),
+                m, g)
+            upd = m
+        else:
+            upd = g
+        p = jax.tree.map(lambda pi, u: (pi - lr * u).astype(pi.dtype), p, upd)
+        return (p, m), None
+
+    (params, m), _ = jax.lax.scan(body, (params, m0), batches)
+    return params, m
+
+
+def round_core(cfg: EngineConfig, grad_fn: Callable, loss_and_acc_fn: Callable,
+               state: dict, batch: dict) -> tuple[dict, dict]:
+    """One full federated round (paper steps 2-5), pure and scan-safe.
+
+    batch:
+      client    pytree, leading dims [C, steps, ...] (per-client batches)
+      sizes     [C] f32 n_k
+      server    pytree, leading dim [tau, ...] (server SGD batches)
+      d_round   D(Pbar'^t) — non-IID degree of this round's selection
+      d_server  D(P0)      — non-IID degree of the server data
+      n0        scalar f32 — number of server samples
+
+    Returns (new_state, {"tau_eff", "server_acc"}).
+    """
+    params = state["params"]
+    lr = cfg.lr * (cfg.lr_decay ** state["round"])
+
+    # (2) local epochs, vmapped over the client dim — clients diverge inside
+    # the program; there is NO collective over the client axis here.
+    if cfg.local_momentum == "communicated":
+        m0 = state["global_m"]                 # FedDA: broadcast momentum
+    else:
+        m0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    locals_, local_ms = jax.vmap(
+        lambda b: local_train(cfg, grad_fn, params, m0, b, lr))(batch["client"])
+
+    # (3-4) upload + FedAvg: ONE weighted reduction over the client axis.
+    w = batch["sizes"].astype(jnp.float32)
+    w = w / jnp.sum(w)
+    agg = lambda l: jnp.einsum(
+        "c,c...->...", w, l.astype(jnp.float32)).astype(l.dtype)
+    w_half = jax.tree.map(agg, locals_)
+    new_global_m = (jax.tree.map(agg, local_ms)
+                    if cfg.local_momentum == "communicated" else None)
+
+    # (5a) FedDU dynamic server update (Formulas 4-7).  acc comes from the
+    # FIRST server step's own forward — no separate evaluation pass.
+    if cfg.use_server_update:
+        tau = jax.tree.leaves(batch["server"])[0].shape[0]
+        la_grad = jax.value_and_grad(loss_and_acc_fn, has_aux=True)
+
+        def sstep(carry, b):
+            p, acc0, is_first = carry
+            (_, acc), g = la_grad(p, b)
+            acc0 = jnp.where(is_first, acc, acc0)
+            p = jax.tree.map(lambda pi, gi: (pi - lr * gi).astype(pi.dtype), p, g)
+            return (p, acc0, jnp.zeros((), bool)), None
+
+        (w_end, acc, _), _ = jax.lax.scan(
+            sstep, (w_half, jnp.zeros(()), jnp.ones((), bool)), batch["server"])
+        # Formula 6 via the telescoping identity: mean path gradient.
+        g0 = jax.tree.map(
+            lambda a, b_: (a.astype(jnp.float32) - b_.astype(jnp.float32))
+            / (tau * lr), w_half, w_end)
+        t_eff = tau_eff(cfg.feddu, acc=acc, round_idx=state["round"],
+                        n0=batch["n0"], n_prime=jnp.sum(batch["sizes"]),
+                        d_round=batch["d_round"], d_server=batch["d_server"],
+                        tau=tau)
+        proposed = feddu_apply(w_half, g0, t_eff, lr)
+    else:
+        proposed = w_half
+        t_eff = jnp.zeros(())
+        acc = jnp.zeros(())
+
+    # (5b) FedDUM server momentum on the pseudo-gradient (Formulas 8/12).
+    if cfg.server_momentum:
+        pseudo = server_pseudo_gradient(params, proposed)
+        new_params, new_server_m = server_momentum_step(
+            params, state["server_m"], pseudo, cfg.feddum)
+    else:
+        new_params, new_server_m = proposed, state["server_m"]
+
+    new_state = {"params": new_params, "server_m": new_server_m,
+                 "round": state["round"] + 1}
+    if cfg.local_momentum == "communicated":
+        new_state["global_m"] = new_global_m
+    return new_state, {"tau_eff": t_eff, "server_acc": acc}
+
+
+# ---------------------------------------------------------------------------
+# Device-side sampling — jax.random replaces the host np.random permutations
+# ---------------------------------------------------------------------------
+
+def sample_clients(key: jax.Array, num_clients: int, k: int) -> jax.Array:
+    """Step (1): D^t — k distinct client indices, drawn on device."""
+    return jax.random.choice(key, num_clients, (k,), replace=False)
+
+
+def epoch_indices(key: jax.Array, n: int, count: int) -> jax.Array:
+    """``count`` sample indices drawn as repeated without-replacement
+    epochs over ``n`` samples (the paper's epoch semantics), on device."""
+    reps = -(-count // n)  # ceil
+    perms = jax.vmap(lambda k: jax.random.permutation(k, n))(
+        jax.random.split(key, reps))
+    return perms.reshape(-1)[:count]
+
+
+def sample_round_batches(key: jax.Array, data: dict, *, clients_per_round: int,
+                         batch_size: int, local_steps: int, server_batch: int,
+                         server_tau: int) -> dict:
+    """Builds one round's ``round_core`` batch entirely on device.
+
+    data (all jnp, see FederatedData.device_arrays):
+      client_x [N, n_k, ...], client_y [N, n_k], sizes [N],
+      client_dists [N, classes], p_bar [classes], d_server scalar,
+      server_x [n0, ...], server_y [n0].
+    """
+    from repro.core import niid
+
+    k_sel, k_cl, k_srv = jax.random.split(key, 3)
+    num_clients, n_k = data["client_y"].shape
+    n0 = data["server_y"].shape[0]
+
+    sel = sample_clients(k_sel, num_clients, clients_per_round)
+    count = local_steps * batch_size
+    idx = jax.vmap(lambda k: epoch_indices(k, n_k, count))(
+        jax.random.split(k_cl, clients_per_round))              # [C, count]
+    cx = jax.vmap(lambda x, i: x[i])(data["client_x"][sel], idx)
+    cy = jax.vmap(lambda y, i: y[i])(data["client_y"][sel], idx)
+    cx = cx.reshape(clients_per_round, local_steps, batch_size, *cx.shape[2:])
+    cy = cy.reshape(clients_per_round, local_steps, batch_size)
+
+    sidx = epoch_indices(k_srv, n0, server_tau * server_batch)
+    sx = data["server_x"][sidx].reshape(
+        server_tau, server_batch, *data["server_x"].shape[1:])
+    sy = data["server_y"][sidx].reshape(server_tau, server_batch)
+
+    p_round = niid.round_distribution(data["client_dists"], data["sizes"], sel)
+    d_round = niid.non_iid_degree(p_round, data["p_bar"])
+    return {
+        "client": (cx, cy),
+        "sizes": data["sizes"][sel],
+        "server": (sx, sy),
+        "d_round": d_round,
+        "d_server": data["d_server"],
+        "n0": jnp.asarray(n0, jnp.float32),
+    }

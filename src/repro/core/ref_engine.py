@@ -1,0 +1,222 @@
+"""Pure-NumPy reference oracle for the unified round engine.
+
+A deliberately naive, loop-based float64 implementation of the paper's
+Formulas 4-12 — no jit, no scan, no vmap, no clever telescoping — used as
+the differential-test target for :func:`repro.core.engine.round_core`
+(tests/test_engine_diff.py).  Every algorithm mode the engine supports is
+mirrored here:
+
+  * local SGD / restart-SGDM (Formula 11) / communicated-momentum (FedDA);
+  * FedAvg aggregation with n_k/n' weights (steps 3-4);
+  * FedDU dynamic server update (Formulas 4-7) with g0_bar computed
+    LITERALLY as the average of the per-step gradients along the server
+    SGD path (Formula 6) — the engine uses the telescoping identity
+    (w_start - w_end)/(tau*eta), which is exact for plain SGD, so any
+    disagreement beyond float tolerance is a bug;
+  * FedDUM server momentum on the pseudo-gradient (Formulas 8/12, with
+    the descent-consistent sign — see repro.core.momentum).
+
+The Formula-7 accuracy gate matches the engine's fused semantics: the
+accuracy of w^{t-1/2} evaluated on the FIRST server batch.
+
+`jax.tree` is used ONLY for pytree structure traversal; every number is
+produced by NumPy in float64.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax  # tree structure only — no jnp math in this module
+import numpy as np
+
+from repro.core.engine import EngineConfig
+
+
+def tree_f64(tree: Any) -> Any:
+    return jax.tree.map(lambda x: np.asarray(x, np.float64), tree)
+
+
+def _zeros_like(tree: Any) -> Any:
+    return jax.tree.map(lambda x: np.zeros_like(np.asarray(x, np.float64)), tree)
+
+
+def _index(tree: Any, *idx) -> Any:
+    sl = tuple(idx)
+    return jax.tree.map(lambda x: np.asarray(x, np.float64)[sl]
+                        if np.issubdtype(np.asarray(x).dtype, np.floating)
+                        else np.asarray(x)[sl], tree)
+
+
+def ref_tau_eff(feddu, *, acc: float, round_idx: float, n0: float,
+                n_prime: float, d_round: float, d_server: float,
+                tau: int) -> float:
+    """Formula 7, scalar float64."""
+    if feddu.static_tau_eff is not None:
+        return float(feddu.static_tau_eff)
+    if feddu.f_prime_kind == "1-acc":
+        gate = 1.0 - acc
+    elif feddu.f_prime_kind == "inv":
+        gate = 1.0 / (acc + feddu.eps)
+    else:
+        raise ValueError(feddu.f_prime_kind)
+    num = n0 * d_round
+    den = num + n_prime * d_server + feddu.eps
+    return gate * (num / den) * feddu.C * (feddu.decay ** round_idx) * tau
+
+
+def ref_local_train(cfg: EngineConfig, grad_fn: Callable, params: Any,
+                    m0: Any, batches: list, lr: float):
+    """E local epochs on one client — Formula 11 when momentum is on."""
+    use_m = cfg.local_momentum != "none"
+    beta = cfg.feddum.beta_local
+    p, m = params, m0
+    for b in batches:
+        g = grad_fn(p, b)
+        if use_m:
+            m = jax.tree.map(lambda mi, gi: beta * mi + (1 - beta) * gi, m, g)
+            upd = m
+        else:
+            upd = g
+        p = jax.tree.map(lambda pi, u: pi - lr * u, p, upd)
+    return p, m
+
+
+def ref_round(cfg: EngineConfig, grad_fn: Callable, loss_and_acc_fn: Callable,
+              state: dict, batch: dict) -> tuple[dict, dict]:
+    """One federated round, naive float64 — mirrors ``engine.round_core``.
+
+    grad_fn(params, batch) and loss_and_acc_fn(params, batch) must be pure
+    NumPy (see :class:`SoftmaxRegression` for the differential-test model);
+    ``batch`` has the same layout as the engine's round batch, with NumPy
+    leaves.
+    """
+    params = tree_f64(state["params"])
+    lr = cfg.lr * (cfg.lr_decay ** float(state["round"]))
+    sizes = np.asarray(batch["sizes"], np.float64)
+    num_clients = sizes.shape[0]
+    steps = len(jax.tree.leaves(batch["client"])[0][0])
+
+    # (2) local epochs on every selected client
+    if cfg.local_momentum == "communicated":
+        m0 = tree_f64(state["global_m"])
+    else:
+        m0 = _zeros_like(params)
+    locals_, local_ms = [], []
+    for c in range(num_clients):
+        bs = [_index(batch["client"], c, s) for s in range(steps)]
+        p, m = ref_local_train(cfg, grad_fn, params, m0, bs, lr)
+        locals_.append(p)
+        local_ms.append(m)
+
+    # (3-4) FedAvg aggregation with n_k/n' weights
+    w = sizes / sizes.sum()
+
+    def weighted_mean(trees):
+        return jax.tree.map(
+            lambda *leaves: sum(wi * li for wi, li in zip(w, leaves)), *trees)
+
+    w_half = weighted_mean(locals_)
+    new_global_m = (weighted_mean(local_ms)
+                    if cfg.local_momentum == "communicated" else None)
+
+    # (5a) FedDU: tau server SGD steps; g0_bar is the literal Formula-6
+    # average of the per-step gradients; acc gate from the first forward.
+    if cfg.use_server_update:
+        tau = len(jax.tree.leaves(batch["server"])[0])
+        p = w_half
+        grads = []
+        acc = 0.0
+        for i in range(tau):
+            b = _index(batch["server"], i)
+            _, a = loss_and_acc_fn(p, b)
+            if i == 0:
+                acc = float(a)
+            g = grad_fn(p, b)
+            grads.append(g)
+            p = jax.tree.map(lambda pi, gi: pi - lr * gi, p, g)
+        g0 = jax.tree.map(lambda *gs: sum(gs) / tau, *grads)
+        t_eff = ref_tau_eff(cfg.feddu, acc=acc, round_idx=float(state["round"]),
+                            n0=float(batch["n0"]), n_prime=float(sizes.sum()),
+                            d_round=float(batch["d_round"]),
+                            d_server=float(batch["d_server"]), tau=tau)
+        proposed = jax.tree.map(lambda pi, gi: pi - t_eff * lr * gi, w_half, g0)
+    else:
+        proposed = w_half
+        t_eff, acc = 0.0, 0.0
+
+    # (5b) FedDUM server momentum on the pseudo-gradient (Formulas 8/12)
+    if cfg.server_momentum:
+        pseudo = jax.tree.map(lambda a, b_: a - b_, params, proposed)
+        bs_ = cfg.feddum.beta_server
+        m = jax.tree.map(lambda mi, g: bs_ * mi + (1 - bs_) * g,
+                         tree_f64(state["server_m"]), pseudo)
+        new_params = jax.tree.map(
+            lambda pi, mi: pi - cfg.feddum.eta_server * mi, params, m)
+    else:
+        m = tree_f64(state["server_m"])
+        new_params = proposed
+
+    new_state = {"params": new_params, "server_m": m,
+                 "round": float(state["round"]) + 1.0}
+    if cfg.local_momentum == "communicated":
+        new_state["global_m"] = new_global_m
+    return new_state, {"tau_eff": t_eff, "server_acc": acc}
+
+
+def ref_init_state(params: Any, cfg: EngineConfig) -> dict:
+    state = {"params": tree_f64(params), "server_m": _zeros_like(params),
+             "round": 0.0}
+    if cfg.local_momentum == "communicated":
+        state["global_m"] = _zeros_like(params)
+    return state
+
+
+# ---------------------------------------------------------------------------
+# Differential-test model: softmax regression with a CLOSED-FORM NumPy
+# gradient (no autodiff anywhere on the oracle side)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SoftmaxRegression:
+    """Linear softmax classifier, d features -> c classes.
+
+    NumPy methods feed the oracle; the jnp-free closed-form gradient also
+    cross-checks `jax.grad` on the engine side.  ``loss_and_acc`` (the
+    PaperModel-style (params, x, y) interface) is provided by the test via
+    jnp so the engine path stays pure-JAX.
+    """
+
+    dim: int = 6
+    num_classes: int = 4
+
+    def init(self, seed: int = 0) -> dict:
+        rng = np.random.default_rng(seed)
+        return {
+            "w": (0.5 * rng.standard_normal((self.dim, self.num_classes))
+                  ).astype(np.float32),
+            "b": np.zeros((self.num_classes,), np.float32),
+        }
+
+    @staticmethod
+    def _logits(params, x):
+        return x @ params["w"] + params["b"]
+
+    def np_loss_and_acc(self, params, batch):
+        x, y = np.asarray(batch[0]), np.asarray(batch[1])
+        z = self._logits(params, x)
+        z = z - z.max(axis=1, keepdims=True)
+        logp = z - np.log(np.exp(z).sum(axis=1, keepdims=True))
+        loss = -logp[np.arange(len(y)), y].mean()
+        acc = (z.argmax(axis=1) == y).mean()
+        return loss, acc
+
+    def np_grad(self, params, batch):
+        x, y = np.asarray(batch[0]), np.asarray(batch[1])
+        z = self._logits(params, x)
+        z = z - z.max(axis=1, keepdims=True)
+        p = np.exp(z)
+        p /= p.sum(axis=1, keepdims=True)
+        p[np.arange(len(y)), y] -= 1.0
+        p /= len(y)
+        return {"w": x.T @ p, "b": p.sum(axis=0)}

@@ -1,6 +1,6 @@
-"""Federated round driver — the paper's 6-step training loop (Section 3.1).
+"""Scan-compiled federated simulation driver (the paper's 100-device setting).
 
-One round:
+One round (Section 3.1):
   (1) select a random device subset D^t, broadcast w^{t-1};
   (2) each device runs E local epochs (SGD, or restart-SGDM for FedDUM);
   (3) devices upload models;
@@ -9,10 +9,20 @@ One round:
       through the server-momentum pseudo-gradient path (FedDUM);
   (6) at the predefined round, FedAP prunes the model structurally.
 
-This driver is the *simulation* engine (the paper's 100-device setting,
-vectorized with vmap over the selected clients — all clients share n_k in
-the paper's label-shard protocol, so local step counts are equal and vmap
-is exact).  The pod-scale distributed execution lives in repro/launch.
+The round itself lives in :mod:`repro.core.engine` (``round_core``) and is
+SHARED with the pod-scale SPMD path in :mod:`repro.launch.steps` — this
+module only adds the simulation plumbing around it:
+
+  * the federated dataset is moved to device ONCE
+    (:meth:`FederatedData.device_arrays`); client selection and batch
+    sampling run on device through `jax.random` keys in the scan carry
+    (`engine.sample_round_batches`) — no per-round host work;
+  * multi-round training is ONE compiled ``jax.lax.scan`` over
+    ``round_core`` (chunked at ``eval_every`` boundaries), so at fixed
+    shapes there is no per-round Python dispatch and no re-jit — the
+    engine re-compiles only when FedAP re-materializes the model;
+  * all clients share n_k in the paper's label-shard protocol, so local
+    step counts are equal and the engine's client vmap is exact.
 
 Momentum modes (covers the paper's baselines):
   local_momentum = "none"         plain local SGD (FedAvg, FedDU)
@@ -20,6 +30,9 @@ Momentum modes (covers the paper's baselines):
                  = "communicated" FedDA-style: global momentum broadcast to
                                   devices and aggregated back (2x comm)
   server_momentum = True          SGDM on the server pseudo-gradient
+
+Every mode is differentially tested against the pure-NumPy oracle in
+:mod:`repro.core.ref_engine` (tests/test_engine_diff.py).
 """
 from __future__ import annotations
 
@@ -29,23 +42,12 @@ from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core import niid
-from repro.core.momentum import (
-    FedDUMConfig,
-    init_server_momentum,
-    server_momentum_step,
-    server_pseudo_gradient,
-)
-from repro.core.server_update import (
-    FedDUConfig,
-    feddu_apply,
-    normalized_server_gradient_scan,
-    tau_eff,
-)
+from repro.core import engine
+from repro.core.engine import EngineConfig
+from repro.core.momentum import FedDUMConfig
 from repro.core.pruning import FedAPConfig
-from repro.utils import tree_weighted_mean
+from repro.core.server_update import FedDUConfig
 
 
 @dataclasses.dataclass(frozen=True)
@@ -77,8 +79,19 @@ def feddumap_config(**kw) -> FLConfig:
     return FLConfig(**kw)
 
 
+def engine_config(cfg: FLConfig) -> EngineConfig:
+    """The FLConfig -> EngineConfig wiring (locked against the pod path's
+    FLRunConfig wiring by tests/test_engine_diff.py)."""
+    return EngineConfig(
+        lr=cfg.lr, lr_decay=cfg.lr_decay,
+        use_server_update=cfg.use_server_update,
+        local_momentum=cfg.local_momentum,
+        server_momentum=cfg.server_momentum,
+        feddu=cfg.feddu, feddum=cfg.feddum)
+
+
 class FederatedTrainer:
-    """Simulation-grade FL trainer.
+    """Simulation-grade FL trainer over the scan-compiled engine.
 
     model: an object exposing
         init(rng) -> params
@@ -88,149 +101,104 @@ class FederatedTrainer:
 
     def __init__(self, model, data, cfg: FLConfig):
         self.model, self.data, self.cfg = model, data, cfg
-        self.rng = np.random.default_rng(cfg.seed)
+        self._key = jax.random.key(cfg.seed)
+        self._data_dev = None
         self._build()
 
-    # -- static, jit-compiled round step (rebuilt after pruning) ------------
+    # -- compiled programs (rebuilt only after FedAP re-materializes) -------
     def _build(self):
         cfg, model = self.cfg, self.model
+        self.engine_config = eng = engine_config(cfg)
 
-        def loss_fn(params, x, y):
-            return model.loss_and_acc(params, x, y)[0]
+        def grad_fn(p, b):
+            return jax.grad(lambda q: model.loss_and_acc(q, b[0], b[1])[0])(p)
 
-        grad_fn = jax.grad(loss_fn)
+        def la_fn(p, b):
+            return model.loss_and_acc(p, b[0], b[1])
 
-        def local_train(params, m0, xs, ys, lr):
-            """E local epochs on one client.  xs: [steps, B, ...]."""
-            use_m = cfg.local_momentum != "none"
-            beta = cfg.feddum.beta_local
+        self._grad_fn, self._la_fn = grad_fn, la_fn
 
-            def body(carry, batch):
-                p, m = carry
-                g = grad_fn(p, batch[0], batch[1])
-                if use_m:
-                    m = jax.tree.map(
-                        lambda mi, gi: beta * mi + (1 - beta) * gi.astype(jnp.float32), m, g)
-                    upd = m
-                else:
-                    upd = g
-                p = jax.tree.map(lambda pi, u: (pi - lr * u).astype(pi.dtype), p, upd)
-                return (p, m), None
+        n_k = int(self.data.client_x.shape[1])
+        n0 = int(self.data.server_x.shape[0])
+        sample_kw = dict(
+            clients_per_round=cfg.clients_per_round,
+            batch_size=cfg.batch_size,
+            local_steps=max(1, n_k // cfg.batch_size) * cfg.local_epochs,
+            server_batch=cfg.server_batch_size,
+            server_tau=max(1, n0 // cfg.server_batch_size) * cfg.server_epochs,
+        )
 
-            (params, m), _ = jax.lax.scan(body, (params, m0), (xs, ys))
-            return params, m
+        def chunk(state, key, data_dev, length):
+            def body(carry, _):
+                st, k = carry
+                k, sub = jax.random.split(k)
+                batch = engine.sample_round_batches(sub, data_dev, **sample_kw)
+                st, metrics = engine.round_core(eng, grad_fn, la_fn, st, batch)
+                return (st, k), metrics["tau_eff"]
 
-        def round_step(params, server_m, global_m, client_xs, client_ys, sizes,
-                       server_xs, server_ys, d_round, d_server, n0, round_idx, lr):
-            """One full round. client_xs: [K, steps, B, ...]."""
-            w_prev = params
-            if cfg.local_momentum == "communicated":
-                m0 = global_m                         # FedDA: broadcast momentum
-            else:
-                m0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (state, key), taus = jax.lax.scan(body, (state, key), None,
+                                              length=length)
+            return state, key, taus
 
-            locals_, local_ms = jax.vmap(
-                local_train, in_axes=(None, None, 0, 0, None))(params, m0, client_xs,
-                                                               client_ys, lr)
-            per_client = [jax.tree.map(lambda l, i=i: l[i], locals_)
-                          for i in range(cfg.clients_per_round)]
-            w_half = tree_weighted_mean(per_client, sizes)
-            if cfg.local_momentum == "communicated":  # FedDA aggregates momentum too
-                global_m = tree_weighted_mean(
-                    [jax.tree.map(lambda l, i=i: l[i], local_ms)
-                     for i in range(cfg.clients_per_round)], sizes)
-
-            if cfg.use_server_update:
-                # acc of the aggregated model on the server data (Formula 7).
-                acc = model.loss_and_acc(
-                    w_half, server_xs.reshape((-1,) + server_xs.shape[2:]),
-                    server_ys.reshape(-1))[1]
-                tau = server_xs.shape[0]
-                t_eff = tau_eff(cfg.feddu, acc=acc, round_idx=round_idx, n0=n0,
-                                n_prime=jnp.sum(sizes), d_round=d_round,
-                                d_server=d_server, tau=tau)
-                g0 = normalized_server_gradient_scan(
-                    w_half, (server_xs, server_ys),
-                    lambda p, b: grad_fn(p, b[0], b[1]), lr)
-                proposed = feddu_apply(w_half, g0, t_eff, lr)
-            else:
-                proposed = w_half
-                t_eff = jnp.zeros(())
-
-            if cfg.server_momentum:
-                pseudo = server_pseudo_gradient(w_prev, proposed)
-                new_params, server_m = server_momentum_step(w_prev, server_m, pseudo,
-                                                            cfg.feddum)
-            else:
-                new_params = proposed
-            return new_params, server_m, global_m, t_eff
-
-        self._round = jax.jit(round_step)
+        self._chunk = jax.jit(chunk, static_argnames=("length",),
+                              donate_argnums=(0,))
+        self._round_core = jax.jit(
+            lambda state, batch: engine.round_core(eng, grad_fn, la_fn,
+                                                   state, batch))
         self._eval = jax.jit(model.loss_and_acc)
 
-    # -- data plumbing -------------------------------------------------------
-    def _client_batches(self, k: int):
-        cfg, d = self.cfg, self.data
-        n_k = int(d.sizes[k])
-        steps = max(1, n_k // cfg.batch_size) * cfg.local_epochs
-        idx = np.concatenate([
-            self.rng.permutation(n_k) for _ in range(cfg.local_epochs + 1)
-        ])[: steps * cfg.batch_size]
-        xs = d.client_x[k][idx].reshape(steps, cfg.batch_size, *d.client_x.shape[2:])
-        ys = d.client_y[k][idx].reshape(steps, cfg.batch_size)
-        return xs, ys
+    def round_step(self, state, batch):
+        """One round at explicit batches — the engine exactly as the pod
+        path runs it; used by the differential/parity tests."""
+        return self._round_core(state, batch)
 
-    def _server_batches(self):
-        cfg, d = self.cfg, self.data
-        n0 = d.server_x.shape[0]
-        tau = max(1, n0 // cfg.server_batch_size) * cfg.server_epochs
-        idx = np.concatenate([
-            self.rng.permutation(n0) for _ in range(cfg.server_epochs + 1)
-        ])[: tau * cfg.server_batch_size]
-        xs = d.server_x[idx].reshape(tau, cfg.server_batch_size, *d.server_x.shape[1:])
-        ys = d.server_y[idx].reshape(tau, cfg.server_batch_size)
-        return xs, ys
+    def _device_data(self) -> dict:
+        if self._data_dev is None:
+            self._data_dev = self.data.device_arrays()
+        return self._data_dev
 
     # -- public API ----------------------------------------------------------
     def run(self, num_rounds: int, *, eval_every: int = 1,
             on_round_end: Callable | None = None, params=None):
-        cfg, d = self.cfg, self.data
+        cfg = self.cfg
         params = self.model.init(jax.random.key(cfg.seed)) if params is None else params
-        server_m = init_server_momentum(params)
-        global_m = init_server_momentum(params)
-        p_bar = niid.global_distribution(d.client_dists, d.sizes)
-        d_server = niid.non_iid_degree(d.server_dist, p_bar)
-        n0 = float(d.server_x.shape[0])
+        # the scan chunk donates its input state — never the caller's arrays
+        state = engine.init_round_state(jax.tree.map(jnp.copy, params),
+                                        self.engine_config)
+        data_dev = self._device_data()
         history = {"round": [], "acc": [], "loss": [], "tau_eff": [], "time": []}
         t0 = time.time()
 
-        for t in range(num_rounds):
-            sel = self.rng.choice(cfg.num_clients, cfg.clients_per_round, replace=False)
-            xs, ys = zip(*[self._client_batches(k) for k in sel])
-            client_xs, client_ys = np.stack(xs), np.stack(ys)
-            sxs, sys_ = self._server_batches()
-            p_round = niid.round_distribution(d.client_dists, d.sizes, jnp.asarray(sel))
-            d_round = niid.non_iid_degree(p_round, p_bar)
-            lr = cfg.lr * (cfg.lr_decay ** t)
-            params, server_m, global_m, t_eff = self._round(
-                params, server_m, global_m, jnp.asarray(client_xs),
-                jnp.asarray(client_ys), jnp.asarray(d.sizes[sel], jnp.float32),
-                jnp.asarray(sxs), jnp.asarray(sys_),
-                d_round, d_server, n0, jnp.asarray(t, jnp.float32), lr)
+        t = 0
+        while t < num_rounds:
+            if on_round_end is not None:
+                length = 1                       # hooks observe every round
+            else:
+                length = min(eval_every - (t % eval_every), num_rounds - t)
+            state, self._key, taus = self._chunk(state, self._key, data_dev,
+                                                 length=length)
+            t += length
 
-            if (t + 1) % eval_every == 0 or t == num_rounds - 1:
-                loss, acc = self._eval(params, d.test_x, d.test_y)
-                history["round"].append(t)
+            if t % eval_every == 0 or t == num_rounds:
+                loss, acc = self._eval(state["params"], data_dev["test_x"],
+                                       data_dev["test_y"])
+                history["round"].append(t - 1)
                 history["acc"].append(float(acc))
                 history["loss"].append(float(loss))
-                history["tau_eff"].append(float(t_eff))
+                history["tau_eff"].append(float(taus[-1]))
                 history["time"].append(time.time() - t0)
 
             if on_round_end is not None:
-                maybe = on_round_end(self, t, params)
-                if maybe is not None:          # e.g. FedAP re-materialized the model
-                    params = maybe
-                    server_m = init_server_momentum(params)
-                    global_m = init_server_momentum(params)
-                    self._build()              # re-jit for the new shapes
-        return params, history
+                # hooks get a copy: the next scan chunk donates the round
+                # state, which would invalidate any params a hook retains
+                maybe = on_round_end(self, t - 1,
+                                     jax.tree.map(jnp.copy, state["params"]))
+                if maybe is not None:          # e.g. FedAP re-materialized
+                    old = jax.tree.map(jnp.shape, state["params"])
+                    round_ = state["round"]
+                    state = engine.init_round_state(
+                        jax.tree.map(jnp.copy, maybe), self.engine_config)
+                    state["round"] = round_    # keep the lr-decay schedule
+                    if jax.tree.map(jnp.shape, maybe) != old:
+                        self._build()          # re-jit for the new shapes
+        return state["params"], history

@@ -29,6 +29,32 @@ class FederatedData:
     test_x: np.ndarray
     test_y: np.ndarray
 
+    def device_arrays(self) -> dict:
+        """The whole federated dataset as ONE device-resident dict — the
+        single host->device transfer point for the scan-compiled engine
+        (`repro.core.engine.sample_round_batches` draws every round's
+        client subset and batches from these arrays on device)."""
+        import jax.numpy as jnp
+
+        from repro.core import niid
+
+        dists = jnp.asarray(self.client_dists, jnp.float32)
+        sizes = jnp.asarray(self.sizes, jnp.float32)
+        p_bar = niid.global_distribution(dists, sizes)
+        return {
+            "client_x": jnp.asarray(self.client_x),
+            "client_y": jnp.asarray(self.client_y, jnp.int32),
+            "sizes": sizes,
+            "client_dists": dists,
+            "p_bar": p_bar,
+            "d_server": niid.non_iid_degree(
+                jnp.asarray(self.server_dist, jnp.float32), p_bar),
+            "server_x": jnp.asarray(self.server_x),
+            "server_y": jnp.asarray(self.server_y, jnp.int32),
+            "test_x": jnp.asarray(self.test_x),
+            "test_y": jnp.asarray(self.test_y, jnp.int32),
+        }
+
 
 def _dists(ys: np.ndarray, num_classes: int) -> np.ndarray:
     d = np.stack([np.bincount(y, minlength=num_classes) for y in ys]).astype(np.float32)

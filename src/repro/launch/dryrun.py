@@ -110,6 +110,8 @@ def dryrun_pair(arch: str, shape_name: str, *, multi_pod: bool,
 
     compile_s = time.time() - t0
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, list):       # older jax: one dict per partition
+        cost = cost[0] if cost else {}
     mem = compiled.memory_analysis()
     hlo = compiled.as_text()
     # Trip-count-aware per-device cost model (XLA's cost_analysis counts

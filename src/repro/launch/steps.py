@@ -1,7 +1,8 @@
 """Pod-scale FL steps: the paper's round as ONE SPMD program.
 
-``fl_train_step`` is FedDUMAP's round (minus the one-shot FedAP prune,
-which re-materializes between rounds):
+``fl_train_step`` wraps the SAME unified round implementation as the
+simulation driver — :func:`repro.core.engine.round_core` — so the two
+paths cannot diverge (tests/test_engine_diff.py locks the parity):
 
     local E steps        — per-client restart-SGDM (FedDUM Formula 11);
                            NO collective over the client axis: clients
@@ -13,6 +14,12 @@ which re-materializes between rounds):
                            normalized (Formula 6), scaled by tau_eff
                            (Formula 7); data-parallel over the whole mesh.
     FedDUM server SGDM   — pseudo-gradient momentum (Formulas 8/12).
+
+This module only contributes the pod-specific pieces: the batch-dict model
+adapter (``loss_and_accuracy`` fuses the Formula-7 acc gate into the first
+server gradient step — §Perf iteration B2), the FLRunConfig->EngineConfig
+wiring, and the (arch x shape) batch construction that
+`sharding/fl_specs.py` partitions over the mesh.
 
 State between rounds is just {global params, server momentum, round} —
 FL clients are stateless (the momentum restart is what makes this one
@@ -31,7 +38,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import InputShape, ModelConfig
-from repro.core.server_update import FedDUConfig, tau_eff
+from repro.core.engine import EngineConfig, init_round_state, round_core
+from repro.core.momentum import FedDUMConfig
+from repro.core.server_update import FedDUConfig
 from repro.models.api import build_model, decode_cache_len, input_specs
 from repro.sharding.specs import MeshPlan
 
@@ -79,8 +88,27 @@ def loss_and_accuracy(model, params, batch):
     return loss, acc
 
 
-def make_fl_train_step(cfg: ModelConfig, run: FLRunConfig, num_clients: int):
+def engine_config(run: FLRunConfig) -> EngineConfig:
+    """The FLRunConfig -> EngineConfig wiring (locked against the simulation
+    driver's FLConfig wiring by tests/test_engine_diff.py)."""
+    return EngineConfig(
+        lr=run.lr, lr_decay=1.0,
+        use_server_update=run.use_server_update,
+        local_momentum="restart" if run.use_momentum else "none",
+        server_momentum=run.use_momentum,
+        feddu=run.feddu,
+        feddum=FedDUMConfig(beta_server=run.beta_server,
+                            beta_local=run.beta_local,
+                            eta_server=run.eta_server))
+
+
+def make_fl_train_step(cfg: ModelConfig, run: FLRunConfig, num_clients: int,
+                       *, model: Any = None):
     """Returns (init_state_fn(rng), train_step(state, batch) -> state_out).
+
+    The round itself is `repro.core.engine.round_core`; this wires the
+    batch-dict model adapter into it.  ``model`` overrides ``build_model``
+    for tests (anything exposing init / loss / apply over batch dicts).
 
     batch:
       client: batch pytree with leading [C, steps, ...] dims
@@ -89,94 +117,19 @@ def make_fl_train_step(cfg: ModelConfig, run: FLRunConfig, num_clients: int):
       d_round, d_server: scalars (non-IID degrees, Formula 2)
       n0: scalar f32
     """
-    model = build_model(cfg)
+    model = build_model(cfg) if model is None else model
+    eng = engine_config(run)
     grad_fn = jax.grad(model.loss)
 
+    def la_fn(p, b):
+        return loss_and_accuracy(model, p, b)
+
     def init_state(rng):
-        params = model.init(rng)
-        m = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
-        return {"params": params, "server_m": m,
-                "round": jnp.zeros((), jnp.float32)}
-
-    def local_train(params, client_batch):
-        """Restart-SGDM over ``local_steps`` batches (Formula 11)."""
-        m0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
-
-        def step(carry, b):
-            p, m = carry
-            g = grad_fn(p, b)
-            if run.use_momentum:
-                m = jax.tree.map(
-                    lambda mi, gi: run.beta_local * mi
-                    + (1 - run.beta_local) * gi.astype(jnp.float32), m, g)
-                upd = m
-            else:
-                upd = g
-            p = jax.tree.map(lambda pi, u: (pi - run.lr * u).astype(pi.dtype), p, upd)
-            return (p, m), None
-
-        (p, _), _ = jax.lax.scan(step, (params, m0), client_batch)
-        return p
+        return init_round_state(model.init(rng), eng)
 
     def train_step(state, batch):
-        params = state["params"]
-
-        # (2) local epochs, vmapped over the client dim — no client collective
-        locals_ = jax.vmap(local_train, in_axes=(None, 0))(params, batch["client"])
-
-        # (4) FedAvg aggregation: ONE weighted all-reduce over the client axis
-        w = batch["sizes"] / jnp.sum(batch["sizes"])
-        w_half = jax.tree.map(
-            lambda l: jnp.einsum("c,c...->...", w.astype(jnp.float32),
-                                 l.astype(jnp.float32)).astype(l.dtype), locals_)
-
-        # (5) FedDU dynamic server update.  The Formula-7 accuracy gate is
-        # computed from the FIRST server step's own forward (value_and_grad
-        # with aux) — no separate evaluation pass (§Perf B2).
-        if run.use_server_update:
-            tau = jax.tree.leaves(batch["server"])[0].shape[0]
-            la_grad = jax.value_and_grad(
-                lambda p, b: loss_and_accuracy(model, p, b), has_aux=True)
-
-            def sstep(carry, b):
-                p, acc0, is_first = carry
-                (_, acc), g = la_grad(p, b)
-                acc0 = jnp.where(is_first, acc, acc0)
-                p = jax.tree.map(lambda pi, gi: (pi - run.lr * gi).astype(pi.dtype), p, g)
-                return (p, acc0, jnp.zeros((), bool)), None
-
-            (w_end, acc, _), _ = jax.lax.scan(
-                sstep, (w_half, jnp.zeros(()), jnp.ones((), bool)), batch["server"])
-            g0 = jax.tree.map(
-                lambda a, b_: (a.astype(jnp.float32) - b_.astype(jnp.float32))
-                / (tau * run.lr), w_half, w_end)
-            t_eff = tau_eff(run.feddu, acc=acc, round_idx=state["round"],
-                            n0=batch["n0"], n_prime=jnp.sum(batch["sizes"]),
-                            d_round=batch["d_round"], d_server=batch["d_server"],
-                            tau=tau)
-            proposed = jax.tree.map(
-                lambda p, g: (p.astype(jnp.float32) - t_eff * run.lr * g).astype(p.dtype),
-                w_half, g0)
-        else:
-            proposed = w_half
-            t_eff = jnp.zeros(())
-
-        # FedDUM server momentum on the pseudo-gradient
-        if run.use_momentum:
-            pseudo = jax.tree.map(
-                lambda a, b_: a.astype(jnp.float32) - b_.astype(jnp.float32),
-                params, proposed)
-            m = jax.tree.map(
-                lambda mi, g: run.beta_server * mi + (1 - run.beta_server) * g,
-                state["server_m"], pseudo)
-            new_params = jax.tree.map(
-                lambda p, mi: (p.astype(jnp.float32) - run.eta_server * mi).astype(p.dtype),
-                params, m)
-        else:
-            m = state["server_m"]
-            new_params = proposed
-
-        return {"params": new_params, "server_m": m, "round": state["round"] + 1}, t_eff
+        new_state, metrics = round_core(eng, grad_fn, la_fn, state, batch)
+        return new_state, metrics["tau_eff"]
 
     return init_state, train_step
 

@@ -17,11 +17,12 @@ def _axis(axes: tuple):
 
 
 def fl_state_specs(state_shapes: Any, model_axes: Any, plan: MeshPlan) -> Any:
-    """state = {params, server_m, round}: params/momentum use the model
-    sharding (TP/FSDP, replicated over client axes); round is replicated."""
-    p_specs = param_specs(state_shapes["params"], model_axes, plan)
-    m_specs = param_specs(state_shapes["server_m"], model_axes, plan)
-    return {"params": p_specs, "server_m": m_specs, "round": P()}
+    """Engine round state = {params, server_m, [global_m], round}: every
+    momentum buffer mirrors the params' model sharding (TP/FSDP, replicated
+    over client axes); the round counter is replicated.  Key-generic so the
+    communicated-momentum (FedDA) state shards without special-casing."""
+    return {k: (P() if k == "round" else param_specs(v, model_axes, plan))
+            for k, v in state_shapes.items()}
 
 
 def fl_batch_partition_specs(batch_shapes: Any, plan: MeshPlan) -> Any:

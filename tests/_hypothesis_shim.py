@@ -1,0 +1,130 @@
+"""Minimal stand-in for the `hypothesis` API surface this suite uses.
+
+The container image does not ship `hypothesis` (and tier-1 must not pip
+install).  When the real library is absent, tests/conftest.py installs this
+module as ``sys.modules["hypothesis"]`` so the property-based tests RUN
+(deterministic pseudo-random examples) instead of failing at collection.
+
+Covered API (exactly what the tests import):
+  given(*strategies)            — decorator, draws ``max_examples`` tuples
+  settings(max_examples=, deadline=) — decorator, attaches run options
+  strategies.floats / integers / lists / sampled_from, with .map / .filter
+
+With the real hypothesis installed (see requirements-dev.txt) this module
+is never imported.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import types
+import zlib
+
+import numpy as np
+
+_DEFAULT_MAX_EXAMPLES = 20
+_FILTER_RETRIES = 1000
+
+
+class SearchStrategy:
+    def __init__(self, draw):
+        self._draw = draw  # draw(rng) -> value
+
+    def example(self, rng):
+        return self._draw(rng)
+
+    def map(self, fn):
+        return SearchStrategy(lambda rng: fn(self._draw(rng)))
+
+    def filter(self, pred):
+        def draw(rng):
+            for _ in range(_FILTER_RETRIES):
+                v = self._draw(rng)
+                if pred(v):
+                    return v
+            raise ValueError("shim filter(): predicate rejected all examples")
+        return SearchStrategy(draw)
+
+
+def floats(min_value=0.0, max_value=1.0, **_kw):
+    lo, hi = float(min_value), float(max_value)
+
+    def draw(rng):
+        # hit the endpoints occasionally — cheap edge-case coverage
+        r = rng.random()
+        if r < 0.05:
+            return lo
+        if r < 0.10:
+            return hi
+        return float(rng.uniform(lo, hi))
+
+    return SearchStrategy(draw)
+
+
+def integers(min_value=0, max_value=100, **_kw):
+    lo, hi = int(min_value), int(max_value)
+
+    def draw(rng):
+        r = rng.random()
+        if r < 0.05:
+            return lo
+        if r < 0.10:
+            return hi
+        return int(rng.integers(lo, hi + 1))
+
+    return SearchStrategy(draw)
+
+
+def lists(elements, min_size=0, max_size=10, **_kw):
+    def draw(rng):
+        n = int(rng.integers(min_size, max_size + 1))
+        return [elements.example(rng) for _ in range(n)]
+
+    return SearchStrategy(draw)
+
+
+def sampled_from(seq):
+    seq = list(seq)
+    return SearchStrategy(lambda rng: seq[int(rng.integers(len(seq)))])
+
+
+def settings(max_examples=_DEFAULT_MAX_EXAMPLES, deadline=None, **_kw):
+    def deco(fn):
+        fn._shim_settings = {"max_examples": max_examples}
+        return fn
+
+    return deco
+
+
+def given(*strats, **kw_strats):
+    def deco(fn):
+        opts = getattr(fn, "_shim_settings", {})
+        n = opts.get("max_examples", _DEFAULT_MAX_EXAMPLES)
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            # one deterministic stream per test, independent of run order
+            # AND of the process (builtin hash() is salted per interpreter)
+            rng = np.random.default_rng(zlib.crc32(fn.__qualname__.encode()))
+            for _ in range(n):
+                drawn = [s.example(rng) for s in strats]
+                drawn_kw = {k: s.example(rng) for k, s in kw_strats.items()}
+                fn(*args, *drawn, **{**kwargs, **drawn_kw})
+
+        # hide the drawn parameters from pytest's fixture resolution: only
+        # the leading non-strategy params (e.g. ``self``) stay visible
+        params = list(inspect.signature(fn).parameters.values())
+        keep = len(params) - len(strats) - len(kw_strats)
+        wrapper.__signature__ = inspect.Signature(params[:keep])
+        del wrapper.__wrapped__
+        return wrapper
+
+    return deco
+
+
+# `from hypothesis import strategies as st` resolves this attribute.
+strategies = types.ModuleType("hypothesis.strategies")
+strategies.floats = floats
+strategies.integers = integers
+strategies.lists = lists
+strategies.sampled_from = sampled_from

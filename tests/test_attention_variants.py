@@ -1,8 +1,14 @@
-"""§Perf attention variants: tree decomposition, head padding, windows."""
+"""§Perf attention variants: tree decomposition, head padding, windows.
+
+Marked ``slow`` (long-sequence attention sweeps dominate the default run) —
+deselected from tier-1; execute with ``-m slow`` or ``-m ""``.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytestmark = pytest.mark.slow
 
 import repro.models.layers as L
 from repro.configs import get_config

@@ -1,0 +1,245 @@
+"""Differential tests: the scan-compiled engine vs. the pure-NumPy oracle.
+
+Every algorithm mode (FedAvg / FedDU / FedDUM / FedDA / FedDUMAP wiring,
+restart vs. communicated momentum, server momentum on/off) is run for
+several rounds through BOTH
+
+  * `repro.core.engine.round_core` under `jax.lax.scan` + `jit` (exactly
+    how the simulation driver and the pod path execute it), and
+  * `repro.core.ref_engine.ref_round` — naive float64 NumPy loops,
+
+on identical explicit batches, and must agree to <= 1e-5 in float32.
+
+A second suite locks the two public wirings to each other: the pod path's
+``make_fl_train_step`` (FLRunConfig) and the simulation trainer's
+``round_step`` (FLConfig) must produce IDENTICAL params from the same
+params/batches on a toy model.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import engine, ref_engine
+from repro.core.engine import EngineConfig
+from repro.core.ref_engine import SoftmaxRegression
+from repro.models.cnn import softmax_xent_acc
+
+DIM, CLASSES = 6, 4
+CLIENTS, STEPS, BATCH = 3, 2, 5
+TAU, SBATCH = 3, 5
+ROUNDS = 3
+
+
+@pytest.fixture(scope="module")
+def world():
+    model = SoftmaxRegression(dim=DIM, num_classes=CLASSES)
+    rng = np.random.default_rng(42)
+    params = model.init(seed=7)
+
+    def batches(lead):
+        x = rng.standard_normal(lead + (DIM,)).astype(np.float32)
+        y = rng.integers(0, CLASSES, lead).astype(np.int32)
+        return x, y
+
+    rounds = []
+    for _ in range(ROUNDS):
+        cx, cy = batches((CLIENTS, STEPS, BATCH))
+        sx, sy = batches((TAU, SBATCH))
+        rounds.append({
+            "client": (cx, cy),
+            "sizes": np.asarray([40.0, 25.0, 35.0], np.float32),
+            "server": (sx, sy),
+            "d_round": np.float32(0.3),
+            "d_server": np.float32(0.02),
+            "n0": np.float32(500.0),
+        })
+    return model, params, rounds
+
+
+def jnp_loss_and_acc(params, b):
+    logits = b[0] @ params["w"] + params["b"]
+    return softmax_xent_acc(logits, b[1])
+
+
+def jnp_grad(params, b):
+    return jax.grad(lambda p: jnp_loss_and_acc(p, b)[0])(params)
+
+
+MODES = {
+    "fedavg": dict(use_server_update=False, local_momentum="none",
+                   server_momentum=False),
+    "feddu": dict(use_server_update=True, local_momentum="none",
+                  server_momentum=False),
+    "server_momentum": dict(use_server_update=True, local_momentum="none",
+                            server_momentum=True),
+    "device_momentum": dict(use_server_update=True, local_momentum="restart",
+                            server_momentum=False),
+    "feddum": dict(use_server_update=True, local_momentum="restart",
+                   server_momentum=True),
+    "fedda": dict(use_server_update=True, local_momentum="communicated",
+                  server_momentum=True),
+}
+
+
+@pytest.mark.parametrize("mode", list(MODES))
+def test_engine_matches_numpy_oracle(world, mode):
+    model, params, rounds = world
+    cfg = EngineConfig(lr=0.08, lr_decay=0.97, **MODES[mode])
+
+    # engine path: ONE compiled lax.scan over the stacked round batches —
+    # the exact execution shape of the simulation driver
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *rounds)
+    state0 = engine.init_round_state(jax.tree.map(jnp.asarray, params), cfg)
+
+    @jax.jit
+    def run(state, batches):
+        def body(st, b):
+            st, metrics = engine.round_core(cfg, jnp_grad, jnp_loss_and_acc,
+                                            st, b)
+            return st, metrics["tau_eff"]
+        return jax.lax.scan(body, state, batches)
+
+    state, taus = run(state0, stacked)
+
+    # oracle path: naive float64 NumPy loops
+    ref_state = ref_engine.ref_init_state(params, cfg)
+    ref_taus = []
+    for b in rounds:
+        ref_state, metrics = ref_engine.ref_round(
+            cfg, model.np_grad, model.np_loss_and_acc, ref_state, b)
+        ref_taus.append(metrics["tau_eff"])
+
+    for leaf, ref_leaf in zip(jax.tree.leaves(state["params"]),
+                              jax.tree.leaves(ref_state["params"])):
+        np.testing.assert_allclose(np.asarray(leaf), ref_leaf, atol=1e-5,
+                                   err_msg=f"params diverged in mode={mode}")
+    np.testing.assert_allclose(np.asarray(taus), np.asarray(ref_taus),
+                               atol=1e-5, err_msg=f"tau_eff in mode={mode}")
+    # momentum state must track too, not just the params
+    for leaf, ref_leaf in zip(jax.tree.leaves(state["server_m"]),
+                              jax.tree.leaves(ref_state["server_m"])):
+        np.testing.assert_allclose(np.asarray(leaf), ref_leaf, atol=1e-5)
+
+
+def test_closed_form_gradient_matches_jax_grad(world):
+    """The oracle's hand-written softmax CE gradient vs. jax.grad."""
+    model, params, rounds = world
+    b = jax.tree.map(lambda x: x[0, 0], rounds[0]["client"])
+    g_np = model.np_grad(params, b)
+    g_jax = jnp_grad(jax.tree.map(jnp.asarray, params), b)
+    for k in g_np:
+        np.testing.assert_allclose(np.asarray(g_jax[k]), g_np[k], atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Pod path vs. simulation path: the two public wirings of the one engine
+# ---------------------------------------------------------------------------
+
+class DictSoftmaxModel:
+    """Batch-dict adapter (the pod path's model interface) for the toy."""
+
+    def __init__(self, seed=7):
+        self._np = SoftmaxRegression(dim=DIM, num_classes=CLASSES)
+        self._seed = seed
+
+    def init(self, rng):
+        return jax.tree.map(jnp.asarray, self._np.init(seed=self._seed))
+
+    def apply(self, params, batch):
+        return batch["x"] @ params["w"] + params["b"], jnp.zeros(())
+
+    def loss(self, params, batch):
+        return softmax_xent_acc(self.apply(params, batch)[0],
+                                batch["labels"])[0]
+
+
+class XYSoftmaxModel:
+    """(params, x, y) adapter (the simulation trainer's model interface)."""
+
+    def __init__(self, seed=7):
+        self._np = SoftmaxRegression(dim=DIM, num_classes=CLASSES)
+        self._seed = seed
+
+    def init(self, rng):
+        return jax.tree.map(jnp.asarray, self._np.init(seed=self._seed))
+
+    def loss_and_acc(self, params, x, y):
+        return softmax_xent_acc(x @ params["w"] + params["b"], y)
+
+
+def test_pod_step_matches_simulation_step(world):
+    """make_fl_train_step (FLRunConfig wiring) and FederatedTrainer.round_step
+    (FLConfig wiring) must produce identical params from identical inputs."""
+    from repro.core.rounds import FederatedTrainer, FLConfig
+    from repro.data.pipeline import FederatedData
+    from repro.launch.steps import FLRunConfig, make_fl_train_step
+
+    _, params, rounds = world
+    lr = 0.08
+
+    # pod path
+    run_cfg = FLRunConfig(lr=lr, beta_local=0.9, beta_server=0.9,
+                          eta_server=1.0, local_steps=STEPS, server_tau=TAU,
+                          server_batch=SBATCH, use_server_update=True,
+                          use_momentum=True)
+    init_state, train_step = make_fl_train_step(
+        None, run_cfg, CLIENTS, model=DictSoftmaxModel())
+    pod_state = init_state(jax.random.key(0))
+    pod_taus = []
+    for b in rounds:
+        pod_batch = {
+            "client": {"x": jnp.asarray(b["client"][0]),
+                       "labels": jnp.asarray(b["client"][1])},
+            "server": {"x": jnp.asarray(b["server"][0]),
+                       "labels": jnp.asarray(b["server"][1])},
+            "sizes": jnp.asarray(b["sizes"]),
+            "d_round": jnp.asarray(b["d_round"]),
+            "d_server": jnp.asarray(b["d_server"]),
+            "n0": jnp.asarray(b["n0"]),
+        }
+        pod_state, t_eff = jax.jit(train_step)(pod_state, pod_batch)
+        pod_taus.append(float(t_eff))
+
+    # simulation path: same algorithm through FLConfig + round_step
+    model = XYSoftmaxModel()
+    n_k = STEPS * BATCH  # one local epoch of STEPS batches
+    data = FederatedData(
+        client_x=np.zeros((CLIENTS, n_k, DIM), np.float32),
+        client_y=np.zeros((CLIENTS, n_k), np.int64),
+        sizes=np.asarray([40.0, 25.0, 35.0], np.float32),
+        client_dists=np.full((CLIENTS, CLASSES), 0.25, np.float32),
+        server_x=np.zeros((TAU * SBATCH, DIM), np.float32),
+        server_y=np.zeros((TAU * SBATCH,), np.int64),
+        server_dist=np.full((CLASSES,), 0.25, np.float32),
+        test_x=np.zeros((4, DIM), np.float32),
+        test_y=np.zeros((4,), np.int64))
+    fl_cfg = FLConfig(num_clients=CLIENTS, clients_per_round=CLIENTS,
+                      local_epochs=1, batch_size=BATCH, lr=lr, lr_decay=1.0,
+                      use_server_update=True, local_momentum="restart",
+                      server_momentum=True, server_epochs=1,
+                      server_batch_size=SBATCH)
+    trainer = FederatedTrainer(model, data, fl_cfg)
+    sim_state = engine.init_round_state(model.init(None),
+                                        trainer.engine_config)
+    sim_taus = []
+    for b in rounds:
+        sim_batch = {
+            "client": (jnp.asarray(b["client"][0]),
+                       jnp.asarray(b["client"][1])),
+            "server": (jnp.asarray(b["server"][0]),
+                       jnp.asarray(b["server"][1])),
+            "sizes": jnp.asarray(b["sizes"]),
+            "d_round": jnp.asarray(b["d_round"]),
+            "d_server": jnp.asarray(b["d_server"]),
+            "n0": jnp.asarray(b["n0"]),
+        }
+        sim_state, metrics = trainer.round_step(sim_state, sim_batch)
+        sim_taus.append(float(metrics["tau_eff"]))
+
+    for a, b_ in zip(jax.tree.leaves(pod_state["params"]),
+                     jax.tree.leaves(sim_state["params"])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_), atol=1e-6)
+    np.testing.assert_allclose(pod_taus, sim_taus, rtol=1e-5)

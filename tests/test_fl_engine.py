@@ -14,8 +14,10 @@ from repro.utils import tree_size
 
 @pytest.fixture(scope="module")
 def small_world():
+    # noise_scale 0.3 keeps the synthetic task learnable within a handful
+    # of rounds so the convergence assertion below is signal, not luck
     spec = SyntheticSpec(num_classes=10, image_shape=(8, 8, 3),
-                         train_size=2600, test_size=300, noise_scale=0.7)
+                         train_size=2600, test_size=300, noise_scale=0.3)
     data = build_federated_data(num_clients=10, server_fraction=0.1,
                                 device_pool=2000, spec=spec)
     model = SimpleCNN(num_classes=10, image_shape=(8, 8, 3), channels=(8, 16, 16),
@@ -35,8 +37,11 @@ COMMON = dict(num_clients=10, clients_per_round=3, local_epochs=1,
 class TestAlgorithms:
     def test_fedavg_runs_and_improves(self, small_world):
         data, model = small_world
-        _, hist = _run(data, model, baselines.fedavg_config(**COMMON), rounds=6)
-        assert hist["acc"][-1] > 0.12          # above 10-class chance
+        cfg = baselines.fedavg_config(
+            **{**COMMON, "clients_per_round": 5, "local_epochs": 2})
+        tr = FederatedTrainer(model, data, cfg)
+        _, hist = tr.run(12, eval_every=4)
+        assert hist["acc"][-1] > 0.2           # well above 10-class chance
 
     def test_feddu_tau_eff_decays(self, small_world):
         data, model = small_world
@@ -44,6 +49,10 @@ class TestAlgorithms:
         assert hist["tau_eff"][0] > 0.0
         assert all(np.isfinite(hist["tau_eff"]))
 
+    # slow tier: per-mode numerical correctness is already locked by the
+    # oracle differential suite (test_engine_diff.py); this is the full-CNN
+    # integration pass over the same modes
+    @pytest.mark.slow
     @pytest.mark.parametrize("maker", [
         baselines.server_momentum_config,
         baselines.device_momentum_config,
@@ -79,6 +88,7 @@ class TestAlgorithms:
 
 
 class TestPruningIntegration:
+    @pytest.mark.slow  # full FedAP probe + re-materialize + re-jit cycle
     def test_fedap_shrinks_and_training_continues(self, small_world):
         data, model = small_world
         apcfg = FedAPConfig(prune_round=2, probe_size=8)
@@ -91,6 +101,7 @@ class TestPruningIntegration:
         assert tree_size(params) <= tree_size(init_params)
         assert np.isfinite(hist["loss"][-1])
 
+    @pytest.mark.slow  # mask semantics unit-tested in test_pruning.py
     def test_unstructured_hook_masks(self, small_world):
         data, model = small_world
         hook = baselines.make_unstructured_pruning_hook(rate=0.5, prune_round=2)

@@ -3,11 +3,16 @@
 All kernels run in interpret mode (pl.pallas_call(..., interpret=True)):
 the kernel body executes in Python on CPU, which validates the block
 decomposition, index maps, scratch accumulation, and masking logic.
+
+Marked ``slow`` (interpret-mode sweeps take ~half a minute) — deselected
+from the default tier-1 run; execute with ``-m slow`` or ``-m ""``.
 """
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytestmark = pytest.mark.slow
 
 from repro.kernels import ops, ref
 from repro.kernels.flash_attention import flash_attention

@@ -2,6 +2,9 @@
 <=4 experts) — one forward + one train-grad step + one decode step on CPU,
 asserting output shapes and finiteness.  Plus a decode-vs-apply parity test
 that validates the KV-cache / recurrent-state machinery exactly.
+
+Marked ``slow`` (minutes of XLA compiles across the whole zoo) — deselected
+from the default tier-1 run; execute with ``-m slow`` or ``-m ""``.
 """
 import dataclasses
 
@@ -9,6 +12,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytestmark = pytest.mark.slow
 
 from repro.configs import ARCH_NAMES, get_config
 from repro.configs.base import InputShape

@@ -1,8 +1,14 @@
-"""FedAP on the transformer zoo (pruning_lm): shrink + still-runs tests."""
+"""FedAP on the transformer zoo (pruning_lm): shrink + still-runs tests.
+
+Marked ``slow`` (builds/prunes every reduced arch) — deselected from the
+default tier-1 run; execute with ``-m slow`` or ``-m ""``.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytestmark = pytest.mark.slow
 
 from repro.configs import get_config
 from repro.configs.base import InputShape

@@ -58,6 +58,52 @@ class TestTauEff:
         assert float(f_prime(0.5, "inv")) == pytest.approx(2.0, rel=1e-4)
 
 
+class TestTauEffProperties:
+    """Property-based guarantees behind the Section-3.2 convergence claim."""
+
+    @given(st.floats(0.0, 1.0), st.floats(0.01, 0.6), st.integers(0, 100))
+    @settings(max_examples=40, deadline=None)
+    def test_monotone_decay_in_t(self, acc, d_round, t):
+        cfg = FedDUConfig(decay=0.95)
+        a = _te(cfg, acc=acc, d_round=d_round, round_idx=t)
+        b = _te(cfg, acc=acc, d_round=d_round, round_idx=t + 1)
+        assert b <= a + 1e-7
+        if a > 0:
+            assert b < a          # strictly decaying while non-zero
+
+    @given(st.floats(0.0, 1.0), st.floats(0.9, 0.999))
+    @settings(max_examples=40, deadline=None)
+    def test_decays_to_fedavg_limit(self, acc, decay):
+        """tau_eff -> 0: FedDU provably degrades to plain FedAvg."""
+        cfg = FedDUConfig(decay=decay)
+        assert _te(cfg, acc=acc, round_idx=20000) < 1e-4
+        # and the server correction vanishes with it
+        w = {"w": jnp.ones((3,))}
+        g = {"w": jnp.full((3,), 5.0)}
+        out = feddu_apply(w, g, t_eff=_te(cfg, acc=acc, round_idx=20000),
+                          eta=0.1)
+        np.testing.assert_allclose(out["w"], w["w"], atol=1e-4)
+
+    @given(st.integers(1, 6), st.floats(-1.0, 1.0))
+    @settings(max_examples=30, deadline=None)
+    def test_formula6_invariant_to_tau_rescaling(self, mult, gval):
+        """FedNova normalization (Formula 6): on a constant gradient field
+        the normalized server gradient must NOT depend on tau, so a larger
+        server dataset cannot drag the objective toward the server
+        distribution (objective inconsistency)."""
+        def grad_fn(p, batch):
+            return jax.tree.map(lambda x: jnp.full_like(x, gval), p)
+
+        params = {"w": jnp.ones((4,))}
+        tau = 3
+        short = [jnp.zeros(())] * tau
+        long_ = [jnp.zeros(())] * (tau * mult)
+        a = normalized_server_gradient(params, short, grad_fn, 0.05)
+        b = normalized_server_gradient(params, long_, grad_fn, 0.05)
+        np.testing.assert_allclose(a["w"], jnp.full((4,), gval), atol=1e-5)
+        np.testing.assert_allclose(a["w"], b["w"], atol=1e-5)
+
+
 class TestNormalizedGradient:
     def _setup(self):
         def grad_fn(p, batch):
