@@ -21,8 +21,15 @@ from pathlib import Path
 import jax
 import numpy as np
 
-from repro.core import FedAPConfig, FedDUConfig, FederatedTrainer, baselines, feddumap_config
-from repro.core.fedap import make_fedap_hook
+from repro.core import (
+    FedAPConfig,
+    FedDUConfig,
+    FederatedTrainer,
+    TrainPlan,
+    baselines,
+    fedap_plan,
+    feddumap_config,
+)
 from repro.core.rounds import FLConfig
 from repro.data import build_federated_data
 from repro.data.synthetic import SyntheticSpec
@@ -64,8 +71,11 @@ def run_one(tag: str, *, model_name="cnn", algo="fedavg", p=0.05,
     model = make_model(model_name)
     feddu = FedDUConfig(**(feddu_overrides or {}),
                         **({"static_tau_eff": static_tau} if static_tau else {}))
-    hook = None
-    extra = {}
+    # Paper-faithful FedAP re-materializes the model (the device-FLOP shrink
+    # of Tables 6-9) -> Prune(mode="shrink"); the in-scan masked variant is
+    # benchmarked separately (perf_iter --fedap-plan).
+    apcfg = FedAPConfig(prune_round=prune_round, probe_size=32, participants=6)
+    plan = TrainPlan.standard(rounds, eval_every=2)
 
     if algo == "fedavg":
         cfg = baselines.fedavg_config(**COMMON, seed=seed)
@@ -90,40 +100,39 @@ def run_one(tag: str, *, model_name="cnn", algo="fedavg", p=0.05,
         cfg = baselines.fedavg_config(**COMMON, seed=seed)
         hook = baselines.make_distillation_round_end(
             model, data, mode=algo, steps=10, batch=32, seed=seed)
+        plan = TrainPlan.with_callback(rounds, hook, eval_every=2)
     elif algo in ("imc", "prunefl"):
         cfg = baselines.fedavg_config(**COMMON, seed=seed)
         hook = baselines.make_unstructured_pruning_hook(
             rate=0.5, prune_round=prune_round,
             refresh_every=10 if algo == "prunefl" else None)
+        plan = TrainPlan.with_callback(rounds, hook, eval_every=2)
     elif algo == "hrank":
         cfg = baselines.fedavg_config(**COMMON, seed=seed)
         hook = baselines.make_hrank_pruning_hook(
             model, data, rate=0.4, prune_round=prune_round, probe=32)
+        plan = TrainPlan.with_callback(rounds, hook, eval_every=2)
     elif algo == "fedap":
-        apcfg = FedAPConfig(prune_round=prune_round, probe_size=32)
         cfg = baselines.fedavg_config(**COMMON, seed=seed, fedap=apcfg)
-        hook = make_fedap_hook(model, data, apcfg,
-                               init_params=model.init(jax.random.key(seed)),
-                               participants=6, seed=seed)
+        plan = fedap_plan(rounds, prune_round=prune_round, mode="shrink",
+                          eval_every=2)
     elif algo == "fedduap":   # FedDU + FedAP, no momentum
-        apcfg = FedAPConfig(prune_round=prune_round, probe_size=32)
-        cfg = baselines.feddu_config(**COMMON, seed=seed, feddu=feddu, fedap=apcfg)
-        hook = make_fedap_hook(model, data, apcfg,
-                               init_params=model.init(jax.random.key(seed)),
-                               participants=6, seed=seed)
+        cfg = baselines.feddu_config(**COMMON, seed=seed, feddu=feddu,
+                                     fedap=apcfg)
+        plan = fedap_plan(rounds, prune_round=prune_round, mode="shrink",
+                          eval_every=2)
     elif algo == "feddumap":  # the full method
-        apcfg = FedAPConfig(prune_round=prune_round, probe_size=32)
         cfg = feddumap_config(**COMMON, seed=seed, feddu=feddu, fedap=apcfg)
-        hook = make_fedap_hook(model, data, apcfg,
-                               init_params=model.init(jax.random.key(seed)),
-                               participants=6, seed=seed)
+        plan = fedap_plan(rounds, prune_round=prune_round, mode="shrink",
+                          eval_every=2)
     else:
         raise ValueError(algo)
 
     trainer = FederatedTrainer(model, data, cfg)
     init_params = model.init(jax.random.key(seed))
     flops_before = model.flops_per_example(init_params, SPEC.image_shape)
-    params, hist = trainer.run(rounds, eval_every=2, on_round_end=hook)
+    res = trainer.run(plan)
+    params, hist = res.params, res.history
     flops_after = model.flops_per_example(params, SPEC.image_shape) \
         if algo in ("fedap", "fedduap", "feddumap", "hrank") else flops_before
 
@@ -137,11 +146,11 @@ def run_one(tag: str, *, model_name="cnn", algo="fedavg", p=0.05,
         "mflops_after": flops_after / 1e6,
         "wall_s": time.time() - t0,
     }
-    if hook is not None and hasattr(hook, "result"):
-        rec["fedap"] = {k: v for k, v in hook.result.items() if k != "kept"}
-        if hook.result.get("kept"):
-            rec["fedap"]["kept_counts"] = {k: int(len(v))
-                                           for k, v in hook.result["kept"].items()}
+    prune_art = res.artifacts.get("prune")
+    if prune_art is not None:
+        rec["fedap"] = {"p_star": prune_art["p_star"],
+                        "layer_rates": prune_art["layer_rates"],
+                        "kept_counts": prune_art["kept_counts"]}
     path.write_text(json.dumps(rec))
     print(f"[done] {tag}: acc={rec['final_acc']:.3f} best={rec['best_acc']:.3f} "
           f"({rec['wall_s']:.0f}s)", flush=True)

@@ -7,7 +7,8 @@ Public surface:
   pruning, fedap  — FedAP layer-adaptive structured pruning, Algorithm 3
   engine          — the unified scan/shard_map-safe round (round_core)
   ref_engine      — pure-NumPy oracle for differential-testing the engine
-  rounds          — scan-compiled simulation driver over the engine
+  plan            — declarative TrainPlan (Scan/Eval/Prune/Snapshot events)
+  rounds          — TrainPlan executor over the scan-compiled engine
   baselines       — FedAvg / Data-sharing / Hybrid-FL / ServerM / DeviceM /
                     FedDA / FedDF / FedKT / IMC / PruneFL / HRank
 """
@@ -17,6 +18,7 @@ from repro.core import (
     fedap,
     momentum,
     niid,
+    plan,
     pruning,
     pruning_lm,
     ref_engine,
@@ -24,16 +26,28 @@ from repro.core import (
     server_update,
 )
 from repro.core.engine import EngineConfig, init_round_state, round_core
+from repro.core.plan import (
+    Callback,
+    Eval,
+    Prune,
+    RunResult,
+    Scan,
+    Snapshot,
+    TrainPlan,
+    fedap_plan,
+)
 from repro.core.rounds import FederatedTrainer, FLConfig, feddumap_config
 from repro.core.server_update import FedDUConfig, tau_eff
 from repro.core.momentum import FedDUMConfig
 from repro.core.pruning import FedAPConfig, PruneSpec, PrunableLayer, CoupledParam
 
 __all__ = [
-    "baselines", "engine", "fedap", "momentum", "niid", "pruning", "pruning_lm",
-    "ref_engine", "rounds", "server_update",
+    "baselines", "engine", "fedap", "momentum", "niid", "plan", "pruning",
+    "pruning_lm", "ref_engine", "rounds", "server_update",
     "EngineConfig", "init_round_state", "round_core",
     "FederatedTrainer", "FLConfig", "feddumap_config",
+    "TrainPlan", "Scan", "Eval", "Prune", "Snapshot", "Callback",
+    "RunResult", "fedap_plan",
     "FedDUConfig", "FedDUMConfig", "FedAPConfig",
     "PruneSpec", "PrunableLayer", "CoupledParam", "tau_eff",
 ]

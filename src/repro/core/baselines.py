@@ -25,6 +25,11 @@ engine so comparisons are apples-to-apples:
 Unstructured baselines keep dense shapes (mask only) — which is exactly why
 the paper reports unchanged device FLOPs for them (Tables 6-9); structured
 FedAP/HRank actually shrink the model.
+
+The distillation/pruning factories below return legacy-signature callbacks
+``fn(trainer, round_idx, params) -> new params | None``; schedule them with
+``TrainPlan.with_callback(rounds, fn, eval_every=...)`` (see
+repro.core.plan) — the old ``run(..., on_round_end=fn)`` API is gone.
 """
 from __future__ import annotations
 
@@ -140,7 +145,7 @@ def apply_hybrid_fl(data):
 def make_distillation_round_end(model, data, *, mode: str = "feddf",
                                 steps: int = 20, batch: int = 64, lr: float = 0.01,
                                 seed: int = 0):
-    """FedDF [22] / FedKT [4] server phase as an ``on_round_end`` hook.
+    """FedDF [22] / FedKT [4] server phase as a per-round plan Callback.
 
     After each aggregation the global model is nudged toward the client
     ensemble's predictions on the server data.  The trainer stores the last
@@ -185,7 +190,7 @@ def make_distillation_round_end(model, data, *, mode: str = "feddf",
 
 
 # ---------------------------------------------------------------------------
-# Pruning baselines — on_round_end hooks
+# Pruning baselines — plan Callback factories
 # ---------------------------------------------------------------------------
 
 def unstructured_magnitude_mask(params, rate: float):

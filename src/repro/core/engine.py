@@ -21,10 +21,19 @@ pass over the full server set — one server-batch forward saved per round
 (§Perf iteration B2).  The pure-NumPy oracle in `repro.core.ref_engine`
 implements the same semantics naively and is the differential-test target.
 
-Round state is a dict ``{"params", "server_m", ["global_m"], "round"}``;
-``global_m`` is present only for ``local_momentum == "communicated"``
-(FedDA), where the globally-aggregated momentum buffer is broadcast back
-to the devices (2x communication — the baseline FedDUM's restart removes).
+Round state is a dict ``{"params", "server_m", ["global_m"], ["masks"],
+"round"}``; ``global_m`` is present only for ``local_momentum ==
+"communicated"`` (FedDA), where the globally-aggregated momentum buffer is
+broadcast back to the devices (2x communication — the baseline FedDUM's
+restart removes).
+
+``masks`` (present iff ``cfg.use_masks``) is a param-structured 0/1 pytree
+that rides in the scan carry: every round the engine multiplies params,
+gradients, and momentum buffers by it, so FedAP's static-shape mask mode
+(``repro.core.plan.Prune(mode="mask")``) prunes INSIDE a live compiled
+scan — no shape change, no re-jit.  With all-ones masks the round is
+bit-for-bit the unmasked round, so the masked engine can be compiled once
+up front and the prune event only swaps the carry contents.
 """
 from __future__ import annotations
 
@@ -52,6 +61,7 @@ class EngineConfig:
     use_server_update: bool = True  # FedDU (Formulas 4-7)
     local_momentum: str = "none"    # none | restart | communicated
     server_momentum: bool = False   # FedDUM server SGDM (Formulas 8/12)
+    use_masks: bool = False         # static-shape FedAP: masks in the carry
     feddu: FedDUConfig = dataclasses.field(default_factory=FedDUConfig)
     feddum: FedDUMConfig = dataclasses.field(default_factory=FedDUMConfig)
 
@@ -61,13 +71,23 @@ class EngineConfig:
 
 
 def init_round_state(params: Any, cfg: EngineConfig) -> dict:
-    """{"params", "server_m", ["global_m"], "round"} — the scan carry."""
+    """{"params", "server_m", ["global_m"], ["masks"], "round"} — the scan
+    carry.  Masks start as all-ones (a bit-exact no-op round) so a masked
+    engine compiles once and the prune event only swaps carry contents."""
     zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
     state = {"params": params, "server_m": zeros,
              "round": jnp.zeros((), jnp.float32)}
     if cfg.local_momentum == "communicated":
         state["global_m"] = jax.tree.map(jnp.copy, zeros)
+    if cfg.use_masks:
+        state["masks"] = jax.tree.map(
+            lambda p: jnp.ones(p.shape, jnp.float32), params)
     return state
+
+
+def apply_masks(tree: Any, masks: Any) -> Any:
+    """Multiply a param-structured pytree by 0/1 keep-masks (dtype kept)."""
+    return jax.tree.map(lambda x, m: (x * m).astype(x.dtype), tree, masks)
 
 
 def local_train(cfg: EngineConfig, grad_fn: Callable, params: Any, m0: Any,
@@ -111,13 +131,26 @@ def round_core(cfg: EngineConfig, grad_fn: Callable, loss_and_acc_fn: Callable,
 
     Returns (new_state, {"tau_eff", "server_acc"}).
     """
-    params = state["params"]
+    if cfg.use_masks:
+        # Static-shape FedAP: params, gradients and momentum are multiplied
+        # by the 0/1 keep-masks riding in the carry, every round.  With the
+        # coupled-closure masks built by `pruning.param_masks` this equals
+        # training the re-materialized model (norm-free archs) at unchanged
+        # shapes — the prune round runs inside the compiled scan.
+        masks = state["masks"]
+        _m = lambda t: apply_masks(t, masks)
+        base_grad_fn = grad_fn
+        grad_fn = lambda p, b: _m(base_grad_fn(p, b))
+    else:
+        _m = lambda t: t
+
+    params = _m(state["params"])
     lr = cfg.lr * (cfg.lr_decay ** state["round"])
 
     # (2) local epochs, vmapped over the client dim — clients diverge inside
     # the program; there is NO collective over the client axis here.
     if cfg.local_momentum == "communicated":
-        m0 = state["global_m"]                 # FedDA: broadcast momentum
+        m0 = _m(state["global_m"])             # FedDA: broadcast momentum
     else:
         m0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
     locals_, local_ms = jax.vmap(
@@ -141,6 +174,7 @@ def round_core(cfg: EngineConfig, grad_fn: Callable, loss_and_acc_fn: Callable,
         def sstep(carry, b):
             p, acc0, is_first = carry
             (_, acc), g = la_grad(p, b)
+            g = _m(g)
             acc0 = jnp.where(is_first, acc, acc0)
             p = jax.tree.map(lambda pi, gi: (pi - lr * gi).astype(pi.dtype), p, g)
             return (p, acc0, jnp.zeros((), bool)), None
@@ -169,10 +203,12 @@ def round_core(cfg: EngineConfig, grad_fn: Callable, loss_and_acc_fn: Callable,
     else:
         new_params, new_server_m = proposed, state["server_m"]
 
-    new_state = {"params": new_params, "server_m": new_server_m,
+    new_state = {"params": _m(new_params), "server_m": _m(new_server_m),
                  "round": state["round"] + 1}
     if cfg.local_momentum == "communicated":
-        new_state["global_m"] = new_global_m
+        new_state["global_m"] = _m(new_global_m)
+    if cfg.use_masks:
+        new_state["masks"] = masks
     return new_state, {"tau_eff": t_eff, "server_acc": acc}
 
 

@@ -1,16 +1,27 @@
-"""FedAP glue: the end-to-end adaptive-pruning hook for the FL engine.
+"""FedAP as a first-class plan event: the end-to-end Algorithm 3 decision.
 
-Runs ONCE at ``cfg.prune_round`` (paper: round 30):
+Runs ONCE, at the ``Prune`` event of a :class:`repro.core.plan.TrainPlan`
+(paper: round 30):
   * per-participant expected rates from the empirical-Fisher eigen-gap
     (server + every device, in parallel in the real system; sequentially
     in the simulation),
   * Formula 15 aggregation weighted by n_k / (D(P_k)+eps),
   * global magnitude threshold -> per-layer rates,
-  * HRank filter selection on server data,
-  * structural shrink + engine re-jit.
+  * HRank filter selection on server data.
+
+The DECISION (which filters to keep) is computed here, once, on the host;
+how it is APPLIED is the plan event's mode:
+
+  Prune(mode="mask")    `pruning.param_masks` -> keep-masks injected into
+                        the scan carry; training never leaves the compiled
+                        scan (`EngineConfig.use_masks`).
+  Prune(mode="shrink")  `pruning.shrink_params` -> genuinely smaller model,
+                        re-traced at the segment boundary (the legacy
+                        ``on_round_end`` hook behaviour).
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Any
 
 import jax
@@ -29,7 +40,6 @@ from repro.core.pruning import (
     per_layer_rates,
     feature_map_ranks,
     select_filters,
-    shrink_params,
 )
 
 
@@ -52,57 +62,72 @@ def participant_rate(model, params, init_params, x, y, cfg: FedAPConfig):
     return expected_rate_from_spectrum(eigs, lip, cfg.max_rate)
 
 
-def make_fedap_hook(model, data, cfg: FedAPConfig, *, init_params: Any,
-                    participants: int = 8, seed: int = 0):
-    """``on_round_end`` hook implementing Algorithm 3.
+@dataclasses.dataclass
+class FedAPDecision:
+    """The output of Algorithm 3: which filters each prunable layer keeps."""
 
-    ``participants``: number of devices (beyond the server) whose local data
-    contributes a rate — the paper uses all of D; the simulation samples a
-    subset for tractability (rates concentrate quickly).
+    kept: dict[str, np.ndarray]        # layer -> sorted kept-filter indices
+    p_star: float                      # Formula-15 aggregate rate
+    layer_rates: dict[str, float]      # per-layer rates (Alg. 3 lines 9-11)
+
+    def summary(self) -> dict[str, Any]:
+        """JSON-friendly view (kept reduced to per-layer counts)."""
+        return {"p_star": self.p_star, "layer_rates": dict(self.layer_rates),
+                "kept_counts": {k: int(len(v)) for k, v in self.kept.items()}}
+
+
+def fedap_decision(model, data, cfg: FedAPConfig, params: Any, *,
+                   init_params: Any, rng: np.random.Generator | None = None
+                   ) -> FedAPDecision:
+    """Algorithm 3, steps 1-4: expected rates -> Formula 15 -> per-layer
+    rates -> HRank selection.  Pure host-side decision; applying it is the
+    caller's (plan executor's) job.
+
+    ``cfg.participants``: number of devices (beyond the server) whose local
+    data contributes a rate — the paper uses all of D; the simulation
+    samples a subset for tractability (rates concentrate quickly).
     """
-    rng = np.random.default_rng(seed)
-    result: dict[str, Any] = {"kept": None, "p_star": None, "layer_rates": None}
+    rng = np.random.default_rng(0) if rng is None else rng
+    p_bar = niid.global_distribution(data.client_dists, data.sizes)
 
-    def hook(trainer, t, params):
-        if t + 1 != cfg.prune_round:
-            return None
-        p_bar = niid.global_distribution(data.client_dists, data.sizes)
+    # --- per-participant expected rates (index 0 = server) ----------------
+    ids = rng.choice(data.client_x.shape[0], size=cfg.participants,
+                     replace=False)
+    rates, sizes, degrees = [], [], []
+    r0 = participant_rate(model, params, init_params,
+                          jnp.asarray(data.server_x),
+                          jnp.asarray(data.server_y), cfg)
+    rates.append(r0)
+    sizes.append(data.server_x.shape[0])
+    degrees.append(niid.non_iid_degree(data.server_dist, p_bar))
+    for k in ids:
+        rk = participant_rate(model, params, init_params,
+                              jnp.asarray(data.client_x[k]),
+                              jnp.asarray(data.client_y[k]), cfg)
+        rates.append(rk)
+        sizes.append(float(data.sizes[k]))
+        degrees.append(niid.non_iid_degree(data.client_dists[k], p_bar))
 
-        # --- per-participant expected rates (index 0 = server) ------------
-        ids = rng.choice(data.client_x.shape[0], size=participants, replace=False)
-        spectra_rates, sizes, degrees = [], [], []
-        r0 = participant_rate(model, params, init_params,
-                              jnp.asarray(data.server_x), jnp.asarray(data.server_y), cfg)
-        spectra_rates.append(r0)
-        sizes.append(data.server_x.shape[0])
-        degrees.append(niid.non_iid_degree(data.server_dist, p_bar))
-        for k in ids:
-            rk = participant_rate(model, params, init_params,
-                                  jnp.asarray(data.client_x[k]),
-                                  jnp.asarray(data.client_y[k]), cfg)
-            spectra_rates.append(rk)
-            sizes.append(float(data.sizes[k]))
-            degrees.append(niid.non_iid_degree(data.client_dists[k], p_bar))
+    p_star = aggregate_rates(jnp.stack(rates), jnp.asarray(sizes),
+                             jnp.stack(degrees), cfg.eps)
+    # optional compression-budget floor (cfg.min_rate=0 keeps Algorithm 3's
+    # pure eigen-gap decision, which may legitimately prune nothing)
+    p_star = jnp.clip(p_star, cfg.min_rate, cfg.max_rate)
 
-        p_star = aggregate_rates(jnp.stack(spectra_rates), jnp.asarray(sizes),
-                                 jnp.stack(degrees), cfg.eps)
+    # --- per-layer rates from the global magnitude threshold --------------
+    spec: PruneSpec = model.prune_spec(params)
+    thr = global_threshold(params, spec, p_star)
+    layer_rates = per_layer_rates(params, spec, thr)
 
-        # --- per-layer rates from the global magnitude threshold ----------
-        spec: PruneSpec = model.prune_spec(params)
-        thr = global_threshold(params, spec, p_star)
-        layer_rates = per_layer_rates(params, spec, thr)
-
-        # --- HRank selection on server data + structural shrink -----------
-        fmaps = model.feature_maps(params, jnp.asarray(data.server_x[: cfg.probe_size]))
-        kept = {}
-        for layer in spec.layers:
-            scores = feature_map_ranks(fmaps[layer.feature_key or layer.name])
-            kept[layer.name] = select_filters(scores, float(layer_rates[layer.name]),
-                                              align=cfg.align)
-        new_params = shrink_params(params, spec, kept)
-        result.update(kept=kept, p_star=float(p_star),
-                      layer_rates={k: float(v) for k, v in layer_rates.items()})
-        return new_params
-
-    hook.result = result
-    return hook
+    # --- HRank selection on server data -----------------------------------
+    fmaps = model.feature_maps(params,
+                               jnp.asarray(data.server_x[: cfg.probe_size]))
+    kept = {}
+    for layer in spec.layers:
+        scores = feature_map_ranks(fmaps[layer.feature_key or layer.name])
+        kept[layer.name] = select_filters(scores,
+                                          float(layer_rates[layer.name]),
+                                          align=cfg.align)
+    return FedAPDecision(kept=kept, p_star=float(p_star),
+                         layer_rates={k: float(v)
+                                      for k, v in layer_rates.items()})

@@ -1,0 +1,247 @@
+"""Declarative training plans — the schedule language of the FL trainer.
+
+A :class:`TrainPlan` is a typed sequence of segments and events:
+
+  Scan(n)      n federated rounds inside ONE compiled ``lax.scan`` chunk
+  Eval()       score the global model on the held-out test split
+  Prune(mode)  FedAP (Algorithm 3) as a first-class event:
+                 mode="mask"    static-shape: keep-masks are injected into
+                                the scan carry; training keeps running in
+                                the SAME compiled program (no re-jit)
+                 mode="shrink"  re-materialize the genuinely smaller model
+                                at the segment boundary (forces a re-trace)
+  Snapshot()   record a copy of the current global params as an artifact
+  Callback(fn) host escape hatch at a segment boundary (distillation,
+               baseline pruning hooks, ...); fn(trainer, round_idx, params)
+               may return new params, which restart the round state exactly
+               like the legacy ``on_round_end`` protocol did
+
+The plan replaces the old ``FederatedTrainer.run(n, on_round_end=...)``
+callback API, whose per-round hook forced the scan into ``length=1``
+chunks and made FedAP — the paper's cheap efficiency win — the most
+expensive thing in the system.  The executor (`repro.core.rounds`)
+compiles a plan into the minimal set of jitted scan chunks: consecutive
+``Scan`` segments merge, and chunk programs are cached per (engine config,
+chunk length), so a plan with ten ``Scan(5)`` segments compiles exactly
+one program.
+
+Execution returns a structured :class:`RunResult` (history + per-event
+artifacts) instead of closure-mutated ``hook.result`` dicts.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Iterable, Union
+
+
+@dataclasses.dataclass(frozen=True)
+class Scan:
+    """``rounds`` federated rounds in one compiled scan chunk."""
+
+    rounds: int
+
+    def __post_init__(self):
+        if self.rounds < 1:
+            raise ValueError(f"Scan.rounds must be >= 1, got {self.rounds}")
+
+
+@dataclasses.dataclass(frozen=True)
+class Eval:
+    """Evaluate the global model on the test split; appends to history."""
+
+    name: str = "eval"
+
+
+@dataclasses.dataclass(frozen=True)
+class Prune:
+    """FedAP (Algorithm 3) at this point of the schedule.
+
+    mode="mask":   static shapes — keep-masks enter the scan carry and the
+                   engine applies them every round (`EngineConfig.use_masks`);
+                   the surrounding Scan segments stay one compiled program.
+    mode="shrink": re-materialize the pruned model (true FLOP shrink on
+                   device); the next Scan segment re-traces at the new
+                   shapes, exactly like the legacy hook path.
+    Both modes restart the server momentum (the paper's prune round resets
+    optimizer state), so they produce identical training trajectories on
+    normalization-free models.
+    """
+
+    mode: str = "mask"
+    name: str = "prune"
+
+    def __post_init__(self):
+        if self.mode not in ("mask", "shrink"):
+            raise ValueError(f"Prune.mode must be 'mask' or 'shrink', "
+                             f"got {self.mode!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class Snapshot:
+    """Copy the current global params into ``RunResult.artifacts[name]``."""
+
+    name: str = "snapshot"
+
+
+@dataclasses.dataclass(frozen=True)
+class Callback:
+    """Host callback at a segment boundary — the migration target for the
+    legacy ``on_round_end`` hooks (distillation, baseline pruning, ...).
+
+    ``fn(trainer, round_idx, params)`` receives a COPY of the params (the
+    next scan chunk donates the round state) and may return replacement
+    params; a non-None return re-initializes the round state (momentum
+    restart) with the round counter preserved — the legacy hook contract.
+    """
+
+    fn: Callable
+    name: str = "callback"
+
+
+Event = Union[Scan, Eval, Prune, Snapshot, Callback]
+
+
+class TrainPlan:
+    """An ordered schedule of :data:`Event` items.
+
+    ``TrainPlan(Scan(30), Eval(), Prune(mode="mask"), Scan(30), Eval())``
+
+    Iterables flatten, so builders can splice sub-schedules in place.
+    """
+
+    def __init__(self, *events: Event | Iterable[Event]):
+        flat: list[Event] = []
+        for e in events:
+            if isinstance(e, (Scan, Eval, Prune, Snapshot, Callback)):
+                flat.append(e)
+            else:
+                flat.extend(e)
+        for e in flat:
+            if not isinstance(e, (Scan, Eval, Prune, Snapshot, Callback)):
+                raise TypeError(f"not a TrainPlan event: {e!r}")
+        self.events: tuple[Event, ...] = tuple(flat)
+
+    def __repr__(self):
+        return f"TrainPlan({', '.join(map(repr, self.events))})"
+
+    def __eq__(self, other):
+        return isinstance(other, TrainPlan) and self.events == other.events
+
+    @property
+    def total_rounds(self) -> int:
+        return sum(e.rounds for e in self.events if isinstance(e, Scan))
+
+    @property
+    def uses_masks(self) -> bool:
+        """True iff the plan schedules a mask-mode prune — the executor then
+        builds the engine with ``use_masks=True`` from round 0 (all-ones
+        masks are a bit-exact no-op), so the prune event never re-jits."""
+        return any(isinstance(e, Prune) and e.mode == "mask"
+                   for e in self.events)
+
+    def compiled(self) -> tuple[Event, ...]:
+        """The minimal executable form: consecutive Scan segments merged.
+
+        The executor jit-caches one chunk program per (engine config, chunk
+        length); merging means a plan's distinct chunk lengths — not its
+        event count — determine how many programs compile.
+        """
+        out: list[Event] = []
+        for e in self.events:
+            if isinstance(e, Scan) and out and isinstance(out[-1], Scan):
+                out[-1] = Scan(out[-1].rounds + e.rounds)
+            else:
+                out.append(e)
+        return tuple(out)
+
+    def chunk_lengths(self) -> tuple[int, ...]:
+        """Distinct Scan lengths after merging — the number of scan programs
+        the executor will compile."""
+        return tuple(sorted({e.rounds for e in self.compiled()
+                             if isinstance(e, Scan)}))
+
+    # -- builders ------------------------------------------------------------
+    @classmethod
+    def standard(cls, num_rounds: int, *, eval_every: int = 1) -> "TrainPlan":
+        """``num_rounds`` of training with an Eval every ``eval_every``
+        rounds — the plan equivalent of the legacy ``run(n, eval_every=k)``."""
+        if eval_every < 1:
+            raise ValueError(f"eval_every must be >= 1, got {eval_every}")
+        events: list[Event] = []
+        t = 0
+        while t < num_rounds:
+            n = min(eval_every - (t % eval_every), num_rounds - t)
+            events.append(Scan(n))
+            t += n
+            if t % eval_every == 0 or t == num_rounds:
+                events.append(Eval())
+        return cls(events)
+
+    @classmethod
+    def with_callback(cls, num_rounds: int, fn: Callable, *,
+                      every: int = 1, eval_every: int = 1,
+                      name: str = "callback") -> "TrainPlan":
+        """Training with ``fn`` invoked every ``every`` rounds — the
+        migration path for legacy ``on_round_end`` hooks (the hook's own
+        round gating keeps working: it still receives ``round_idx``).
+        ``eval_every=0`` schedules no Eval events at all."""
+        events: list[Event] = []
+        t = 0
+        while t < num_rounds:
+            stops = [t + every - (t % every)]
+            if eval_every:
+                stops.append(t + eval_every - (t % eval_every))
+            stop = min(min(stops), num_rounds)
+            events.append(Scan(stop - t))
+            t = stop
+            if eval_every and (t % eval_every == 0 or t == num_rounds):
+                events.append(Eval())
+            if t % every == 0 or t == num_rounds:
+                events.append(Callback(fn, name=name))
+        return cls(events)
+
+
+def fedap_plan(num_rounds: int, *, prune_round: int, mode: str = "mask",
+               eval_every: int = 1) -> TrainPlan:
+    """The paper's FedDUMAP schedule: train, FedAP once at ``prune_round``,
+    keep training.  ``mode="mask"`` keeps every round inside the compiled
+    scan; ``mode="shrink"`` re-materializes (legacy-hook behaviour)."""
+    if not 0 < prune_round <= num_rounds:
+        raise ValueError(f"prune_round must be in (0, {num_rounds}], "
+                         f"got {prune_round}")
+    if eval_every < 1:
+        raise ValueError(f"eval_every must be >= 1, got {eval_every}")
+    events: list[Event] = []
+    t = 0
+    while t < num_rounds:
+        stops = [t + eval_every - (t % eval_every), num_rounds]
+        if t < prune_round:
+            stops.append(prune_round)
+        stop = min(stops)
+        events.append(Scan(stop - t))
+        t = stop
+        if t % eval_every == 0 or t == num_rounds:
+            events.append(Eval())
+        if t == prune_round:
+            events.append(Prune(mode=mode))
+    return TrainPlan(events)
+
+
+@dataclasses.dataclass
+class RunResult:
+    """What a plan execution returns.
+
+    params     final global params (masked-to-zero coordinates included in
+               mask mode — ``artifacts["prune"]["kept"]`` compacts them)
+    history    {"round", "acc", "loss", "tau_eff", "time"} from Eval events
+    artifacts  per-event outputs keyed by event name (deduplicated with
+               ``#k`` suffixes): Prune -> {"p_star", "layer_rates", "kept",
+               "filter_masks"|"params_before"}, Snapshot -> {"round",
+               "params"}, Callback -> whatever the callback returned
+    state      the final engine round state (params/momentum/masks/round)
+    """
+
+    params: Any
+    history: dict[str, list]
+    artifacts: dict[str, Any]
+    state: dict

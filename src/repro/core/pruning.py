@@ -48,23 +48,48 @@ Path = tuple
 
 
 # ---------------------------------------------------------------------------
-# Pytree path addressing
+# Pytree path addressing — jax.tree_util key-paths, so PruneSpec works on ANY
+# registered pytree (dicts, lists/tuples, namedtuples, registered dataclasses)
 # ---------------------------------------------------------------------------
 
+def _norm_key(entry) -> Any:
+    """Normalize a jax.tree_util key entry to the plain key a PruneSpec
+    path uses: dict key, sequence index, or attribute name."""
+    jtu = jax.tree_util
+    if isinstance(entry, jtu.DictKey):
+        return entry.key
+    if isinstance(entry, jtu.SequenceKey):
+        return entry.idx
+    if isinstance(entry, jtu.GetAttrKey):
+        return entry.name
+    if isinstance(entry, jtu.FlattenedIndexKey):
+        return entry.key
+    return entry
+
+
 def get_path(tree: Any, path: Path):
-    for k in path:
-        tree = tree[k]
-    return tree
+    """The leaf at ``path``, resolved through tree_flatten_with_path."""
+    path = tuple(path)
+    for kp, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        if tuple(_norm_key(e) for e in kp) == path:
+            return leaf
+    raise KeyError(f"no leaf at path {path!r}")
 
 
 def set_path(tree: Any, path: Path, value: Any):
-    """Functional set on nested dicts."""
-    if not path:
-        return value
-    head, rest = path[0], path[1:]
-    new = dict(tree)
-    new[head] = set_path(tree[head], rest, value)
-    return new
+    """Functional leaf replacement on any registered pytree."""
+    path = tuple(path)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    leaves, hit = [], False
+    for kp, leaf in flat:
+        if tuple(_norm_key(e) for e in kp) == path:
+            leaves.append(value)
+            hit = True
+        else:
+            leaves.append(leaf)
+    if not hit:
+        raise KeyError(f"no leaf at path {path!r}")
+    return jax.tree_util.tree_unflatten(treedef, leaves)
 
 
 # ---------------------------------------------------------------------------
@@ -284,6 +309,45 @@ def filter_masks(params: Any, spec: PruneSpec, kept: Mapping[str, np.ndarray]) -
     return masks
 
 
+def param_masks(params: Any, spec: PruneSpec, kept: Mapping[str, np.ndarray]) -> Any:
+    """Param-structured multiplicative keep-masks — the static-shape dual of
+    :func:`shrink_params`.
+
+    Returns a pytree with the SAME structure/shapes as ``params`` (f32, 0/1),
+    with zeros on exactly the coordinates ``shrink_params`` would slice away:
+    the weight's filter axis AND every coupled tensor's coupled axis.
+
+    Because the zeroed set is closed under the layer coupling (the pruned
+    filter's weights, its bias, and the next layer's matching input slices
+    all vanish), a masked model's forward activations and its gradients on
+    the KEPT coordinates are exactly those of the re-materialized model for
+    normalization-free architectures — and the gradients on masked
+    coordinates are exactly zero, so masked training is self-sustaining
+    inside a compiled scan.  (GroupNorm/LayerNorm models normalize over the
+    zeroed channels and therefore only approximate the shrunk model.)
+    """
+    masks = jax.tree.map(lambda p: jnp.ones(p.shape, jnp.float32), params)
+
+    def mask_axis(m: jnp.ndarray, axis: int, idx: np.ndarray) -> jnp.ndarray:
+        d = m.shape[axis]
+        keep = np.zeros((d,), np.float32)
+        keep[idx] = 1.0
+        shape = [1] * m.ndim
+        shape[axis] = d
+        return m * jnp.asarray(keep).reshape(shape)
+
+    for l in spec.layers:
+        if l.name not in kept:
+            continue
+        idx = np.asarray(kept[l.name])
+        masks = set_path(masks, l.weight,
+                         mask_axis(get_path(masks, l.weight), l.filter_axis, idx))
+        for c in l.coupled:
+            masks = set_path(masks, c.path,
+                             mask_axis(get_path(masks, c.path), c.axis, idx))
+    return masks
+
+
 def model_flops_fraction(params_before: Any, params_after: Any) -> float:
     """Crude FLOP-reduction proxy: ratio of parameter counts (matmul FLOPs
     scale linearly in each pruned dimension)."""
@@ -302,7 +366,16 @@ class FedAPConfig:
     eps: float = 1e-8              # Formula 15
     align: int | None = None       # 128 on TPU; None on CPU repro
     max_rate: float = 0.9
+    min_rate: float = 0.0          # compression-budget floor on p* (0 = off;
+                                   # the eigen-gap rule alone decides, which
+                                   # on easy tasks can be "prune nothing")
     probe_size: int = 32
+    participants: int = 8          # devices (beyond the server) probed for p*_k
+
+    def __post_init__(self):
+        if not 0.0 <= self.min_rate <= self.max_rate:
+            raise ValueError(f"need 0 <= min_rate <= max_rate, got "
+                             f"min_rate={self.min_rate} max_rate={self.max_rate}")
 
 
 def fedap_rates(

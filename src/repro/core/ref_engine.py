@@ -14,7 +14,10 @@ mirrored here:
     (w_start - w_end)/(tau*eta), which is exact for plain SGD, so any
     disagreement beyond float tolerance is a bug;
   * FedDUM server momentum on the pseudo-gradient (Formulas 8/12, with
-    the descent-consistent sign — see repro.core.momentum).
+    the descent-consistent sign — see repro.core.momentum);
+  * the static-shape masked mode (``cfg.use_masks``): params, gradients
+    and momentum buffers are multiplied by the 0/1 keep-masks in
+    ``state["masks"]`` every round, exactly where the engine does.
 
 The Formula-7 accuracy gate matches the engine's fused semantics: the
 accuracy of w^{t-1/2} evaluated on the FIRST server batch.
@@ -91,7 +94,15 @@ def ref_round(cfg: EngineConfig, grad_fn: Callable, loss_and_acc_fn: Callable,
     ``batch`` has the same layout as the engine's round batch, with NumPy
     leaves.
     """
-    params = tree_f64(state["params"])
+    if cfg.use_masks:
+        masks = tree_f64(state["masks"])
+        _m = lambda t: jax.tree.map(lambda x, mk: x * mk, t, masks)
+        base_grad_fn = grad_fn
+        grad_fn = lambda p, b: _m(base_grad_fn(p, b))
+    else:
+        _m = lambda t: t
+
+    params = _m(tree_f64(state["params"]))
     lr = cfg.lr * (cfg.lr_decay ** float(state["round"]))
     sizes = np.asarray(batch["sizes"], np.float64)
     num_clients = sizes.shape[0]
@@ -99,7 +110,7 @@ def ref_round(cfg: EngineConfig, grad_fn: Callable, loss_and_acc_fn: Callable,
 
     # (2) local epochs on every selected client
     if cfg.local_momentum == "communicated":
-        m0 = tree_f64(state["global_m"])
+        m0 = _m(tree_f64(state["global_m"]))
     else:
         m0 = _zeros_like(params)
     locals_, local_ms = [], []
@@ -157,18 +168,24 @@ def ref_round(cfg: EngineConfig, grad_fn: Callable, loss_and_acc_fn: Callable,
         m = tree_f64(state["server_m"])
         new_params = proposed
 
-    new_state = {"params": new_params, "server_m": m,
+    new_state = {"params": _m(new_params), "server_m": _m(m),
                  "round": float(state["round"]) + 1.0}
     if cfg.local_momentum == "communicated":
-        new_state["global_m"] = new_global_m
+        new_state["global_m"] = _m(new_global_m)
+    if cfg.use_masks:
+        new_state["masks"] = masks
     return new_state, {"tau_eff": t_eff, "server_acc": acc}
 
 
-def ref_init_state(params: Any, cfg: EngineConfig) -> dict:
+def ref_init_state(params: Any, cfg: EngineConfig, masks: Any = None) -> dict:
     state = {"params": tree_f64(params), "server_m": _zeros_like(params),
              "round": 0.0}
     if cfg.local_momentum == "communicated":
         state["global_m"] = _zeros_like(params)
+    if cfg.use_masks:
+        state["masks"] = (tree_f64(masks) if masks is not None else
+                          jax.tree.map(lambda x: np.ones_like(
+                              np.asarray(x, np.float64)), params))
     return state
 
 

@@ -7,7 +7,8 @@ One round (Section 3.1):
   (4) server aggregates with FedAvg weights n_k/n';
   (5) server update on shared data with dynamic tau_eff (FedDU), optionally
       through the server-momentum pseudo-gradient path (FedDUM);
-  (6) at the predefined round, FedAP prunes the model structurally.
+  (6) at the predefined round, FedAP prunes the model — as a scheduled
+      ``Prune`` event of the declarative :class:`~repro.core.plan.TrainPlan`.
 
 The round itself lives in :mod:`repro.core.engine` (``round_core``) and is
 SHARED with the pod-scale SPMD path in :mod:`repro.launch.steps` — this
@@ -17,10 +18,16 @@ module only adds the simulation plumbing around it:
     (:meth:`FederatedData.device_arrays`); client selection and batch
     sampling run on device through `jax.random` keys in the scan carry
     (`engine.sample_round_batches`) — no per-round host work;
-  * multi-round training is ONE compiled ``jax.lax.scan`` over
-    ``round_core`` (chunked at ``eval_every`` boundaries), so at fixed
-    shapes there is no per-round Python dispatch and no re-jit — the
-    engine re-compiles only when FedAP re-materializes the model;
+  * training follows a :class:`~repro.core.plan.TrainPlan`: every ``Scan``
+    segment is ONE compiled ``jax.lax.scan`` over ``round_core``, and the
+    executor caches one jitted chunk program per (model, engine config,
+    sampling shape) in a session-scoped cache, so trainers sharing a model
+    and config (e.g. the integration-test matrix) compile once;
+  * ``Prune(mode="mask")`` injects FedAP keep-masks into the scan carry
+    (``EngineConfig.use_masks``) — the prune round and everything after it
+    run inside the SAME compiled program; ``Prune(mode="shrink")``
+    re-materializes the smaller model at the segment boundary (the next
+    chunk re-traces at the new shapes);
   * all clients share n_k in the paper's label-shard protocol, so local
     step counts are equal and the engine's client vmap is exact.
 
@@ -32,20 +39,51 @@ Momentum modes (covers the paper's baselines):
   server_momentum = True          SGDM on the server pseudo-gradient
 
 Every mode is differentially tested against the pure-NumPy oracle in
-:mod:`repro.core.ref_engine` (tests/test_engine_diff.py).
+:mod:`repro.core.ref_engine` (tests/test_engine_diff.py), including the
+masked mode.
+
+Migrating from the legacy callback API
+--------------------------------------
+The pre-plan API forced every observer into a per-round host hook, which
+collapsed the scan into ``length=1`` chunks::
+
+    hook = make_fedap_hook(model, data, apcfg, init_params=p0)   # OLD
+    params, hist = trainer.run(60, eval_every=2, on_round_end=hook)
+    kept = hook.result["kept"]
+
+becomes a declarative schedule returning a structured result::
+
+    plan = fedap_plan(60, prune_round=30, mode="mask", eval_every=2)  # NEW
+    res = trainer.run(plan)
+    params, hist = res.params, res.history
+    kept = res.artifacts["prune"]["kept"]
+
+Per-round hooks that must stay (distillation, baseline pruning) migrate to
+``TrainPlan.with_callback(60, hook, eval_every=2)`` — the hook signature
+``fn(trainer, round_idx, params) -> new params | None`` is unchanged.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable
+from typing import Any
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import engine
 from repro.core.engine import EngineConfig
 from repro.core.momentum import FedDUMConfig
+from repro.core.plan import (
+    Callback,
+    Eval,
+    Prune,
+    RunResult,
+    Scan,
+    Snapshot,
+    TrainPlan,
+)
 from repro.core.pruning import FedAPConfig
 from repro.core.server_update import FedDUConfig
 
@@ -70,9 +108,30 @@ class FLConfig:
     feddum: FedDUMConfig = dataclasses.field(default_factory=FedDUMConfig)
     fedap: FedAPConfig = dataclasses.field(default_factory=FedAPConfig)
 
+    def __post_init__(self):
+        # Mirror EngineConfig.__post_init__: a bad switch must fail HERE,
+        # at construction, with a clear message — not at jit time.
+        if self.local_momentum not in ("none", "restart", "communicated"):
+            raise ValueError(
+                f"unknown local_momentum: {self.local_momentum!r} "
+                "(expected 'none', 'restart' or 'communicated')")
+        if not 1 <= self.clients_per_round <= self.num_clients:
+            raise ValueError(
+                f"clients_per_round must be in [1, num_clients="
+                f"{self.num_clients}], got {self.clients_per_round}")
+        for name in ("local_epochs", "batch_size", "server_epochs",
+                     "server_batch_size"):
+            if getattr(self, name) < 1:
+                raise ValueError(f"{name} must be >= 1, got "
+                                 f"{getattr(self, name)}")
+        if self.lr <= 0:
+            raise ValueError(f"lr must be > 0, got {self.lr}")
+        if self.lr_decay <= 0:
+            raise ValueError(f"lr_decay must be > 0, got {self.lr_decay}")
+
 
 def feddumap_config(**kw) -> FLConfig:
-    """The full method: FedDU + FedDUM (FedAP is wired via callback)."""
+    """The full method: FedDU + FedDUM (+FedAP via a plan Prune event)."""
     kw.setdefault("use_server_update", True)
     kw.setdefault("local_momentum", "restart")
     kw.setdefault("server_momentum", True)
@@ -90,12 +149,92 @@ def engine_config(cfg: FLConfig) -> EngineConfig:
         feddu=cfg.feddu, feddum=cfg.feddum)
 
 
+# ---------------------------------------------------------------------------
+# Session-scoped compiled-engine cache
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class CompiledEngine:
+    """The jitted programs for one (model, engine config, sampling shape).
+
+    ``model`` is held as a strong reference so the ``id(model)`` cache key
+    stays valid for the lifetime of the entry.
+    """
+
+    model: Any
+    eng: EngineConfig
+    chunk: Any        # (state, key, data_dev, *, length) -> (state, key, taus)
+    round_core: Any   # (state, batch) -> (state, metrics)
+    evaluate: Any     # (params, x, y) -> (loss, acc)
+
+
+_COMPILED_CACHE: dict[tuple, CompiledEngine] = {}
+_EVAL_CACHE: dict[int, tuple] = {}
+
+
+def clear_compiled_cache() -> None:
+    _COMPILED_CACHE.clear()
+    _EVAL_CACHE.clear()
+
+
+def compiled_engine(model, eng: EngineConfig, sample_kw: dict) -> CompiledEngine:
+    """Session-scoped cache of the jitted scan-chunk / round / eval programs.
+
+    Trainers over the same model object and equal (engine config, sampling
+    shape) share ONE compiled program set — e.g. the integration-test matrix
+    re-running baselines over a module-scoped model fixture compiles each
+    distinct configuration once per session instead of once per trainer.
+    """
+    key = (id(model), eng, tuple(sorted(sample_kw.items())))
+    ce = _COMPILED_CACHE.get(key)
+    if ce is not None:
+        return ce
+
+    def grad_fn(p, b):
+        return jax.grad(lambda q: model.loss_and_acc(q, b[0], b[1])[0])(p)
+
+    def la_fn(p, b):
+        return model.loss_and_acc(p, b[0], b[1])
+
+    def chunk(state, key, data_dev, length):
+        def body(carry, _):
+            st, k = carry
+            k, sub = jax.random.split(k)
+            batch = engine.sample_round_batches(sub, data_dev, **sample_kw)
+            st, metrics = engine.round_core(eng, grad_fn, la_fn, st, batch)
+            return (st, k), metrics["tau_eff"]
+
+        (state, key), taus = jax.lax.scan(body, (state, key), None,
+                                          length=length)
+        return state, key, taus
+
+    ev = _EVAL_CACHE.get(id(model))
+    if ev is None:
+        ev = (model, jax.jit(model.loss_and_acc))
+        _EVAL_CACHE[id(model)] = ev
+
+    ce = CompiledEngine(
+        model=model, eng=eng,
+        chunk=jax.jit(chunk, static_argnames=("length",), donate_argnums=(0,)),
+        round_core=jax.jit(
+            lambda state, batch: engine.round_core(eng, grad_fn, la_fn,
+                                                   state, batch)),
+        evaluate=ev[1])
+    _COMPILED_CACHE[key] = ce
+    return ce
+
+
+# ---------------------------------------------------------------------------
+# The trainer: a TrainPlan executor over the scan-compiled engine
+# ---------------------------------------------------------------------------
+
 class FederatedTrainer:
     """Simulation-grade FL trainer over the scan-compiled engine.
 
     model: an object exposing
         init(rng) -> params
         loss_and_acc(params, x, y) -> (scalar loss, scalar acc)
+        prune_spec(params) / feature_maps(params, x)   (only for Prune events)
     data: repro.data.pipeline.FederatedData
     """
 
@@ -103,24 +242,11 @@ class FederatedTrainer:
         self.model, self.data, self.cfg = model, data, cfg
         self._key = jax.random.key(cfg.seed)
         self._data_dev = None
-        self._build()
-
-    # -- compiled programs (rebuilt only after FedAP re-materializes) -------
-    def _build(self):
-        cfg, model = self.cfg, self.model
-        self.engine_config = eng = engine_config(cfg)
-
-        def grad_fn(p, b):
-            return jax.grad(lambda q: model.loss_and_acc(q, b[0], b[1])[0])(p)
-
-        def la_fn(p, b):
-            return model.loss_and_acc(p, b[0], b[1])
-
-        self._grad_fn, self._la_fn = grad_fn, la_fn
+        self.engine_config = engine_config(cfg)
 
         n_k = int(self.data.client_x.shape[1])
         n0 = int(self.data.server_x.shape[0])
-        sample_kw = dict(
+        self._sample_kw = dict(
             clients_per_round=cfg.clients_per_round,
             batch_size=cfg.batch_size,
             local_steps=max(1, n_k // cfg.batch_size) * cfg.local_epochs,
@@ -128,29 +254,14 @@ class FederatedTrainer:
             server_tau=max(1, n0 // cfg.server_batch_size) * cfg.server_epochs,
         )
 
-        def chunk(state, key, data_dev, length):
-            def body(carry, _):
-                st, k = carry
-                k, sub = jax.random.split(k)
-                batch = engine.sample_round_batches(sub, data_dev, **sample_kw)
-                st, metrics = engine.round_core(eng, grad_fn, la_fn, st, batch)
-                return (st, k), metrics["tau_eff"]
-
-            (state, key), taus = jax.lax.scan(body, (state, key), None,
-                                              length=length)
-            return state, key, taus
-
-        self._chunk = jax.jit(chunk, static_argnames=("length",),
-                              donate_argnums=(0,))
-        self._round_core = jax.jit(
-            lambda state, batch: engine.round_core(eng, grad_fn, la_fn,
-                                                   state, batch))
-        self._eval = jax.jit(model.loss_and_acc)
+    def _compiled(self, *, use_masks: bool = False) -> CompiledEngine:
+        eng = dataclasses.replace(self.engine_config, use_masks=use_masks)
+        return compiled_engine(self.model, eng, self._sample_kw)
 
     def round_step(self, state, batch):
         """One round at explicit batches — the engine exactly as the pod
         path runs it; used by the differential/parity tests."""
-        return self._round_core(state, batch)
+        return self._compiled().round_core(state, batch)
 
     def _device_data(self) -> dict:
         if self._data_dev is None:
@@ -158,47 +269,115 @@ class FederatedTrainer:
         return self._data_dev
 
     # -- public API ----------------------------------------------------------
-    def run(self, num_rounds: int, *, eval_every: int = 1,
-            on_round_end: Callable | None = None, params=None):
+    def run(self, plan: TrainPlan | int, *, eval_every: int = 1,
+            params=None) -> RunResult:
+        """Execute a :class:`TrainPlan` (an ``int`` builds the standard
+        train+eval plan for that many rounds).  Returns a RunResult."""
+        if isinstance(plan, int):
+            plan = TrainPlan.standard(plan, eval_every=eval_every)
+        use_masks = plan.uses_masks
+        eng = dataclasses.replace(self.engine_config, use_masks=use_masks)
+        ce = self._compiled(use_masks=use_masks)
         cfg = self.cfg
-        params = self.model.init(jax.random.key(cfg.seed)) if params is None else params
+
+        params0 = (self.model.init(jax.random.key(cfg.seed))
+                   if params is None else params)
+        # Prune events estimate the Lipschitz constant against the params
+        # the run started from (the legacy hooks took them explicitly).
+        init_params = jax.tree.map(jnp.copy, params0)
         # the scan chunk donates its input state — never the caller's arrays
-        state = engine.init_round_state(jax.tree.map(jnp.copy, params),
-                                        self.engine_config)
+        state = engine.init_round_state(jax.tree.map(jnp.copy, params0), eng)
         data_dev = self._device_data()
-        history = {"round": [], "acc": [], "loss": [], "tau_eff": [], "time": []}
+
+        history = {"round": [], "acc": [], "loss": [], "tau_eff": [],
+                   "time": []}
+        artifacts: dict[str, Any] = {}
         t0 = time.time()
-
         t = 0
-        while t < num_rounds:
-            if on_round_end is not None:
-                length = 1                       # hooks observe every round
-            else:
-                length = min(eval_every - (t % eval_every), num_rounds - t)
-            state, self._key, taus = self._chunk(state, self._key, data_dev,
-                                                 length=length)
-            t += length
+        last_tau = 0.0
 
-            if t % eval_every == 0 or t == num_rounds:
-                loss, acc = self._eval(state["params"], data_dev["test_x"],
-                                       data_dev["test_y"])
+        def record(name, value):
+            key, k = name, 1
+            while key in artifacts:
+                key = f"{name}#{k}"
+                k += 1
+            artifacts[key] = value
+
+        for ev in plan.compiled():
+            if isinstance(ev, Scan):
+                state, self._key, taus = ce.chunk(state, self._key, data_dev,
+                                                  length=ev.rounds)
+                t += ev.rounds
+                last_tau = float(taus[-1])
+            elif isinstance(ev, Eval):
+                loss, acc = ce.evaluate(state["params"], data_dev["test_x"],
+                                        data_dev["test_y"])
                 history["round"].append(t - 1)
                 history["acc"].append(float(acc))
                 history["loss"].append(float(loss))
-                history["tau_eff"].append(float(taus[-1]))
+                history["tau_eff"].append(last_tau)
                 history["time"].append(time.time() - t0)
-
-            if on_round_end is not None:
-                # hooks get a copy: the next scan chunk donates the round
-                # state, which would invalidate any params a hook retains
-                maybe = on_round_end(self, t - 1,
-                                     jax.tree.map(jnp.copy, state["params"]))
-                if maybe is not None:          # e.g. FedAP re-materialized
-                    old = jax.tree.map(jnp.shape, state["params"])
+            elif isinstance(ev, Snapshot):
+                record(ev.name, {"round": t, "params": jax.tree.map(
+                    jnp.copy, state["params"])})
+            elif isinstance(ev, Prune):
+                state, art = self._prune_event(ev, state, eng, init_params)
+                record(ev.name, art)
+            elif isinstance(ev, Callback):
+                # callbacks get a copy: the next scan chunk donates the
+                # round state, which would invalidate retained params
+                maybe = ev.fn(self, t - 1,
+                              jax.tree.map(jnp.copy, state["params"]))
+                if maybe is not None:   # legacy contract: replace + restart
                     round_ = state["round"]
+                    masks = state.get("masks")
                     state = engine.init_round_state(
-                        jax.tree.map(jnp.copy, maybe), self.engine_config)
-                    state["round"] = round_    # keep the lr-decay schedule
-                    if jax.tree.map(jnp.shape, maybe) != old:
-                        self._build()          # re-jit for the new shapes
-        return state["params"], history
+                        jax.tree.map(jnp.copy, maybe), eng)
+                    state["round"] = round_
+                    if masks is not None:
+                        # keep an earlier Prune(mode="mask") decision in
+                        # force across the state rebuild
+                        state["masks"] = masks
+                        state["params"] = engine.apply_masks(state["params"],
+                                                             masks)
+            else:  # pragma: no cover — TrainPlan validates event types
+                raise TypeError(f"unknown plan event: {ev!r}")
+
+        return RunResult(params=state["params"], history=history,
+                         artifacts=artifacts, state=state)
+
+    # -- FedAP plan event ----------------------------------------------------
+    def _prune_event(self, ev: Prune, state: dict, eng: EngineConfig,
+                     init_params) -> tuple[dict, dict]:
+        """Algorithm 3 at a segment boundary.  mask: inject keep-masks into
+        the carry (same compiled program keeps running); shrink:
+        re-materialize (next chunk re-traces).  Both restart momentum with
+        the round counter preserved, so the two modes train identically on
+        normalization-free models."""
+        from repro.core import fedap as fedap_mod
+        from repro.core import pruning
+
+        apcfg = self.cfg.fedap
+        params = jax.tree.map(jnp.copy, state["params"])
+        decision = fedap_mod.fedap_decision(
+            self.model, self.data, apcfg, params, init_params=init_params,
+            rng=np.random.default_rng(self.cfg.seed))
+        spec = self.model.prune_spec(params)
+        art = decision.summary()
+        art["kept"] = decision.kept
+        art["mode"] = ev.mode
+        round_ = state["round"]
+
+        if ev.mode == "mask":
+            masks = pruning.param_masks(params, spec, decision.kept)
+            new_state = engine.init_round_state(
+                engine.apply_masks(params, masks), eng)
+            new_state["masks"] = masks
+            art["filter_masks"] = pruning.filter_masks(params, spec,
+                                                       decision.kept)
+        else:
+            new_params = pruning.shrink_params(params, spec, decision.kept)
+            new_state = engine.init_round_state(new_params, eng)
+            art["params_before"] = params   # the shrink discards them
+        new_state["round"] = round_
+        return new_state, art

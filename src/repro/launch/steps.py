@@ -21,9 +21,12 @@ server gradient step — §Perf iteration B2), the FLRunConfig->EngineConfig
 wiring, and the (arch x shape) batch construction that
 `sharding/fl_specs.py` partitions over the mesh.
 
-State between rounds is just {global params, server momentum, round} —
-FL clients are stateless (the momentum restart is what makes this one
-program possible with zero extra communication).
+State between rounds is just {global params, server momentum, [masks],
+round} — FL clients are stateless (the momentum restart is what makes
+this one program possible with zero extra communication).  With
+``use_masks`` the FedAP keep-masks ride in that state, sharded exactly
+like the params, so the prune round needs no re-lower of the mesh
+program (``with_masks`` injects a decision mid-run).
 
 Serve steps (``prefill_step`` / ``decode_step``) run the aggregated global
 model — plain distributed inference.
@@ -57,6 +60,10 @@ class FLRunConfig:
     feddu: FedDUConfig = dataclasses.field(default_factory=FedDUConfig)
     use_server_update: bool = True
     use_momentum: bool = True
+    # Static-shape FedAP: keep-masks ride in the SPMD round state (sharded
+    # like the params — sharding/fl_specs.py is key-generic over the state
+    # dict), so the pod program prunes without a shape change or re-lower.
+    use_masks: bool = False
 
 
 def token_accuracy(model, params, batch) -> jnp.ndarray:
@@ -96,6 +103,7 @@ def engine_config(run: FLRunConfig) -> EngineConfig:
         use_server_update=run.use_server_update,
         local_momentum="restart" if run.use_momentum else "none",
         server_momentum=run.use_momentum,
+        use_masks=run.use_masks,
         feddu=run.feddu,
         feddum=FedDUMConfig(beta_server=run.beta_server,
                             beta_local=run.beta_local,
@@ -132,6 +140,24 @@ def make_fl_train_step(cfg: ModelConfig, run: FLRunConfig, num_clients: int,
         return new_state, metrics["tau_eff"]
 
     return init_state, train_step
+
+
+def with_masks(state: dict, masks: Any) -> dict:
+    """Inject FedAP keep-masks into a running masked round state — the pod
+    analogue of the simulation executor's ``Prune(mode="mask")`` event:
+    momentum restarts, params are masked, shapes (and the lowered mesh
+    program) are untouched."""
+    from repro.core.engine import apply_masks
+
+    if "masks" not in state:
+        raise ValueError("state has no mask slot — build the step with "
+                         "FLRunConfig(use_masks=True)")
+    new = {k: (jax.tree.map(jnp.zeros_like, v)
+               if k in ("server_m", "global_m") else v)
+           for k, v in state.items()}
+    new["params"] = apply_masks(state["params"], masks)
+    new["masks"] = masks
+    return new
 
 
 def make_prefill_step(cfg: ModelConfig):

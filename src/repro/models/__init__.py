@@ -1,3 +1,11 @@
-from repro.models.cnn import LeNet5, PaperModel, ResNet18, SimpleCNN, VGG11
+from repro.models.cnn import (
+    LeNet5,
+    PaperModel,
+    ResNet18,
+    SimpleCNN,
+    VGG11,
+    masked_dense,
+)
 
-__all__ = ["LeNet5", "PaperModel", "ResNet18", "SimpleCNN", "VGG11"]
+__all__ = ["LeNet5", "PaperModel", "ResNet18", "SimpleCNN", "VGG11",
+           "masked_dense"]

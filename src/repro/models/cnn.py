@@ -14,6 +14,13 @@ Design constraints that matter for FedAP:
     (see CoupledParam in repro.core.pruning).
   * ``feature_maps`` returns post-activation maps keyed by layer name —
     the HRank statistic is computed on these.
+  * ``apply(..., masks=...)`` takes the per-layer keep-masks of the
+    static-shape masked mode (``pruning.filter_masks``): masked layers
+    zero their feature maps, and dense layers with an output mask route
+    through :func:`masked_dense` — the Pallas ``masked_matmul`` kernel
+    when shapes are 128-aligned (pruned column blocks skipped on the MXU),
+    an XLA fallback otherwise.  For 0/1 masks this is numerically
+    identical to running the mask-multiplied parameter tree.
 """
 from __future__ import annotations
 
@@ -72,6 +79,40 @@ def _dense_init(rng, fin, fout):
     return {"w": _he(rng, (fin, fout), fin), "b": jnp.zeros((fout,), jnp.float32)}
 
 
+def _mask_channels(h, masks, name):
+    """Zero the feature maps of pruned filters (masks[name]: [d] of 0/1,
+    broadcast over the trailing channel axis).  For 0/1 masks this equals
+    masking the layer's weight+bias, since relu(z) * m == relu(z * m)."""
+    if masks is None or name not in masks:
+        return h
+    return h * masks[name]
+
+
+def masked_dense(x, w, mask, b=None, *, block: int = 128):
+    """Dense layer ``x @ w (+ b)`` with an output-filter keep-mask.
+
+    When every dimension is a multiple of ``block`` the matmul routes
+    through the Pallas ``masked_matmul`` kernel: column blocks whose mask
+    is entirely zero are SKIPPED on the MXU, so structured pruning's FLOP
+    savings are realized at static shapes (partially-kept blocks are
+    computed and re-masked elementwise — exact for 0/1 masks).  Unaligned
+    shapes fall back to masking the XLA matmul.  The Pallas branch has no
+    custom VJP: it is a forward/serving path; training masks the params
+    instead (repro.core.engine, ``use_masks``).
+    """
+    m, k = x.shape
+    n = w.shape[-1]
+    if m % block == 0 and k % block == 0 and n % block == 0:
+        from repro.kernels.ops import masked_matmul
+        block_mask = jnp.max(mask.reshape(n // block, block), axis=1)
+        y = masked_matmul(x, w, block_mask, block_n=block)
+    else:
+        y = x @ w
+    if b is not None:
+        y = y + b
+    return y * mask
+
+
 def softmax_xent_acc(logits, y):
     logp = jax.nn.log_softmax(logits)
     loss = -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
@@ -89,11 +130,11 @@ class PaperModel:
     def init(self, rng) -> Any:
         raise NotImplementedError
 
-    def apply(self, params, x, *, collect: bool = False):
+    def apply(self, params, x, *, collect: bool = False, masks=None):
         raise NotImplementedError
 
-    def loss_and_acc(self, params, x, y):
-        logits = self.apply(params, x)
+    def loss_and_acc(self, params, x, y, *, masks=None):
+        logits = self.apply(params, x, masks=masks)
         return softmax_xent_acc(logits, y)
 
     def feature_maps(self, params, x) -> dict[str, jnp.ndarray]:
@@ -141,15 +182,18 @@ class SimpleCNN(PaperModel):
         }
         return params
 
-    def apply(self, params, x, *, collect=False):
+    def apply(self, params, x, *, collect=False, masks=None):
         fmaps = {}
         h = jax.nn.relu(conv2d(x, params["conv1"]["w"], params["conv1"]["b"]))
+        h = _mask_channels(h, masks, "conv1")
         fmaps["conv1"] = h
         h = max_pool(h)
         h = jax.nn.relu(conv2d(h, params["conv2"]["w"], params["conv2"]["b"]))
+        h = _mask_channels(h, masks, "conv2")
         fmaps["conv2"] = h
         h = max_pool(h)
         h = jax.nn.relu(conv2d(h, params["conv3"]["w"], params["conv3"]["b"]))
+        h = _mask_channels(h, masks, "conv3")
         fmaps["conv3"] = h
         b = h.shape[0]
         h = h.reshape(b, -1, h.shape[-1])                       # [B, spatial, C]
@@ -204,19 +248,31 @@ class LeNet5(PaperModel):
             "out": _dense_init(k[4], 84, self.num_classes),
         }
 
-    def apply(self, params, x, *, collect=False):
+    def apply(self, params, x, *, collect=False, masks=None):
         fmaps = {}
         h = jax.nn.relu(conv2d(x, params["conv1"]["w"], params["conv1"]["b"]))
+        h = _mask_channels(h, masks, "conv1")
         fmaps["conv1"] = h
         h = max_pool(h)
         h = jax.nn.relu(conv2d(h, params["conv2"]["w"], params["conv2"]["b"]))
+        h = _mask_channels(h, masks, "conv2")
         fmaps["conv2"] = h
         h = max_pool(h)
         b = h.shape[0]
         h = h.reshape(b, -1, h.shape[-1])
-        h = jax.nn.relu(jnp.einsum("bpc,pcf->bf", h, params["fc1"]["w"]) + params["fc1"]["b"])
+        if masks is not None and "fc1" in masks:
+            w1 = params["fc1"]["w"]
+            h = jax.nn.relu(masked_dense(h.reshape(b, -1),
+                                         w1.reshape(-1, w1.shape[-1]),
+                                         masks["fc1"], params["fc1"]["b"]))
+        else:
+            h = jax.nn.relu(jnp.einsum("bpc,pcf->bf", h, params["fc1"]["w"]) + params["fc1"]["b"])
         fmaps["fc1"] = h
-        h = jax.nn.relu(h @ params["fc2"]["w"] + params["fc2"]["b"])
+        if masks is not None and "fc2" in masks:
+            h = jax.nn.relu(masked_dense(h, params["fc2"]["w"], masks["fc2"],
+                                         params["fc2"]["b"]))
+        else:
+            h = jax.nn.relu(h @ params["fc2"]["w"] + params["fc2"]["b"])
         fmaps["fc2"] = h
         logits = h @ params["out"]["w"] + params["out"]["b"]
         return (logits, fmaps) if collect else logits
@@ -278,7 +334,7 @@ class VGG11(PaperModel):
         params["out"] = _dense_init(keys[-1], cin, self.num_classes)
         return params
 
-    def apply(self, params, x, *, collect=False):
+    def apply(self, params, x, *, collect=False, masks=None):
         fmaps = {}
         h = x
         ci = 0
@@ -288,6 +344,7 @@ class VGG11(PaperModel):
             else:
                 p = params[f"conv{ci}"]
                 h = jax.nn.relu(conv2d(h, p["w"], p["b"]))
+                h = _mask_channels(h, masks, f"conv{ci}")
                 fmaps[f"conv{ci}"] = h
                 ci += 1
         h = avg_pool_global(h)
@@ -356,7 +413,7 @@ class ResNet18(PaperModel):
         params["out"] = _dense_init(next(keys), cin, self.num_classes)
         return params
 
-    def apply(self, params, x, *, collect=False):
+    def apply(self, params, x, *, collect=False, masks=None):
         fmaps = {}
         h = jax.nn.relu(group_norm(conv2d(x, params["stem"]["w"], params["stem"]["b"]),
                                    params["stem_gn"]["scale"], params["stem_gn"]["bias"]))
@@ -368,6 +425,7 @@ class ResNet18(PaperModel):
                 y = jax.nn.relu(group_norm(
                     conv2d(h, blk["conv1"]["w"], blk["conv1"]["b"], stride=stride),
                     blk["gn1"]["scale"], blk["gn1"]["bias"]))
+                y = _mask_channels(y, masks, f"{name}.conv1")
                 fmaps[f"{name}.conv1"] = y
                 y = group_norm(conv2d(y, blk["conv2"]["w"], blk["conv2"]["b"]),
                                blk["gn2"]["scale"], blk["gn2"]["bias"])

@@ -17,10 +17,12 @@ def _axis(axes: tuple):
 
 
 def fl_state_specs(state_shapes: Any, model_axes: Any, plan: MeshPlan) -> Any:
-    """Engine round state = {params, server_m, [global_m], round}: every
-    momentum buffer mirrors the params' model sharding (TP/FSDP, replicated
-    over client axes); the round counter is replicated.  Key-generic so the
-    communicated-momentum (FedDA) state shards without special-casing."""
+    """Engine round state = {params, server_m, [global_m], [masks], round}:
+    every momentum buffer — and the FedAP keep-masks of the static-shape
+    masked mode (``EngineConfig.use_masks``) — mirrors the params' model
+    sharding (TP/FSDP, replicated over client axes); the round counter is
+    replicated.  Key-generic so the communicated-momentum (FedDA) state and
+    the mask slot shard without special-casing."""
     return {k: (P() if k == "round" else param_specs(v, model_axes, plan))
             for k, v in state_shapes.items()}
 

@@ -124,6 +124,77 @@ def test_engine_matches_numpy_oracle(world, mode):
         np.testing.assert_allclose(np.asarray(leaf), ref_leaf, atol=1e-5)
 
 
+def _scan_engine(cfg, state0, rounds):
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *rounds)
+
+    @jax.jit
+    def run(state, batches):
+        def body(st, b):
+            st, metrics = engine.round_core(cfg, jnp_grad, jnp_loss_and_acc,
+                                            st, b)
+            return st, metrics["tau_eff"]
+        return jax.lax.scan(body, state, batches)
+
+    return run(state0, stacked)
+
+
+def test_engine_matches_numpy_oracle_masked(world):
+    """The static-shape masked mode (use_masks): params/grads/momentum are
+    multiplied by the carry masks every round — engine and oracle must
+    agree on arbitrary 0/1 masks."""
+    model, params, rounds = world
+    cfg = EngineConfig(lr=0.08, lr_decay=0.97, use_server_update=True,
+                       local_momentum="restart", server_momentum=True,
+                       use_masks=True)
+    rng = np.random.default_rng(3)
+    masks = {"w": (rng.random((DIM, CLASSES)) > 0.4).astype(np.float32),
+             "b": (rng.random((CLASSES,)) > 0.4).astype(np.float32)}
+
+    state0 = engine.init_round_state(jax.tree.map(jnp.asarray, params), cfg)
+    state0["masks"] = jax.tree.map(jnp.asarray, masks)
+    state, taus = _scan_engine(cfg, state0, rounds)
+
+    ref_state = ref_engine.ref_init_state(params, cfg, masks=masks)
+    ref_taus = []
+    for b in rounds:
+        ref_state, metrics = ref_engine.ref_round(
+            cfg, model.np_grad, model.np_loss_and_acc, ref_state, b)
+        ref_taus.append(metrics["tau_eff"])
+
+    for leaf, ref_leaf, m in zip(jax.tree.leaves(state["params"]),
+                                 jax.tree.leaves(ref_state["params"]),
+                                 jax.tree.leaves(masks)):
+        np.testing.assert_allclose(np.asarray(leaf), ref_leaf, atol=1e-5,
+                                   err_msg="masked params diverged")
+        np.testing.assert_array_equal(np.asarray(leaf)[m == 0], 0.0)
+    np.testing.assert_allclose(np.asarray(taus), np.asarray(ref_taus),
+                               atol=1e-5)
+    for leaf, ref_leaf in zip(jax.tree.leaves(state["server_m"]),
+                              jax.tree.leaves(ref_state["server_m"])):
+        np.testing.assert_allclose(np.asarray(leaf), ref_leaf, atol=1e-5)
+
+
+def test_all_ones_masks_equal_unmasked_engine(world):
+    """use_masks with all-ones masks must be a numerical no-op, so a masked
+    engine can be compiled up front and pruned mid-scan without a re-jit."""
+    model, params, rounds = world
+    base = dict(lr=0.08, lr_decay=0.97, use_server_update=True,
+                local_momentum="restart", server_momentum=True)
+    cfg_m = EngineConfig(use_masks=True, **base)
+    cfg_u = EngineConfig(use_masks=False, **base)
+
+    state_m, taus_m = _scan_engine(
+        cfg_m, engine.init_round_state(jax.tree.map(jnp.asarray, params),
+                                       cfg_m), rounds)
+    state_u, taus_u = _scan_engine(
+        cfg_u, engine.init_round_state(jax.tree.map(jnp.asarray, params),
+                                       cfg_u), rounds)
+    for a, b in zip(jax.tree.leaves(state_m["params"]),
+                    jax.tree.leaves(state_u["params"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(taus_m), np.asarray(taus_u))
+
+
 def test_closed_form_gradient_matches_jax_grad(world):
     """The oracle's hand-written softmax CE gradient vs. jax.grad."""
     model, params, rounds = world

@@ -1,0 +1,361 @@
+"""The declarative TrainPlan API: compilation, execution, and the FedAP
+mask/shrink equivalence that makes in-scan pruning trustworthy.
+
+The heavyweight lock is ``test_masked_prune_matches_shrink``: a FedDUMAP
+run with ``Prune(mode="mask")`` (every round inside compiled scan chunks,
+no re-jit) must train EXACTLY like ``Prune(mode="shrink")`` (the legacy
+re-materializing path) on a normalization-free model — compacting the
+masked params at the kept indices reproduces the shrunk params.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    Callback,
+    Eval,
+    FedAPConfig,
+    FederatedTrainer,
+    FLConfig,
+    Prune,
+    Scan,
+    Snapshot,
+    TrainPlan,
+    baselines,
+    engine,
+    fedap_plan,
+    feddumap_config,
+    pruning,
+)
+from repro.core.fedap import fedap_decision
+from repro.data import build_federated_data
+from repro.data.synthetic import SyntheticSpec
+from repro.models import SimpleCNN
+
+
+# ---------------------------------------------------------------------------
+# Plan construction / compilation (host-only, no jit)
+# ---------------------------------------------------------------------------
+
+class TestPlanCompilation:
+    def test_consecutive_scans_merge(self):
+        plan = TrainPlan(Scan(3), Scan(2), Eval(), Scan(1), Scan(1), Scan(1))
+        assert plan.compiled() == (Scan(5), Eval(), Scan(3))
+        assert plan.total_rounds == 8
+        assert plan.chunk_lengths() == (3, 5)
+
+    def test_nested_iterables_flatten(self):
+        plan = TrainPlan([Scan(2), Eval()], Scan(2))
+        assert plan.events == (Scan(2), Eval(), Scan(2))
+
+    def test_event_validation(self):
+        with pytest.raises(ValueError):
+            Scan(0)
+        with pytest.raises(ValueError):
+            Prune(mode="sparsify")
+        with pytest.raises(TypeError):
+            TrainPlan(Scan(1), "eval")
+
+    def test_uses_masks(self):
+        assert TrainPlan(Scan(1), Prune(mode="mask")).uses_masks
+        assert not TrainPlan(Scan(1), Prune(mode="shrink")).uses_masks
+
+    def test_standard_builder_matches_legacy_eval_cadence(self):
+        plan = TrainPlan.standard(7, eval_every=3)
+        assert plan.events == (Scan(3), Eval(), Scan(3), Eval(),
+                               Scan(1), Eval())
+
+    def test_fedap_plan_schedules_prune_after_round(self):
+        plan = fedap_plan(6, prune_round=2, mode="mask", eval_every=3)
+        assert plan.events == (Scan(2), Prune(mode="mask"), Scan(1), Eval(),
+                               Scan(3), Eval())
+        with pytest.raises(ValueError):
+            fedap_plan(6, prune_round=7)
+
+    def test_with_callback_interleaves(self):
+        fn = lambda tr, t, p: None
+        plan = TrainPlan.with_callback(4, fn, every=2, eval_every=4)
+        assert plan.events == (Scan(2), Callback(fn), Scan(2), Eval(),
+                               Callback(fn))
+
+    def test_eval_every_zero_means_no_evals(self):
+        fn = lambda tr, t, p: None
+        plan = TrainPlan.with_callback(3, fn, eval_every=0)
+        assert not any(isinstance(e, Eval) for e in plan.events)
+        with pytest.raises(ValueError, match="eval_every"):
+            TrainPlan.standard(3, eval_every=0)
+        with pytest.raises(ValueError, match="eval_every"):
+            fedap_plan(4, prune_round=2, eval_every=0)
+
+
+class TestFLConfigValidation:
+    def test_bad_local_momentum_fails_at_construction(self):
+        with pytest.raises(ValueError, match="local_momentum"):
+            FLConfig(local_momentum="nesterov")
+
+    def test_bad_sampling_fails_fast(self):
+        with pytest.raises(ValueError, match="clients_per_round"):
+            FLConfig(num_clients=5, clients_per_round=10)
+        with pytest.raises(ValueError, match="batch_size"):
+            FLConfig(batch_size=0)
+        with pytest.raises(ValueError, match="lr"):
+            FLConfig(lr=-0.1)
+
+
+# ---------------------------------------------------------------------------
+# Execution over the real engine
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def tiny_world():
+    # build_federated_data holds out 1000 training samples for the server
+    # pool, so train_size must exceed device_pool + 1000
+    spec = SyntheticSpec(num_classes=10, image_shape=(8, 8, 3),
+                         train_size=1600, test_size=100, noise_scale=0.5)
+    data = build_federated_data(num_clients=6, server_fraction=0.1,
+                                device_pool=600, spec=spec)
+    model = SimpleCNN(num_classes=10, image_shape=(8, 8, 3),
+                      channels=(4, 8, 8), fc_width=16)
+    return data, model
+
+
+CFG = dict(num_clients=6, clients_per_round=3, local_epochs=1,
+           batch_size=10, lr=0.05)
+
+
+class TestExecutor:
+    def test_run_result_structure(self, tiny_world):
+        data, model = tiny_world
+        tr = FederatedTrainer(model, data, feddumap_config(**CFG))
+        res = tr.run(TrainPlan(Scan(2), Snapshot(name="mid"), Scan(1),
+                               Eval()))
+        assert res.history["round"] == [2]
+        assert np.isfinite(res.history["loss"][0])
+        assert res.artifacts["mid"]["round"] == 2
+        assert float(res.state["round"]) == 3.0
+        # snapshot is a live copy, distinct from the final params
+        assert (jax.tree.leaves(res.artifacts["mid"]["params"])[0]
+                is not jax.tree.leaves(res.params)[0])
+
+    def test_int_plan_equals_standard_plan(self, tiny_world):
+        data, model = tiny_world
+        cfg = feddumap_config(**CFG)
+        res_a = FederatedTrainer(model, data, cfg).run(4, eval_every=2)
+        res_b = FederatedTrainer(model, data, cfg).run(
+            TrainPlan.standard(4, eval_every=2))
+        np.testing.assert_allclose(res_a.history["acc"], res_b.history["acc"])
+        for a, b in zip(jax.tree.leaves(res_a.params),
+                        jax.tree.leaves(res_b.params)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_callback_replacement_restarts_state(self, tiny_world):
+        data, model = tiny_world
+        seen = []
+
+        def cb(trainer, t, params):
+            seen.append(t)
+            if t == 1:
+                return jax.tree.map(jnp.zeros_like, params)
+            return None
+
+        tr = FederatedTrainer(model, data, feddumap_config(**CFG))
+        res = tr.run(TrainPlan.with_callback(3, cb, eval_every=3))
+        assert seen == [0, 1, 2]
+        assert float(res.state["round"]) == 3.0   # counter survived restart
+
+    def test_compiled_engine_cache_shared_across_trainers(self, tiny_world):
+        data, model = tiny_world
+        cfg = feddumap_config(**CFG)
+        tr_a = FederatedTrainer(model, data, cfg)
+        tr_b = FederatedTrainer(model, data, cfg)
+        assert tr_a._compiled() is tr_b._compiled()
+        # different engine switches -> different compiled programs
+        cfg2 = baselines.fedavg_config(**CFG)
+        assert (FederatedTrainer(model, data, cfg2)._compiled()
+                is not tr_a._compiled())
+
+
+class TestFedAPPlan:
+    @pytest.fixture(scope="class")
+    def pruned_runs(self, tiny_world):
+        data, model = tiny_world
+        # min_rate forces a real compression budget: the pure eigen-gap rule
+        # prunes nothing on this easy synthetic task, which would make the
+        # equivalence below vacuous
+        apcfg = FedAPConfig(prune_round=2, probe_size=8, participants=2,
+                            min_rate=0.5)
+        cfg = feddumap_config(**CFG, fedap=apcfg)
+
+        def run(mode):
+            tr = FederatedTrainer(model, data, cfg)
+            plan = fedap_plan(4, prune_round=2, mode=mode, eval_every=2)
+            return tr, plan, tr.run(plan)
+
+        return run("mask"), run("shrink")
+
+    def test_masked_prune_matches_shrink(self, tiny_world, pruned_runs):
+        """Acceptance lock: the in-scan masked prune trains EXACTLY like the
+        re-materializing prune on a norm-free model — compacting the masked
+        params at the kept indices reproduces the shrunk params."""
+        data, model = tiny_world
+        (_, _, res_m), (_, _, res_s) = pruned_runs
+        kept_m = res_m.artifacts["prune"]["kept"]
+        kept_s = res_s.artifacts["prune"]["kept"]
+        # the decision actually pruned (min_rate floor bit)
+        assert sum(len(v) for v in kept_m.values()) < 4 + 8 + 8
+        assert {k: v.tolist() for k, v in kept_m.items()} \
+            == {k: v.tolist() for k, v in kept_s.items()}
+
+        spec = model.prune_spec(res_m.params)
+        compacted = pruning.shrink_params(res_m.params, spec, kept_m)
+        for a, b in zip(jax.tree.leaves(compacted),
+                        jax.tree.leaves(res_s.params)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=5e-5)
+        np.testing.assert_allclose(res_m.history["tau_eff"],
+                                   res_s.history["tau_eff"], atol=1e-4)
+
+    def test_masked_plan_never_rejits(self, tiny_world, pruned_runs):
+        """Every round of the masked plan runs inside compiled scan chunks:
+        the chunk program traces once per distinct chunk length and the
+        prune event adds NO new trace (static shapes, masks in the carry)."""
+        (tr, plan, _), _ = pruned_runs
+        ce = tr._compiled(use_masks=True)
+        assert ce.chunk._cache_size() == len(plan.chunk_lengths())
+
+    def test_masked_artifacts_and_zeroed_params(self, pruned_runs):
+        (_, _, res_m), _ = pruned_runs
+        art = res_m.artifacts["prune"]
+        assert art["mode"] == "mask"
+        assert 0.0 <= art["p_star"] <= 0.9
+        assert set(art["filter_masks"]) == set(art["kept"])
+        for p, m in zip(jax.tree.leaves(res_m.params),
+                        jax.tree.leaves(res_m.state["masks"])):
+            np.testing.assert_array_equal(
+                np.asarray(p)[np.asarray(m) == 0], 0.0)
+
+    def test_callback_after_masked_prune_keeps_masks(self, tiny_world):
+        """A Callback replacing params after a Prune(mode='mask') must not
+        discard the masks: the decision stays in force across the state
+        rebuild and the replacement params are re-masked."""
+        data, model = tiny_world
+        apcfg = FedAPConfig(prune_round=1, probe_size=8, participants=2,
+                            min_rate=0.5)
+        cfg = feddumap_config(**CFG, fedap=apcfg)
+        tr = FederatedTrainer(model, data, cfg)
+        cb = lambda trainer, t, params: jax.tree.map(
+            lambda p: p + 1.0, params)            # deliberately unmasked
+        res = tr.run(TrainPlan(Scan(1), Prune(mode="mask"), Callback(cb),
+                               Scan(1), Eval()))
+        masked_coords = 0
+        for p, m in zip(jax.tree.leaves(res.params),
+                        jax.tree.leaves(res.state["masks"])):
+            np.testing.assert_array_equal(
+                np.asarray(p)[np.asarray(m) == 0], 0.0)
+            masked_coords += int(np.sum(np.asarray(m) == 0))
+        assert masked_coords > 0
+
+    def test_shrink_records_params_before(self, pruned_runs):
+        _, (_, _, res_s) = pruned_runs
+        before = res_s.artifacts["prune"]["params_before"]
+        assert (jax.tree.map(jnp.shape, before)
+                != jax.tree.map(jnp.shape, res_s.params))
+
+    def test_shrink_event_reproduces_legacy_hook_path(self, tiny_world):
+        """Prune(mode="shrink") must produce exactly what the legacy
+        ``on_round_end`` hook protocol produced: per-round chunks, FedAP
+        decision on a copy of the params, shrink, momentum restart with the
+        round counter preserved."""
+        data, model = tiny_world
+        apcfg = FedAPConfig(prune_round=2, probe_size=8, participants=2,
+                            min_rate=0.5)
+        cfg = feddumap_config(**CFG, fedap=apcfg)
+
+        tr = FederatedTrainer(model, data, cfg)
+        res = tr.run(fedap_plan(4, prune_round=2, mode="shrink",
+                                eval_every=4))
+
+        # legacy emulation: length=1 chunks + host hook after every round
+        tr2 = FederatedTrainer(model, data, cfg)
+        ce = tr2._compiled()
+        data_dev = tr2._device_data()
+        params0 = model.init(jax.random.key(cfg.seed))
+        init_params = jax.tree.map(jnp.copy, params0)
+        state = engine.init_round_state(jax.tree.map(jnp.copy, params0),
+                                        ce.eng)
+        for t in range(4):
+            state, tr2._key, _ = ce.chunk(state, tr2._key, data_dev,
+                                          length=1)
+            if t + 1 == apcfg.prune_round:
+                params = jax.tree.map(jnp.copy, state["params"])
+                dec = fedap_decision(model, data, apcfg, params,
+                                     init_params=init_params,
+                                     rng=np.random.default_rng(cfg.seed))
+                spec = model.prune_spec(params)
+                round_ = state["round"]
+                state = engine.init_round_state(
+                    pruning.shrink_params(params, spec, dec.kept), ce.eng)
+                state["round"] = round_
+
+        for a, b in zip(jax.tree.leaves(res.params),
+                        jax.tree.leaves(state["params"])):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+class TestMaskedModelRouting:
+    def test_masked_apply_equals_masked_params(self, tiny_world):
+        """Model-level mask routing (feature-map masking + masked_dense) is
+        numerically the mask-multiplied parameter tree."""
+        data, model = tiny_world
+        params = model.init(jax.random.key(1))
+        spec = model.prune_spec(params)
+        kept = {l.name: np.sort(np.random.default_rng(0).choice(
+            pruning.get_path(params, l.weight).shape[l.filter_axis],
+            size=3, replace=False)) for l in spec.layers}
+        fmask = pruning.filter_masks(params, spec, kept)
+        pmask = pruning.param_masks(params, spec, kept)
+        x = jnp.asarray(data.server_x[:4])
+
+        via_masks = model.apply(params, x, masks=fmask)
+        via_params = model.apply(engine.apply_masks(params, pmask), x)
+        np.testing.assert_allclose(np.asarray(via_masks),
+                                   np.asarray(via_params), atol=1e-6)
+
+    def test_masked_dense_routes_pallas_when_aligned(self):
+        """128-aligned shapes go through the Pallas masked_matmul kernel
+        (interpret mode on CPU): fully-pruned column blocks are skipped,
+        partially-kept blocks are re-masked elementwise — exact."""
+        from repro.models import masked_dense
+
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.standard_normal((128, 256)), jnp.float32)
+        w = jnp.asarray(rng.standard_normal((256, 256)), jnp.float32)
+        mask = np.ones((256,), np.float32)
+        mask[128:] = 0.0          # second block fully pruned
+        mask[7] = 0.0             # first block partially pruned
+        b = jnp.asarray(rng.standard_normal((256,)), jnp.float32)
+        out = masked_dense(x, w, jnp.asarray(mask), b)
+        ref = (x @ w + b) * mask
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=1e-4)
+
+    def test_lenet_masked_fc_fallback(self):
+        """LeNet's fc widths are not 128-aligned: masked_dense falls back to
+        the XLA path and must still equal the mask-multiplied params."""
+        from repro.models import LeNet5
+
+        model = LeNet5(num_classes=10, image_shape=(8, 8, 3))
+        params = model.init(jax.random.key(0))
+        spec = model.prune_spec(params)
+        kept = {"fc1": np.arange(0, 120, 2), "fc2": np.arange(0, 84, 3)}
+        spec = type(spec)(layers=tuple(l for l in spec.layers
+                                       if l.name in kept))
+        fmask = pruning.filter_masks(params, spec, kept)
+        pmask = pruning.param_masks(params, spec, kept)
+        x = jnp.asarray(np.random.default_rng(1).standard_normal(
+            (4, 8, 8, 3)), jnp.float32)
+        via_masks = model.apply(params, x, masks=fmask)
+        via_params = model.apply(engine.apply_masks(params, pmask), x)
+        np.testing.assert_allclose(np.asarray(via_masks),
+                                   np.asarray(via_params), atol=1e-5)

@@ -14,9 +14,12 @@ from repro.core.pruning import (
     expected_rate_from_spectrum,
     feature_map_ranks,
     filter_masks,
+    get_path,
     global_threshold,
+    param_masks,
     per_layer_rates,
     select_filters,
+    set_path,
     shrink_params,
 )
 
@@ -133,6 +136,78 @@ class TestShrink:
         spec = PruneSpec(layers=(PrunableLayer("conv", ("conv", "w"), 3),))
         masks = filter_masks(params, spec, {"conv": np.asarray([1, 2])})
         np.testing.assert_allclose(masks["conv"], [0, 1, 1, 0, 0, 0, 0, 0])
+
+    def test_param_masks_zero_exactly_the_shrunk_slices(self):
+        params = {
+            "conv": {"w": jnp.ones((3, 3, 4, 16)), "b": jnp.ones((16,))},
+            "next": {"w": jnp.ones((3, 3, 16, 8))},
+        }
+        spec = PruneSpec(layers=(
+            PrunableLayer("conv", ("conv", "w"), 3,
+                          (CoupledParam(("conv", "b"), 0),
+                           CoupledParam(("next", "w"), 2))),
+        ))
+        kept = {"conv": np.asarray([0, 3, 7, 11])}
+        masks = param_masks(params, spec, kept)
+        keep = np.zeros(16)
+        keep[kept["conv"]] = 1.0
+        np.testing.assert_allclose(masks["conv"]["b"], keep)
+        np.testing.assert_allclose(masks["conv"]["w"],
+                                   np.broadcast_to(keep, (3, 3, 4, 16)))
+        np.testing.assert_allclose(
+            masks["next"]["w"],
+            np.broadcast_to(keep[None, None, :, None], (3, 3, 16, 8)))
+        # the dual invariant: shrinking the mask-multiplied params drops
+        # only ones, shrinking the complement drops only zeros
+        masked = jax.tree.map(lambda p, m: p * m, params, masks)
+        shrunk = shrink_params(masked, spec, kept)
+        assert all(bool(jnp.all(x == 1)) for x in jax.tree.leaves(shrunk))
+
+
+class TestPathAddressing:
+    """get_path/set_path go through jax.tree_util key-paths, so PruneSpec
+    works on non-dict pytrees (lists, tuples, namedtuples, registered
+    dataclasses) — regression for the dict-only implementation."""
+
+    def test_list_and_tuple_pytrees(self):
+        tree = [{"w": jnp.ones((2, 4))}, ({"w": jnp.zeros((4, 3))},)]
+        assert get_path(tree, (0, "w")).shape == (2, 4)
+        out = set_path(tree, (1, 0, "w"), jnp.ones((4, 3)))
+        assert float(jnp.sum(out[1][0]["w"])) == 12.0
+        assert float(jnp.sum(tree[1][0]["w"])) == 0.0   # functional update
+        assert isinstance(out[1], tuple)                # structure kept
+
+    def test_missing_path_raises(self):
+        with pytest.raises(KeyError):
+            get_path({"a": {"w": jnp.zeros(2)}}, ("a", "nope"))
+        with pytest.raises(KeyError):
+            set_path({"a": {"w": jnp.zeros(2)}}, ("b",), jnp.zeros(2))
+
+    def test_shrink_on_dataclass_pytree(self):
+        import dataclasses
+
+        @dataclasses.dataclass
+        class Block:
+            w: object
+            b: object
+
+        jax.tree_util.register_dataclass(Block, data_fields=["w", "b"],
+                                         meta_fields=[])
+        params = [Block(w=jnp.zeros((3, 3, 4, 16)), b=jnp.zeros((16,))),
+                  Block(w=jnp.zeros((3, 3, 16, 8)), b=jnp.zeros((8,)))]
+        spec = PruneSpec(layers=(
+            PrunableLayer("conv", (0, "w"), 3,
+                          (CoupledParam((0, "b"), 0),
+                           CoupledParam((1, "w"), 2))),
+        ))
+        kept = {"conv": np.asarray([0, 3, 7, 11])}
+        out = shrink_params(params, spec, kept)
+        assert out[0].w.shape == (3, 3, 4, 4)
+        assert out[0].b.shape == (4,)
+        assert out[1].w.shape == (3, 3, 4, 8)
+        masks = param_masks(params, spec, kept)
+        assert masks[0].w.shape == (3, 3, 4, 16)
+        assert float(jnp.sum(masks[0].b)) == 4.0
 
 
 class TestHRankScores:
