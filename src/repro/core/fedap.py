@@ -22,6 +22,7 @@ how it is APPLIED is the plan event's mode:
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any
 
 import jax
@@ -91,8 +92,15 @@ def fedap_decision(model, data, cfg: FedAPConfig, params: Any, *,
     p_bar = niid.global_distribution(data.client_dists, data.sizes)
 
     # --- per-participant expected rates (index 0 = server) ----------------
-    ids = rng.choice(data.client_x.shape[0], size=cfg.participants,
-                     replace=False)
+    num_clients = data.client_x.shape[0]
+    draw = min(cfg.participants, num_clients)
+    if draw < cfg.participants:
+        warnings.warn(
+            f"FedAPConfig.participants={cfg.participants} exceeds the "
+            f"{num_clients} available clients; probing all {num_clients} "
+            "instead (every client's local data contributes a rate)",
+            stacklevel=2)
+    ids = rng.choice(num_clients, size=draw, replace=False)
     rates, sizes, degrees = [], [], []
     r0 = participant_rate(model, params, init_params,
                           jnp.asarray(data.server_x),

@@ -47,7 +47,11 @@ class Scan:
 
 @dataclasses.dataclass(frozen=True)
 class Eval:
-    """Evaluate the global model on the test split; appends to history."""
+    """Evaluate the global model on the test split; appends to history.
+
+    ``history["round"]`` records the number of completed rounds at the
+    Eval, so a leading ``Eval()`` (evaluate-before-training) logs round 0
+    and a trailing one logs ``plan.total_rounds``."""
 
     name: str = "eval"
 
@@ -59,6 +63,11 @@ class Prune:
     mode="mask":   static shapes — keep-masks enter the scan carry and the
                    engine applies them every round (`EngineConfig.use_masks`);
                    the surrounding Scan segments stay one compiled program.
+                   With ``FLConfig(masked_compute="kernel")`` filter-level
+                   masks ride along too and masked dense layers run the
+                   differentiable Pallas ``masked_matmul`` kernel — pruned
+                   blocks are skipped on the MXU during training, not just
+                   zeroed in the parameter tree.
     mode="shrink": re-materialize the pruned model (true FLOP shrink on
                    device); the next Scan segment re-traces at the new
                    shapes, exactly like the legacy hook path.
@@ -234,6 +243,8 @@ class RunResult:
     params     final global params (masked-to-zero coordinates included in
                mask mode — ``artifacts["prune"]["kept"]`` compacts them)
     history    {"round", "acc", "loss", "tau_eff", "time"} from Eval events
+               ("round" = completed rounds at the Eval; a leading Eval
+               logs 0, and its "tau_eff" is 0.0 — no round has run yet)
     artifacts  per-event outputs keyed by event name (deduplicated with
                ``#k`` suffixes): Prune -> {"p_star", "layer_rates", "kept",
                "filter_masks"|"params_before"}, Snapshot -> {"round",

@@ -373,9 +373,20 @@ class FedAPConfig:
     participants: int = 8          # devices (beyond the server) probed for p*_k
 
     def __post_init__(self):
+        # Mirror FLConfig.__post_init__: bad switches fail HERE, at
+        # construction, with a clear message — not as an opaque numpy
+        # error deep inside fedap_decision's probe draw.
         if not 0.0 <= self.min_rate <= self.max_rate:
             raise ValueError(f"need 0 <= min_rate <= max_rate, got "
                              f"min_rate={self.min_rate} max_rate={self.max_rate}")
+        if self.participants < 0:
+            raise ValueError(
+                f"participants must be >= 0, got {self.participants}")
+        if self.probe_size < 1:
+            raise ValueError(f"probe_size must be >= 1, got {self.probe_size}")
+        if self.prune_round < 1:
+            raise ValueError(
+                f"prune_round must be >= 1, got {self.prune_round}")
 
 
 def fedap_rates(

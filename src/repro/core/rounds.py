@@ -25,7 +25,11 @@ module only adds the simulation plumbing around it:
     and config (e.g. the integration-test matrix) compile once;
   * ``Prune(mode="mask")`` injects FedAP keep-masks into the scan carry
     (``EngineConfig.use_masks``) — the prune round and everything after it
-    run inside the SAME compiled program; ``Prune(mode="shrink")``
+    run inside the SAME compiled program; with
+    ``FLConfig(masked_compute="kernel")`` filter-level masks also ride in
+    the carry and the model fns route masked dense layers through the
+    differentiable Pallas ``masked_matmul`` kernel, realizing the pruned
+    FLOP savings during training; ``Prune(mode="shrink")``
     re-materializes the smaller model at the segment boundary (the next
     chunk re-traces at the new shapes);
   * all clients share n_k in the paper's label-shard protocol, so local
@@ -101,6 +105,11 @@ class FLConfig:
     use_server_update: bool = True       # FedDU
     local_momentum: str = "none"         # none | restart | communicated
     server_momentum: bool = False
+    # Masked-mode compute path: "params" zeroes the parameter tree only
+    # (full-density matmuls); "kernel" threads filter masks into the model
+    # so masked dense layers run the differentiable Pallas masked_matmul
+    # (FedAP's FLOP savings realized during training).
+    masked_compute: str = "params"
     # Server data usage per round: tau = server_epochs * floor(n0 / B_server).
     server_epochs: int = 1
     server_batch_size: int = 32
@@ -115,6 +124,10 @@ class FLConfig:
             raise ValueError(
                 f"unknown local_momentum: {self.local_momentum!r} "
                 "(expected 'none', 'restart' or 'communicated')")
+        if self.masked_compute not in ("params", "kernel"):
+            raise ValueError(
+                f"unknown masked_compute: {self.masked_compute!r} "
+                "(expected 'params' or 'kernel')")
         if not 1 <= self.clients_per_round <= self.num_clients:
             raise ValueError(
                 f"clients_per_round must be in [1, num_clients="
@@ -146,6 +159,7 @@ def engine_config(cfg: FLConfig) -> EngineConfig:
         use_server_update=cfg.use_server_update,
         local_momentum=cfg.local_momentum,
         server_momentum=cfg.server_momentum,
+        masked_compute=cfg.masked_compute,
         feddu=cfg.feddu, feddum=cfg.feddum)
 
 
@@ -190,11 +204,22 @@ def compiled_engine(model, eng: EngineConfig, sample_kw: dict) -> CompiledEngine
     if ce is not None:
         return ce
 
-    def grad_fn(p, b):
-        return jax.grad(lambda q: model.loss_and_acc(q, b[0], b[1])[0])(p)
+    if eng.use_masks and eng.masked_compute == "kernel":
+        # Mask-aware model fns: round_core passes the carry's filter masks
+        # as a third argument; the model routes masked dense layers through
+        # the differentiable Pallas masked_matmul kernel.
+        def grad_fn(p, b, fm):
+            return jax.grad(
+                lambda q: model.loss_and_acc(q, b[0], b[1], masks=fm)[0])(p)
 
-    def la_fn(p, b):
-        return model.loss_and_acc(p, b[0], b[1])
+        def la_fn(p, b, fm):
+            return model.loss_and_acc(p, b[0], b[1], masks=fm)
+    else:
+        def grad_fn(p, b):
+            return jax.grad(lambda q: model.loss_and_acc(q, b[0], b[1])[0])(p)
+
+        def la_fn(p, b):
+            return model.loss_and_acc(p, b[0], b[1])
 
     def chunk(state, key, data_dev, length):
         def body(carry, _):
@@ -258,6 +283,15 @@ class FederatedTrainer:
         eng = dataclasses.replace(self.engine_config, use_masks=use_masks)
         return compiled_engine(self.model, eng, self._sample_kw)
 
+    def _init_filter_masks(self, params):
+        """All-ones per-layer filter masks (``masked_compute="kernel"``):
+        the carry structure must be final from round 0 so the prune event
+        only swaps contents, never re-traces."""
+        from repro.core import pruning
+
+        spec = self.model.prune_spec(params)
+        return pruning.filter_masks(params, spec, {})
+
     def round_step(self, state, batch):
         """One round at explicit batches — the engine exactly as the pod
         path runs it; used by the differential/parity tests."""
@@ -285,8 +319,11 @@ class FederatedTrainer:
         # Prune events estimate the Lipschitz constant against the params
         # the run started from (the legacy hooks took them explicitly).
         init_params = jax.tree.map(jnp.copy, params0)
+        fmasks0 = (self._init_filter_masks(params0)
+                   if use_masks and eng.masked_compute == "kernel" else None)
         # the scan chunk donates its input state — never the caller's arrays
-        state = engine.init_round_state(jax.tree.map(jnp.copy, params0), eng)
+        state = engine.init_round_state(jax.tree.map(jnp.copy, params0), eng,
+                                        filter_masks=fmasks0)
         data_dev = self._device_data()
 
         history = {"round": [], "acc": [], "loss": [], "tau_eff": [],
@@ -312,7 +349,10 @@ class FederatedTrainer:
             elif isinstance(ev, Eval):
                 loss, acc = ce.evaluate(state["params"], data_dev["test_x"],
                                         data_dev["test_y"])
-                history["round"].append(t - 1)
+                # the TRUE round count: t rounds have completed when this
+                # Eval runs, so a leading Eval() (evaluate-before-training)
+                # records round 0, not a fabricated round -1
+                history["round"].append(t)
                 history["acc"].append(float(acc))
                 history["loss"].append(float(loss))
                 history["tau_eff"].append(last_tau)
@@ -331,8 +371,10 @@ class FederatedTrainer:
                 if maybe is not None:   # legacy contract: replace + restart
                     round_ = state["round"]
                     masks = state.get("masks")
+                    fmasks = state.get("filter_masks")
                     state = engine.init_round_state(
-                        jax.tree.map(jnp.copy, maybe), eng)
+                        jax.tree.map(jnp.copy, maybe), eng,
+                        filter_masks=fmasks)
                     state["round"] = round_
                     if masks is not None:
                         # keep an earlier Prune(mode="mask") decision in
@@ -370,14 +412,23 @@ class FederatedTrainer:
 
         if ev.mode == "mask":
             masks = pruning.param_masks(params, spec, decision.kept)
+            fmasks = pruning.filter_masks(params, spec, decision.kept)
             new_state = engine.init_round_state(
-                engine.apply_masks(params, masks), eng)
+                engine.apply_masks(params, masks), eng,
+                filter_masks=(fmasks if eng.masked_compute == "kernel"
+                              else None))
             new_state["masks"] = masks
-            art["filter_masks"] = pruning.filter_masks(params, spec,
-                                                       decision.kept)
+            art["filter_masks"] = fmasks
         else:
             new_params = pruning.shrink_params(params, spec, decision.kept)
-            new_state = engine.init_round_state(new_params, eng)
+            # kernel mode (reachable when a mask-mode prune elsewhere in
+            # the plan set use_masks): all-ones filter masks at the SHRUNK
+            # shapes — the compacted model has nothing left to skip
+            fm = (self._init_filter_masks(new_params)
+                  if eng.use_masks and eng.masked_compute == "kernel"
+                  else None)
+            new_state = engine.init_round_state(new_params, eng,
+                                                filter_masks=fm)
             art["params_before"] = params   # the shrink discards them
         new_state["round"] = round_
         return new_state, art

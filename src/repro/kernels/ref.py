@@ -70,3 +70,32 @@ def masked_matmul_ref(x, w, block_mask, *, block_n: int = 128):
     full_mask = jnp.repeat(jnp.asarray(block_mask, jnp.float32), block_n)
     out = x.astype(jnp.float32) @ w.astype(jnp.float32)
     return (out * full_mask[None, :]).astype(x.dtype)
+
+
+def masked_matmul_fwd_ref64(x, w, block_mask, *, block_n: int = 128):
+    """Float64 NumPy forward oracle: y = (x @ w) * column-block mask."""
+    import numpy as np
+
+    x64 = np.asarray(x, np.float64)
+    w64 = np.asarray(w, np.float64)
+    full_mask = np.repeat(np.asarray(block_mask, np.float64), block_n)
+    return (x64 @ w64) * full_mask[None, :]
+
+
+def masked_matmul_vjp_ref64(x, w, block_mask, dy, *, block_n: int = 128):
+    """Float64 NumPy backward oracle for ``masked_matmul``.
+
+    The primal is y = (x @ w) * m with m the expanded column-block mask, so
+
+        dx = (dy * m) @ w.T
+        dw = x.T @ (dy * m)     — pruned column blocks of dw exactly zero.
+
+    Returns (dx, dw) in float64.
+    """
+    import numpy as np
+
+    x64 = np.asarray(x, np.float64)
+    w64 = np.asarray(w, np.float64)
+    full_mask = np.repeat(np.asarray(block_mask, np.float64), block_n)
+    dym = np.asarray(dy, np.float64) * full_mask[None, :]
+    return dym @ w64.T, x64.T @ dym

@@ -64,6 +64,11 @@ class FLRunConfig:
     # like the params — sharding/fl_specs.py is key-generic over the state
     # dict), so the pod program prunes without a shape change or re-lower.
     use_masks: bool = False
+    # "kernel" additionally threads filter-level masks (replicated, tiny)
+    # into the model fns so masked dense layers run the differentiable
+    # Pallas masked_matmul; requires a masks-aware model
+    # (model.loss/apply accept masks=).  "params" masks the tree only.
+    masked_compute: str = "params"
 
 
 def token_accuracy(model, params, batch) -> jnp.ndarray:
@@ -75,11 +80,18 @@ def token_accuracy(model, params, batch) -> jnp.ndarray:
     return jnp.mean(ok)
 
 
-def loss_and_accuracy(model, params, batch):
+def loss_and_accuracy(model, params, batch, masks=None):
     """Single-forward loss + token accuracy (the Formula-7 acc gate fused
     into the first server gradient step — §Perf iteration B2: the separate
-    accuracy forward cost one extra server-batch pass per round)."""
-    logits, aux = model.apply(params, batch)
+    accuracy forward cost one extra server-batch pass per round).
+
+    ``masks`` (masked_compute="kernel" only) is forwarded to a masks-aware
+    ``model.apply``; None keeps the plain call so existing pod models need
+    no signature change."""
+    if masks is None:
+        logits, aux = model.apply(params, batch)
+    else:
+        logits, aux = model.apply(params, batch, masks=masks)
     labels = batch["labels"]
     mask = batch.get("loss_mask")
     logp = jax.nn.log_softmax(logits.astype(jnp.float32))
@@ -104,6 +116,7 @@ def engine_config(run: FLRunConfig) -> EngineConfig:
         local_momentum="restart" if run.use_momentum else "none",
         server_momentum=run.use_momentum,
         use_masks=run.use_masks,
+        masked_compute=run.masked_compute,
         feddu=run.feddu,
         feddum=FedDUMConfig(beta_server=run.beta_server,
                             beta_local=run.beta_local,
@@ -127,13 +140,23 @@ def make_fl_train_step(cfg: ModelConfig, run: FLRunConfig, num_clients: int,
     """
     model = build_model(cfg) if model is None else model
     eng = engine_config(run)
-    grad_fn = jax.grad(model.loss)
+    if eng.use_masks and eng.masked_compute == "kernel":
+        # masks-aware wiring: round_core passes the carry's filter masks
+        # as the third argument (the model must accept masks=)
+        def grad_fn(p, b, fm):
+            return jax.grad(lambda q: model.loss(q, b, masks=fm))(p)
 
-    def la_fn(p, b):
-        return loss_and_accuracy(model, p, b)
+        def la_fn(p, b, fm):
+            return loss_and_accuracy(model, p, b, masks=fm)
+    else:
+        grad_fn = jax.grad(model.loss)
 
-    def init_state(rng):
-        return init_round_state(model.init(rng), eng)
+        def la_fn(p, b):
+            return loss_and_accuracy(model, p, b)
+
+    def init_state(rng, filter_masks=None):
+        return init_round_state(model.init(rng), eng,
+                                filter_masks=filter_masks)
 
     def train_step(state, batch):
         new_state, metrics = round_core(eng, grad_fn, la_fn, state, batch)
@@ -142,21 +165,35 @@ def make_fl_train_step(cfg: ModelConfig, run: FLRunConfig, num_clients: int,
     return init_state, train_step
 
 
-def with_masks(state: dict, masks: Any) -> dict:
+def with_masks(state: dict, masks: Any, filter_masks: Any = None) -> dict:
     """Inject FedAP keep-masks into a running masked round state — the pod
     analogue of the simulation executor's ``Prune(mode="mask")`` event:
     momentum restarts, params are masked, shapes (and the lowered mesh
-    program) are untouched."""
+    program) are untouched.  ``filter_masks`` swaps the kernel-mode filter
+    masks too (required when the state carries a ``filter_masks`` slot —
+    its pytree structure must stay identical)."""
     from repro.core.engine import apply_masks
 
     if "masks" not in state:
         raise ValueError("state has no mask slot — build the step with "
                          "FLRunConfig(use_masks=True)")
+    if "filter_masks" in state and filter_masks is None:
+        raise ValueError(
+            "state carries a filter_masks slot (masked_compute='kernel') — "
+            "pass filter_masks=pruning.filter_masks(...) so the kernel path "
+            "prunes the same filters the param masks zero")
     new = {k: (jax.tree.map(jnp.zeros_like, v)
                if k in ("server_m", "global_m") else v)
            for k, v in state.items()}
     new["params"] = apply_masks(state["params"], masks)
     new["masks"] = masks
+    if filter_masks is not None:
+        if "filter_masks" not in state:
+            raise ValueError(
+                "filter_masks given but the state has no filter_masks slot — "
+                "build the step with FLRunConfig(masked_compute='kernel')")
+        new["filter_masks"] = jax.tree.map(
+            lambda m: jnp.array(m, jnp.float32), filter_masks)
     return new
 
 

@@ -18,9 +18,13 @@ Design constraints that matter for FedAP:
     static-shape masked mode (``pruning.filter_masks``): masked layers
     zero their feature maps, and dense layers with an output mask route
     through :func:`masked_dense` — the Pallas ``masked_matmul`` kernel
-    when shapes are 128-aligned (pruned column blocks skipped on the MXU),
-    an XLA fallback otherwise.  For 0/1 masks this is numerically
-    identical to running the mask-multiplied parameter tree.
+    when the feature dims are 128-aligned (pruned column blocks skipped
+    on the MXU; the batch dim is zero-padded to the block multiple), an
+    XLA fallback otherwise.  The kernel is differentiable (custom VJP
+    with block-skipping backward kernels), so the SAME path serves
+    training (``EngineConfig.masked_compute="kernel"``) and serving.
+    For 0/1 masks this is numerically identical to running the
+    mask-multiplied parameter tree.
 """
 from __future__ import annotations
 
@@ -91,21 +95,40 @@ def _mask_channels(h, masks, name):
 def masked_dense(x, w, mask, b=None, *, block: int = 128):
     """Dense layer ``x @ w (+ b)`` with an output-filter keep-mask.
 
-    When every dimension is a multiple of ``block`` the matmul routes
-    through the Pallas ``masked_matmul`` kernel: column blocks whose mask
-    is entirely zero are SKIPPED on the MXU, so structured pruning's FLOP
-    savings are realized at static shapes (partially-kept blocks are
-    computed and re-masked elementwise — exact for 0/1 masks).  Unaligned
-    shapes fall back to masking the XLA matmul.  The Pallas branch has no
-    custom VJP: it is a forward/serving path; training masks the params
-    instead (repro.core.engine, ``use_masks``).
+    When the feature dimensions K and N are multiples of ``block`` the
+    matmul routes through the Pallas ``masked_matmul`` kernel: column
+    blocks whose mask is entirely zero are SKIPPED on the MXU, so
+    structured pruning's FLOP savings are realized at static shapes
+    (partially-kept blocks are computed and re-masked elementwise — exact
+    for 0/1 masks).  The batch dimension M does NOT gate the kernel: real
+    batch sizes (10, 32) are zero-padded up to the 8-row sublane multiple
+    (a small M block of their own, not a full ``block`` rows) and the
+    result sliced back, so the kernel path is live in training and
+    serving alike.  Unaligned K/N fall back to masking the XLA matmul.
+
+    The kernel carries a ``jax.custom_vjp`` whose backward Pallas kernels
+    skip the same pruned blocks (and write exact-zero ``dw`` blocks), so
+    this routing is differentiable — the training engine uses it via
+    ``EngineConfig.masked_compute="kernel"``.
     """
     m, k = x.shape
     n = w.shape[-1]
-    if m % block == 0 and k % block == 0 and n % block == 0:
+    if k % block == 0 and n % block == 0:
         from repro.kernels.ops import masked_matmul
         block_mask = jnp.max(mask.reshape(n // block, block), axis=1)
-        y = masked_matmul(x, w, block_mask, block_n=block)
+        # Only the LANE dims (K, N) need the mask-granularity block; the
+        # sublane dim M pads to the next 8-row multiple (<= 7 wasted rows
+        # for ANY batch size, never a full ``block`` rows) and takes the
+        # largest 8-aligned tile that divides it: gcd(mp, block) is a
+        # multiple of 8 whenever both are, divides mp, and is <= block.
+        m_pad = -m % 8
+        mp = m + m_pad
+        bm = math.gcd(mp, block)
+        xp = jnp.pad(x, ((0, m_pad), (0, 0))) if m_pad else x
+        y = masked_matmul(xp, w, block_mask, block_m=bm, block_n=block,
+                          block_k=block)
+        if m_pad:
+            y = y[:m]
     else:
         y = x @ w
     if b is not None:
@@ -197,7 +220,13 @@ class SimpleCNN(PaperModel):
         fmaps["conv3"] = h
         b = h.shape[0]
         h = h.reshape(b, -1, h.shape[-1])                       # [B, spatial, C]
-        h = jax.nn.relu(jnp.einsum("bpc,pcf->bf", h, params["fc1"]["w"]) + params["fc1"]["b"])
+        if masks is not None and "fc1" in masks:
+            w1 = params["fc1"]["w"]
+            h = jax.nn.relu(masked_dense(h.reshape(b, -1),
+                                         w1.reshape(-1, w1.shape[-1]),
+                                         masks["fc1"], params["fc1"]["b"]))
+        else:
+            h = jax.nn.relu(jnp.einsum("bpc,pcf->bf", h, params["fc1"]["w"]) + params["fc1"]["b"])
         fmaps["fc1"] = h
         logits = h @ params["out"]["w"] + params["out"]["b"]
         return (logits, fmaps) if collect else logits

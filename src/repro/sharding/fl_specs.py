@@ -17,14 +17,24 @@ def _axis(axes: tuple):
 
 
 def fl_state_specs(state_shapes: Any, model_axes: Any, plan: MeshPlan) -> Any:
-    """Engine round state = {params, server_m, [global_m], [masks], round}:
-    every momentum buffer — and the FedAP keep-masks of the static-shape
-    masked mode (``EngineConfig.use_masks``) — mirrors the params' model
-    sharding (TP/FSDP, replicated over client axes); the round counter is
-    replicated.  Key-generic so the communicated-momentum (FedDA) state and
-    the mask slot shard without special-casing."""
-    return {k: (P() if k == "round" else param_specs(v, model_axes, plan))
-            for k, v in state_shapes.items()}
+    """Engine round state = {params, server_m, [global_m], [masks],
+    [filter_masks], round}: every momentum buffer — and the FedAP
+    keep-masks of the static-shape masked mode (``EngineConfig.use_masks``)
+    — mirrors the params' model sharding (TP/FSDP, replicated over client
+    axes); the round counter is replicated.  The kernel-mode
+    ``filter_masks`` slot (per-layer [d_l] vectors, a few KB) is fully
+    replicated: every shard needs the whole block mask to decide which MXU
+    blocks to skip.  Key-generic so the communicated-momentum (FedDA)
+    state and the mask slots shard without special-casing."""
+
+    def one(k, v):
+        if k == "round":
+            return P()
+        if k == "filter_masks":
+            return jax.tree.map(lambda _: P(), v)
+        return param_specs(v, model_axes, plan)
+
+    return {k: one(k, v) for k, v in state_shapes.items()}
 
 
 def fl_batch_partition_specs(batch_shapes: Any, plan: MeshPlan) -> Any:

@@ -174,6 +174,82 @@ def test_engine_matches_numpy_oracle_masked(world):
         np.testing.assert_allclose(np.asarray(leaf), ref_leaf, atol=1e-5)
 
 
+@pytest.mark.parametrize("mode", list(MODES))
+def test_kernel_masked_compute_matches_params_and_oracle(world, mode):
+    """masked_compute="kernel" (filter masks threaded into the model fns)
+    must match the param-masked engine AND the f64 oracle to <= 1e-5 in
+    every momentum mode.  For the toy softmax model the filter mask is an
+    output-class column mask, whose feature-level application
+    ((x @ w + b) * m) is algebraically the param-level one
+    (x @ (w * m) + b * m) — the same coupled-closure identity the CNN's
+    feature-map masking relies on."""
+    model, params, rounds = world
+    colmask = np.asarray([1.0, 0.0, 1.0, 1.0], np.float32)
+    masks = {"w": np.broadcast_to(colmask, (DIM, CLASSES)).copy(),
+             "b": colmask.copy()}
+    base = dict(lr=0.08, lr_decay=0.97, use_masks=True, **MODES[mode])
+    cfg_k = EngineConfig(masked_compute="kernel", **base)
+    cfg_p = EngineConfig(masked_compute="params", **base)
+
+    def la_kernel(p, b, fm):
+        return softmax_xent_acc((b[0] @ p["w"] + p["b"]) * fm["out"], b[1])
+
+    def grad_kernel(p, b, fm):
+        return jax.grad(lambda q: la_kernel(q, b, fm)[0])(p)
+
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *rounds)
+    state_k = engine.init_round_state(
+        jax.tree.map(jnp.asarray, params), cfg_k,
+        filter_masks={"out": jnp.ones((CLASSES,))})
+    state_k["masks"] = jax.tree.map(jnp.asarray, masks)
+    state_k["filter_masks"] = {"out": jnp.asarray(colmask)}
+
+    @jax.jit
+    def run_k(state, batches):
+        def body(st, b):
+            st, metrics = engine.round_core(cfg_k, grad_kernel, la_kernel,
+                                            st, b)
+            return st, metrics["tau_eff"]
+        return jax.lax.scan(body, state, batches)
+
+    state_k, taus_k = run_k(state_k, stacked)
+
+    # params-mode engine on the same masks
+    state_p = engine.init_round_state(jax.tree.map(jnp.asarray, params),
+                                      cfg_p)
+    state_p["masks"] = jax.tree.map(jnp.asarray, masks)
+    state_p, taus_p = _scan_engine(cfg_p, state_p, rounds)
+
+    # f64 oracle (params-mode mask semantics — the ground truth for both)
+    ref_state = ref_engine.ref_init_state(params, cfg_p, masks=masks)
+    for b in rounds:
+        ref_state, _ = ref_engine.ref_round(
+            cfg_p, model.np_grad, model.np_loss_and_acc, ref_state, b)
+
+    for lk, lp, lr_ in zip(jax.tree.leaves(state_k["params"]),
+                           jax.tree.leaves(state_p["params"]),
+                           jax.tree.leaves(ref_state["params"])):
+        np.testing.assert_allclose(np.asarray(lk), np.asarray(lp), atol=1e-5,
+                                   err_msg=f"kernel != params in mode={mode}")
+        np.testing.assert_allclose(np.asarray(lk), lr_, atol=1e-5,
+                                   err_msg=f"kernel != oracle in mode={mode}")
+    np.testing.assert_allclose(np.asarray(taus_k), np.asarray(taus_p),
+                               atol=1e-5)
+    # pruned coordinates stay exactly zero through the kernel path
+    for leaf, m in zip(jax.tree.leaves(state_k["params"]),
+                       jax.tree.leaves(masks)):
+        np.testing.assert_array_equal(np.asarray(leaf)[m == 0], 0.0)
+
+
+def test_init_round_state_kernel_mode_requires_filter_masks(world):
+    model, params, _ = world
+    cfg = EngineConfig(use_masks=True, masked_compute="kernel")
+    with pytest.raises(ValueError, match="filter_masks"):
+        engine.init_round_state(jax.tree.map(jnp.asarray, params), cfg)
+    with pytest.raises(ValueError, match="masked_compute"):
+        EngineConfig(masked_compute="dense")
+
+
 def test_all_ones_masks_equal_unmasked_engine(world):
     """use_masks with all-ones masks must be a numerical no-op, so a masked
     engine can be compiled up front and pruned mid-scan without a re-jit."""

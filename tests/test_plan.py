@@ -130,7 +130,7 @@ class TestExecutor:
         tr = FederatedTrainer(model, data, feddumap_config(**CFG))
         res = tr.run(TrainPlan(Scan(2), Snapshot(name="mid"), Scan(1),
                                Eval()))
-        assert res.history["round"] == [2]
+        assert res.history["round"] == [3]   # completed rounds at the Eval
         assert np.isfinite(res.history["loss"][0])
         assert res.artifacts["mid"]["round"] == 2
         assert float(res.state["round"]) == 3.0
@@ -148,6 +148,18 @@ class TestExecutor:
         for a, b in zip(jax.tree.leaves(res_a.params),
                         jax.tree.leaves(res_b.params)):
             np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_leading_eval_records_round_zero(self, tiny_world):
+        """Evaluate-before-training: a plan starting with Eval() must log
+        the true round count 0 (not the fabricated round -1 of the old
+        ``t - 1`` bookkeeping) with tau_eff 0.0 (no round has run)."""
+        data, model = tiny_world
+        tr = FederatedTrainer(model, data, feddumap_config(**CFG))
+        res = tr.run(TrainPlan(Eval(), Scan(2), Eval()))
+        assert res.history["round"] == [0, 2]
+        assert res.history["tau_eff"][0] == 0.0
+        assert res.history["tau_eff"][1] > 0.0
+        assert all(np.isfinite(res.history["loss"]))
 
     def test_callback_replacement_restarts_state(self, tiny_world):
         data, model = tiny_world
@@ -303,6 +315,212 @@ class TestFedAPPlan:
             np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
+class TestMaskedComputeKernel:
+    """masked_compute="kernel": the engine threads filter masks into the
+    model fns (differentiable Pallas masked_matmul under the masked dense
+    layers) — and must train EXACTLY like the param-masking engine, which
+    in turn equals the re-materializing shrink path on norm-free models."""
+
+    @pytest.fixture(scope="class")
+    def three_runs(self, tiny_world):
+        data, model = tiny_world
+        apcfg = FedAPConfig(prune_round=2, probe_size=8, participants=2,
+                            min_rate=0.5)
+
+        def run(mode, masked_compute):
+            cfg = feddumap_config(**CFG, fedap=apcfg,
+                                  masked_compute=masked_compute)
+            tr = FederatedTrainer(model, data, cfg)
+            plan = fedap_plan(4, prune_round=2, mode=mode, eval_every=2)
+            return tr, plan, tr.run(plan)
+
+        return (run("mask", "kernel"), run("mask", "params"),
+                run("shrink", "params"))
+
+    def test_kernel_equals_params_equals_shrink(self, tiny_world, three_runs):
+        data, model = tiny_world
+        (_, _, res_k), (_, _, res_p), (_, _, res_s) = three_runs
+        kept = res_k.artifacts["prune"]["kept"]
+        assert {k: v.tolist() for k, v in kept.items()} \
+            == {k: v.tolist()
+                for k, v in res_p.artifacts["prune"]["kept"].items()}
+        # the decision pruned for real (min_rate floor bit)
+        assert sum(len(v) for v in kept.values()) < 4 + 8 + 8
+        for a, b in zip(jax.tree.leaves(res_k.params),
+                        jax.tree.leaves(res_p.params)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=1e-5)
+        spec = model.prune_spec(res_k.params)
+        compacted = pruning.shrink_params(res_k.params, spec, kept)
+        for a, b in zip(jax.tree.leaves(compacted),
+                        jax.tree.leaves(res_s.params)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=5e-5)
+        np.testing.assert_allclose(res_k.history["tau_eff"],
+                                   res_p.history["tau_eff"], atol=1e-5)
+
+    def test_kernel_mode_carries_filter_masks_without_rejit(self, three_runs):
+        (tr, plan, res_k), _, _ = three_runs
+        assert set(res_k.state["filter_masks"]) == {"conv1", "conv2", "conv3"}
+        for name, fm in res_k.state["filter_masks"].items():
+            np.testing.assert_array_equal(
+                np.asarray(fm),
+                np.asarray(res_k.artifacts["prune"]["filter_masks"][name]))
+        # the prune event swapped carry contents only — one chunk program
+        ce = tr._compiled(use_masks=True)
+        assert ce.chunk._cache_size() == len(plan.chunk_lengths())
+
+    def test_shrink_after_mask_in_kernel_mode(self, tiny_world):
+        """The ROADMAP's mask-now-shrink-later pattern must run in kernel
+        mode: the shrink event rebuilds the carry with all-ones filter
+        masks at the SHRUNK shapes instead of crashing on the missing
+        filter_masks slot."""
+        data, model = tiny_world
+        apcfg = FedAPConfig(prune_round=1, probe_size=8, participants=2,
+                            min_rate=0.5)
+        cfg = feddumap_config(**CFG, fedap=apcfg, masked_compute="kernel")
+        tr = FederatedTrainer(model, data, cfg)
+        res = tr.run(TrainPlan(Scan(1), Prune(mode="mask"), Scan(1),
+                               Prune(mode="shrink"), Scan(1), Eval()))
+        # compacted shapes after the shrink, all-ones filter masks
+        assert (jax.tree.map(jnp.shape, res.params)
+                != jax.tree.map(jnp.shape, res.artifacts["prune#1"]
+                                ["params_before"]))
+        for fm in res.state["filter_masks"].values():
+            np.testing.assert_array_equal(np.asarray(fm), 1.0)
+        assert np.isfinite(res.history["loss"][-1])
+
+    def test_callback_preserves_filter_masks(self, tiny_world):
+        data, model = tiny_world
+        apcfg = FedAPConfig(prune_round=1, probe_size=8, participants=2,
+                            min_rate=0.5)
+        cfg = feddumap_config(**CFG, fedap=apcfg, masked_compute="kernel")
+        tr = FederatedTrainer(model, data, cfg)
+        cb = lambda trainer, t, params: jax.tree.map(lambda p: p + 1.0,
+                                                     params)
+        res = tr.run(TrainPlan(Scan(1), Prune(mode="mask"), Callback(cb),
+                               Scan(1), Eval()))
+        pruned_filters = sum(
+            int(np.sum(np.asarray(m) == 0))
+            for m in res.state["filter_masks"].values())
+        assert pruned_filters > 0
+
+
+class AlignedMLP:
+    """192 -> 128 -> 128(prunable, masked_dense) -> 10 — a model whose
+    masked layer IS 128-aligned, so kernel-mode training genuinely routes
+    through the Pallas masked_matmul (SimpleCNN's prunable layers are all
+    convs: its kernel mode only exercises feature-map masking)."""
+
+    def init(self, rng):
+        k1, k2, k3 = jax.random.split(rng, 3)
+        d = 8 * 8 * 3
+        he = lambda k, s, fi: (jax.random.normal(k, s)
+                               * (2.0 / fi) ** 0.5).astype(jnp.float32)
+        return {"fc1": {"w": he(k1, (d, 128), d),
+                        "b": jnp.zeros((128,), jnp.float32)},
+                "fc2": {"w": he(k2, (128, 128), 128),
+                        "b": jnp.zeros((128,), jnp.float32)},
+                "out": {"w": he(k3, (128, 10), 128),
+                        "b": jnp.zeros((10,), jnp.float32)}}
+
+    def apply(self, params, x, *, collect=False, masks=None):
+        from repro.models.cnn import masked_dense
+
+        h = x.reshape(x.shape[0], -1)
+        h = jax.nn.relu(h @ params["fc1"]["w"] + params["fc1"]["b"])
+        fmaps = {"fc1": h}
+        if masks is not None and "fc2" in masks:
+            h = jax.nn.relu(masked_dense(h, params["fc2"]["w"],
+                                         masks["fc2"], params["fc2"]["b"]))
+        else:
+            h = jax.nn.relu(h @ params["fc2"]["w"] + params["fc2"]["b"])
+        fmaps["fc2"] = h
+        logits = h @ params["out"]["w"] + params["out"]["b"]
+        return (logits, fmaps) if collect else logits
+
+    def loss_and_acc(self, params, x, y, *, masks=None):
+        from repro.models.cnn import softmax_xent_acc
+
+        return softmax_xent_acc(self.apply(params, x, masks=masks), y)
+
+    def feature_maps(self, params, x):
+        return self.apply(params, x, collect=True)[1]
+
+    def prune_spec(self, params):
+        from repro.core.pruning import (CoupledParam, PrunableLayer,
+                                        PruneSpec)
+
+        return PruneSpec(layers=(
+            PrunableLayer("fc2", ("fc2", "w"), 1,
+                          (CoupledParam(("fc2", "b"), 0),
+                           CoupledParam(("out", "w"), 0))),))
+
+
+class TestKernelPathInsideEngine:
+    """The Pallas masked_matmul must actually EXECUTE inside kernel-mode
+    engine training (not just in unit tests), and still match params mode."""
+
+    def test_kernel_routes_and_matches_params_mode(self, tiny_world,
+                                                   monkeypatch):
+        from repro.kernels import ops
+
+        data, _ = tiny_world
+        model = AlignedMLP()
+        apcfg = FedAPConfig(prune_round=1, probe_size=8, participants=2,
+                            min_rate=0.5)
+
+        def run(mc):
+            cfg = feddumap_config(**CFG, fedap=apcfg, masked_compute=mc)
+            tr = FederatedTrainer(model, data, cfg)
+            return tr.run(fedap_plan(3, prune_round=1, mode="mask",
+                                     eval_every=3))
+
+        calls = []
+        real = ops.masked_matmul
+
+        def spy(*a, **kw):
+            calls.append(a[0].shape)
+            return real(*a, **kw)
+
+        monkeypatch.setattr(ops, "masked_matmul", spy)
+        res_k = run("kernel")
+        # the kernel branch was traced into the engine's compiled round —
+        # local steps (B=10 -> padded 16) and server steps (B=32)
+        assert calls, "masked_matmul never routed inside the engine"
+        res_p = run("params")
+        kept = res_k.artifacts["prune"]["kept"]["fc2"]
+        assert 0 < len(kept) < 128            # the prune bit
+        for a, b in zip(jax.tree.leaves(res_k.params),
+                        jax.tree.leaves(res_p.params)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=1e-5)
+        for p, m in zip(jax.tree.leaves(res_k.params),
+                        jax.tree.leaves(res_k.state["masks"])):
+            np.testing.assert_array_equal(
+                np.asarray(p)[np.asarray(m) == 0], 0.0)
+
+
+class TestFedAPParticipantsClamp:
+    def test_config_validates_at_construction(self):
+        with pytest.raises(ValueError, match="participants"):
+            FedAPConfig(participants=-1)
+        with pytest.raises(ValueError, match="probe_size"):
+            FedAPConfig(probe_size=0)
+
+    def test_probe_draw_clamped_to_num_clients(self, tiny_world):
+        """participants > num_clients must not crash with an opaque numpy
+        error: the draw clamps to every available client, with a warning."""
+        data, model = tiny_world
+        apcfg = FedAPConfig(probe_size=8, participants=50, min_rate=0.5)
+        params = model.init(jax.random.key(0))
+        with pytest.warns(UserWarning, match="participants"):
+            dec = fedap_decision(model, data, apcfg, params,
+                                 init_params=params,
+                                 rng=np.random.default_rng(0))
+        assert 0.0 <= dec.p_star <= apcfg.max_rate
+
+
 class TestMaskedModelRouting:
     def test_masked_apply_equals_masked_params(self, tiny_world):
         """Model-level mask routing (feature-map masking + masked_dense) is
@@ -337,6 +555,55 @@ class TestMaskedModelRouting:
         b = jnp.asarray(rng.standard_normal((256,)), jnp.float32)
         out = masked_dense(x, w, jnp.asarray(mask), b)
         ref = (x @ w + b) * mask
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=1e-4)
+
+    def test_masked_dense_kernel_branch_taken_for_real_batch(self,
+                                                            monkeypatch):
+        """Regression: the Pallas branch used to be gated on ``m % block ==
+        0``, so realistic batch sizes (10, 32) silently fell back to the
+        dense XLA matmul.  The M-padding shim must route B=32 through the
+        kernel — and still match the dense reference exactly."""
+        from repro.kernels import ops
+        from repro.models import masked_dense
+
+        calls = []
+        real = ops.masked_matmul
+
+        def spy(x, w, block_mask, **kw):
+            calls.append(x.shape)
+            return real(x, w, block_mask, **kw)
+
+        monkeypatch.setattr(ops, "masked_matmul", spy)
+        rng = np.random.default_rng(0)
+        w = jnp.asarray(rng.standard_normal((256, 256)), jnp.float32)
+        mask = np.ones((256,), np.float32)
+        mask[128:] = 0.0
+        b = jnp.asarray(rng.standard_normal((256,)), jnp.float32)
+        for batch, padded in [(32, 32), (10, 16)]:
+            x = jnp.asarray(rng.standard_normal((batch, 256)), jnp.float32)
+            out = masked_dense(x, w, jnp.asarray(mask), b)
+            # padded only to the 8-row sublane multiple, not a full
+            # 128-row block of wasted work — then sliced back
+            assert calls[-1] == (padded, 256)
+            assert out.shape == (batch, 256)
+            ref = (x @ w + b) * mask
+            np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                       atol=1e-4)
+        assert len(calls) == 2           # the kernel branch ran both times
+
+    def test_masked_dense_threads_nondefault_block(self):
+        """block=64 must thread into ALL of block_m/n/k, not just block_n
+        (K=N=192 passes the 64-gate but is not 128-aligned)."""
+        from repro.models import masked_dense
+
+        rng = np.random.default_rng(2)
+        x = jnp.asarray(rng.standard_normal((10, 192)), jnp.float32)
+        w = jnp.asarray(rng.standard_normal((192, 192)), jnp.float32)
+        mask = np.ones((192,), np.float32)
+        mask[64:128] = 0.0
+        out = masked_dense(x, w, jnp.asarray(mask), block=64)
+        ref = (x @ w) * mask
         np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                    atol=1e-4)
 
