@@ -58,7 +58,7 @@ def make_model(name: str):
 def run_one(tag: str, *, model_name="cnn", algo="fedavg", p=0.05,
             server_niid="iid", rounds=ROUNDS, seed=0,
             feddu_overrides=None, prune_round=30, static_tau=None,
-            out_dir: Path = OUT):
+            backend="local", out_dir: Path = OUT):
     out_dir.mkdir(parents=True, exist_ok=True)
     path = out_dir / f"{tag}.json"
     if path.exists():
@@ -128,7 +128,7 @@ def run_one(tag: str, *, model_name="cnn", algo="fedavg", p=0.05,
     else:
         raise ValueError(algo)
 
-    trainer = FederatedTrainer(model, data, cfg)
+    trainer = FederatedTrainer(model, data, cfg, backend=backend)
     init_params = model.init(jax.random.key(seed))
     flops_before = model.flops_per_example(init_params, SPEC.image_shape)
     res = trainer.run(plan)

@@ -21,11 +21,18 @@ def main():
                              "prunefl", "hrank"])
     ap.add_argument("--rounds", type=int, default=30)
     ap.add_argument("--p", type=float, default=0.05)
+    ap.add_argument("--backend", default="local", choices=["local", "mesh"],
+                    help="execution backend: single-host scan, or the "
+                         "client-sharded device mesh (same numerics; run "
+                         "with XLA_FLAGS=--xla_force_host_platform_device_"
+                         "count=8 to simulate a mesh on CPU)")
     ap.add_argument("--out", default="/tmp/fl_paper_repro")
     args = ap.parse_args()
-    rec = PE.run_one(f"example_{args.algo}", algo=args.algo, p=args.p,
+    tag = (f"example_{args.algo}" if args.backend == "local"
+           else f"example_{args.algo}_{args.backend}")
+    rec = PE.run_one(tag, algo=args.algo, p=args.p,
                      rounds=args.rounds, prune_round=min(args.rounds // 2, 30),
-                     out_dir=Path(args.out))
+                     backend=args.backend, out_dir=Path(args.out))
     accs = rec["history"]["acc"]
     print(f"\n{args.algo}: final acc {rec['final_acc']:.3f}; trajectory "
           f"{[round(a, 3) for a in accs[:: max(1, len(accs) // 8)]]}")

@@ -8,11 +8,14 @@ Public surface:
   engine          — the unified scan/shard_map-safe round (round_core)
   ref_engine      — pure-NumPy oracle for differential-testing the engine
   plan            — declarative TrainPlan (Scan/Eval/Prune/Snapshot events)
-  rounds          — TrainPlan executor over the scan-compiled engine
+  backend         — the backend-agnostic PlanExecutor + the pluggable
+                    execution backends (LocalScanBackend / MeshBackend)
+  rounds          — FederatedTrainer facade over the backends
   baselines       — FedAvg / Data-sharing / Hybrid-FL / ServerM / DeviceM /
                     FedDA / FedDF / FedKT / IMC / PruneFL / HRank
 """
 from repro.core import (
+    backend,
     baselines,
     engine,
     fedap,
@@ -24,6 +27,11 @@ from repro.core import (
     ref_engine,
     rounds,
     server_update,
+)
+from repro.core.backend import (
+    LocalScanBackend,
+    MeshBackend,
+    PlanExecutor,
 )
 from repro.core.engine import EngineConfig, init_round_state, round_core
 from repro.core.plan import (
@@ -42,8 +50,9 @@ from repro.core.momentum import FedDUMConfig
 from repro.core.pruning import FedAPConfig, PruneSpec, PrunableLayer, CoupledParam
 
 __all__ = [
-    "baselines", "engine", "fedap", "momentum", "niid", "plan", "pruning",
-    "pruning_lm", "ref_engine", "rounds", "server_update",
+    "backend", "baselines", "engine", "fedap", "momentum", "niid", "plan",
+    "pruning", "pruning_lm", "ref_engine", "rounds", "server_update",
+    "PlanExecutor", "LocalScanBackend", "MeshBackend",
     "EngineConfig", "init_round_state", "round_core",
     "FederatedTrainer", "FLConfig", "feddumap_config",
     "TrainPlan", "Scan", "Eval", "Prune", "Snapshot", "Callback",

@@ -1,0 +1,694 @@
+"""Pluggable execution backends behind ONE backend-agnostic plan executor.
+
+A :class:`~repro.core.plan.TrainPlan` describes WHAT happens (Scan / Eval /
+Prune / Snapshot / Callback); this module decides WHERE it happens.  The
+:class:`PlanExecutor` owns the schedule loop — history and artifact
+bookkeeping, the Prune decision/apply split, the legacy Callback contract —
+and drives a narrow :class:`ExecutionBackend` protocol:
+
+    init_state(params)                 build the engine round state
+    run_chunk(state, key, length)      one compiled scan chunk of rounds
+    evaluate(state)                    (loss, acc) on the held-out split
+    prune_decision(state, init_params) FedAP Algorithm 3 (the DECISION)
+    apply_prune(state, mode, kept)     inject/apply it (mask or shrink)
+    snapshot(state)                    a safe copy of the global params
+    replace_params(state, params)      the legacy Callback restart contract
+
+Two implementations ship:
+
+  :class:`LocalScanBackend` — the single-host simulation path: session-
+      cached jitted scan chunks (`compiled_engine`) with device-side
+      `engine.sample_round_batches`; exactly the execution the differential
+      tests lock against the f64 oracle.
+
+  :class:`MeshBackend` — the same numerics, client-sharded over a device
+      mesh: the federated dataset is placed with the client dimension
+      sharded over the mesh's client axes
+      (`FederatedData.device_arrays(mesh=...)`), the in-scan sampled round
+      batch is sharding-constrained so the per-client local-epoch vmap and
+      the FedAvg reduction partition over the mesh
+      (`sharding.fl_specs.fl_sim_batch_specs`), and Prune events run
+      POD-SIDE: `fedap.fedap_decision_sharded` gathers the probe/Fisher
+      statistics from mesh-sharded participants and
+      `launch.steps.with_masks` injects the decision into the live state
+      without re-lowering the mesh program.
+
+Both backends share the scan-chunk builder below, including the
+double-buffered sampling mode (``prefetch=True``): the scan carry holds the
+NEXT round's already-gathered batch, so round t+1's client/server gathers
+are issued while round t computes — on accelerators the gather latency
+hides behind the round's compute.  The key chain and every drawn batch are
+IDENTICAL to the non-prefetching chunk (locked bit-exact by
+tests/test_plan.py), so prefetching is purely a scheduling change.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import engine
+from repro.core.engine import EngineConfig
+from repro.core.plan import (
+    Callback,
+    Eval,
+    Prune,
+    RunResult,
+    Scan,
+    Snapshot,
+    TrainPlan,
+)
+
+
+# ---------------------------------------------------------------------------
+# Shared engine wiring: model fns, sampling kwargs, the scan-chunk builder
+# ---------------------------------------------------------------------------
+
+def model_fns(model, eng: EngineConfig):
+    """(grad_fn, loss_and_acc_fn) for `engine.round_core` from a simulation
+    model (``loss_and_acc(params, x, y[, masks=])``).  Kernel-mode masked
+    compute threads the carry's filter masks as a third argument."""
+    if eng.use_masks and eng.masked_compute == "kernel":
+        def grad_fn(p, b, fm):
+            return jax.grad(
+                lambda q: model.loss_and_acc(q, b[0], b[1], masks=fm)[0])(p)
+
+        def la_fn(p, b, fm):
+            return model.loss_and_acc(p, b[0], b[1], masks=fm)
+    else:
+        def grad_fn(p, b):
+            return jax.grad(lambda q: model.loss_and_acc(q, b[0], b[1])[0])(p)
+
+        def la_fn(p, b):
+            return model.loss_and_acc(p, b[0], b[1])
+    return grad_fn, la_fn
+
+
+def sim_sample_kw(cfg, data) -> dict:
+    """The device-side sampling shape of one simulated round (shared by
+    every backend; part of the compiled-program cache key)."""
+    n_k = int(data.client_x.shape[1])
+    n0 = int(data.server_x.shape[0])
+    return dict(
+        clients_per_round=cfg.clients_per_round,
+        batch_size=cfg.batch_size,
+        local_steps=max(1, n_k // cfg.batch_size) * cfg.local_epochs,
+        server_batch=cfg.server_batch_size,
+        server_tau=max(1, n0 // cfg.server_batch_size) * cfg.server_epochs,
+    )
+
+
+def init_filter_masks(model, params):
+    """All-ones per-layer filter masks (``masked_compute="kernel"``): the
+    carry structure must be final from round 0 so a prune event only swaps
+    contents, never re-traces."""
+    from repro.core import pruning
+
+    spec = model.prune_spec(params)
+    return pruning.filter_masks(params, spec, {})
+
+
+def build_chunk(eng: EngineConfig, grad_fn, la_fn, sample_kw: dict, *,
+                prefetch: bool = True, constrain=None):
+    """``chunk(state, key, data_dev, length) -> (state, key, taus)`` — one
+    scan over `round_core` with device-side sampling.
+
+    ``constrain`` (MeshBackend) maps the sampled batch through sharding
+    constraints so the client axis partitions over the mesh.
+
+    ``prefetch=True`` double-buffers the sampling: the prologue draws round
+    0's batch, and every scan iteration gathers round t+1's batch BEFORE
+    running round t on the batch riding in the carry, so the gather can
+    overlap the round's compute.  Key accounting: the non-prefetch chunk
+    consumes splits sub_0..sub_{L-1} of the key chain and returns k_L; here
+    the prologue consumes sub_0 and iteration t consumes sub_{t+1}, while
+    the carry keeps the PREVIOUS chain key so the returned key is the same
+    k_L — draws and key chain are bit-identical, only the schedule moves.
+    (The final iteration's prefetched batch is discarded: it is the next
+    chunk's first draw, recomputed there.)
+    """
+
+    def sample(sub, data_dev):
+        batch = engine.sample_round_batches(sub, data_dev, **sample_kw)
+        return constrain(batch) if constrain is not None else batch
+
+    def serial_chunk(state, key, data_dev, length):
+        def body(carry, _):
+            st, k = carry
+            k, sub = jax.random.split(k)
+            batch = sample(sub, data_dev)
+            st, metrics = engine.round_core(eng, grad_fn, la_fn, st, batch)
+            return (st, k), metrics["tau_eff"]
+
+        (state, key), taus = jax.lax.scan(body, (state, key), None,
+                                          length=length)
+        return state, key, taus
+
+    if not prefetch:
+        return serial_chunk
+
+    def chunk(state, key, data_dev, length):
+        if length == 1:
+            # nothing to overlap with — the prefetch body would pay a
+            # second, discarded gather (length is trace-time static, and
+            # the draws/key chain are identical either way)
+            return serial_chunk(state, key, data_dev, 1)
+        k1, sub0 = jax.random.split(key)
+        batch0 = sample(sub0, data_dev)
+
+        def body(carry, _):
+            st, _, k, batch = carry
+            k_next, sub = jax.random.split(k)
+            nb = sample(sub, data_dev)          # round t+1, drawn during t
+            st, metrics = engine.round_core(eng, grad_fn, la_fn, st, batch)
+            return (st, k, k_next, nb), metrics["tau_eff"]
+
+        (state, key, _, _), taus = jax.lax.scan(
+            body, (state, key, k1, batch0), None, length=length)
+        return state, key, taus
+
+    return chunk
+
+
+def _match_placement(new: Any, ref: Any) -> Any:
+    """Place every leaf of ``new`` on its counterpart's NamedSharding in
+    ``ref`` — injected host arrays must not silently decay a sharded (or
+    mesh-replicated) SPMD state slot to single-device.  Plain single-device
+    leaves are left alone: committing them would change the local jit
+    cache key and force a needless re-trace."""
+    from jax.sharding import NamedSharding
+
+    return jax.tree.map(
+        lambda n, r: (jax.device_put(n, r.sharding)
+                      if isinstance(getattr(r, "sharding", None),
+                                    NamedSharding) else n), new, ref)
+
+
+def masked_round_state(state: dict, masks: Any, filter_masks: Any = None
+                       ) -> dict:
+    """Inject FedAP keep-masks into a live masked round state: momentum
+    restarts, params are masked, shapes and shardings — and therefore the
+    compiled (or lowered SPMD) program — are untouched.  The canonical
+    implementation behind both the executor's ``Prune(mode="mask")`` apply
+    and the pod path's :func:`repro.launch.steps.with_masks`."""
+    new = {k: (jax.tree.map(jnp.zeros_like, v)
+               if k in ("server_m", "global_m") else v)
+           for k, v in state.items()}
+    new["params"] = _match_placement(
+        engine.apply_masks(state["params"], masks), state["params"])
+    new["masks"] = _match_placement(
+        jax.tree.map(lambda m: jnp.asarray(m, jnp.float32), masks),
+        state["masks"])
+    if filter_masks is not None:
+        # copy, not asarray: the next scan chunk donates the state, and the
+        # caller retains the same mask arrays as prune artifacts
+        new["filter_masks"] = _match_placement(
+            jax.tree.map(lambda m: jnp.array(m, jnp.float32), filter_masks),
+            state["filter_masks"])
+    return new
+
+
+# ---------------------------------------------------------------------------
+# Session-scoped compiled-engine cache (the LocalScanBackend's programs)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class CompiledEngine:
+    """The jitted programs for one (model, engine config, sampling shape,
+    prefetch mode).  ``model`` is held as a strong reference so the
+    ``id(model)`` cache key stays valid for the lifetime of the entry."""
+
+    model: Any
+    eng: EngineConfig
+    chunk: Any        # (state, key, data_dev, *, length) -> (state, key, taus)
+    round_core: Any   # (state, batch) -> (state, metrics)
+    evaluate: Any     # (params, x, y) -> (loss, acc)
+
+
+_COMPILED_CACHE: dict[tuple, CompiledEngine] = {}
+_EVAL_CACHE: dict[int, tuple] = {}
+
+
+def clear_compiled_cache() -> None:
+    _COMPILED_CACHE.clear()
+    _EVAL_CACHE.clear()
+
+
+def compiled_engine(model, eng: EngineConfig, sample_kw: dict, *,
+                    prefetch: bool = True) -> CompiledEngine:
+    """Session-scoped cache of the jitted scan-chunk / round / eval
+    programs.  Trainers over the same model object and equal (engine
+    config, sampling shape, prefetch mode) share ONE compiled program set —
+    e.g. the integration-test matrix re-running baselines over a
+    module-scoped model fixture compiles each distinct configuration once
+    per session instead of once per trainer."""
+    key = (id(model), eng, tuple(sorted(sample_kw.items())), prefetch)
+    ce = _COMPILED_CACHE.get(key)
+    if ce is not None:
+        return ce
+
+    grad_fn, la_fn = model_fns(model, eng)
+    chunk = build_chunk(eng, grad_fn, la_fn, sample_kw, prefetch=prefetch)
+
+    ce = CompiledEngine(
+        model=model, eng=eng,
+        chunk=jax.jit(chunk, static_argnames=("length",), donate_argnums=(0,)),
+        round_core=jax.jit(
+            lambda state, batch: engine.round_core(eng, grad_fn, la_fn,
+                                                   state, batch)),
+        evaluate=eval_program(model))
+    _COMPILED_CACHE[key] = ce
+    return ce
+
+
+def eval_program(model):
+    """The one jitted ``loss_and_acc`` per model per session (shared by
+    every backend instance over that model)."""
+    ev = _EVAL_CACHE.get(id(model))
+    if ev is None:
+        ev = (model, jax.jit(model.loss_and_acc))
+        _EVAL_CACHE[id(model)] = ev
+    return ev[1]
+
+
+# ---------------------------------------------------------------------------
+# The backend protocol + the shared engine-state plumbing
+# ---------------------------------------------------------------------------
+
+@runtime_checkable
+class ExecutionBackend(Protocol):
+    """What the :class:`PlanExecutor` needs from an execution substrate."""
+
+    eng: EngineConfig
+
+    def init_state(self, params) -> dict: ...
+    def run_chunk(self, state: dict, key, length: int): ...
+    def evaluate(self, state: dict): ...
+    def prune_decision(self, state: dict, init_params): ...
+    def apply_prune(self, state: dict, mode: str, kept, *,
+                    compact_existing: bool = False): ...
+    def snapshot(self, state: dict): ...
+    def replace_params(self, state: dict, params) -> dict: ...
+
+
+class _EngineBackend:
+    """Backend plumbing shared by local and mesh execution: round-state
+    construction, the Prune apply (mask inject / shrink re-materialize /
+    momentum-preserving compaction), and the legacy Callback restart."""
+
+    model: Any
+    eng: EngineConfig
+
+    @property
+    def _kernel_masks(self) -> bool:
+        return self.eng.use_masks and self.eng.masked_compute == "kernel"
+
+    def _place_state(self, state: dict) -> dict:
+        """Hook for backends that pin state to explicit shardings."""
+        return state
+
+    def init_state(self, params) -> dict:
+        fmasks = (init_filter_masks(self.model, params)
+                  if self._kernel_masks else None)
+        # the scan chunk donates its input state — never the caller's arrays
+        state = engine.init_round_state(jax.tree.map(jnp.copy, params),
+                                        self.eng, filter_masks=fmasks)
+        return self._place_state(state)
+
+    def snapshot(self, state: dict):
+        # a copy: the next scan chunk donates the round state, which would
+        # invalidate retained params
+        return jax.tree.map(jnp.copy, state["params"])
+
+    def replace_params(self, state: dict, params) -> dict:
+        """The legacy hook contract: replacement params re-initialize the
+        round state (momentum restart) with the round counter preserved; an
+        earlier mask-mode prune decision stays in force."""
+        round_ = state["round"]
+        masks = state.get("masks")
+        fmasks = state.get("filter_masks")
+        new_state = engine.init_round_state(
+            jax.tree.map(jnp.copy, params), self.eng, filter_masks=fmasks)
+        new_state["round"] = round_
+        if masks is not None:
+            new_state["masks"] = masks
+            new_state["params"] = engine.apply_masks(new_state["params"],
+                                                     masks)
+        return self._place_state(new_state)
+
+    def apply_prune(self, state: dict, mode: str, kept, *,
+                    compact_existing: bool = False):
+        """Apply a FedAP decision.  mask: inject keep-masks into the carry
+        (same compiled program keeps running, momentum restarts); shrink:
+        re-materialize the smaller model (next chunk re-traces).
+        ``compact_existing`` (the mask-now-shrink-later follow-up) compacts
+        the CURRENT masked state — params AND momentum buffers — at the
+        already-decided kept indices instead of restarting momentum, so
+        masked-then-shrunk training continues exactly like
+        shrink-from-the-start on normalization-free models."""
+        from repro.core import pruning
+
+        params = jax.tree.map(jnp.copy, state["params"])
+        spec = self.model.prune_spec(params)
+        round_ = state["round"]
+
+        if mode == "mask":
+            masks = pruning.param_masks(params, spec, kept)
+            fmasks = pruning.filter_masks(params, spec, kept)
+            new_state = masked_round_state(
+                state, masks,
+                filter_masks=fmasks if self._kernel_masks else None)
+            return self._place_state(new_state), {"filter_masks": fmasks}
+
+        new_params = pruning.shrink_params(params, spec, kept)
+        # kernel mode: all-ones filter masks at the SHRUNK shapes — the
+        # compacted model has nothing left to skip
+        fm = (init_filter_masks(self.model, new_params)
+              if self._kernel_masks else None)
+        new_state = engine.init_round_state(new_params, self.eng,
+                                            filter_masks=fm)
+        if compact_existing:
+            new_state["server_m"] = pruning.shrink_params(
+                jax.tree.map(jnp.copy, state["server_m"]), spec, kept)
+            if "global_m" in state:
+                new_state["global_m"] = pruning.shrink_params(
+                    jax.tree.map(jnp.copy, state["global_m"]), spec, kept)
+        new_state["round"] = round_
+        # the shrink discards the pre-prune params — record them
+        return self._place_state(new_state), {"params_before": params}
+
+
+# ---------------------------------------------------------------------------
+# LocalScanBackend — the single-host scan path
+# ---------------------------------------------------------------------------
+
+class LocalScanBackend(_EngineBackend):
+    """Session-cached jitted scan chunks over the whole federated dataset
+    resident on ONE device — the paper's 100-device simulation setting."""
+
+    name = "local"
+
+    def __init__(self, model, data, cfg, *, use_masks: bool = False,
+                 data_cache: dict | None = None):
+        from repro.core.rounds import engine_config
+
+        self.model, self.data, self.cfg = model, data, cfg
+        self.eng = dataclasses.replace(engine_config(cfg),
+                                       use_masks=use_masks)
+        self.sample_kw = sim_sample_kw(cfg, data)
+        # shared per-trainer: both mask-mode backend instances read the
+        # SAME device-resident dataset (one transfer, one HBM copy)
+        self._data_cache = {} if data_cache is None else data_cache
+
+    def _compiled(self) -> CompiledEngine:
+        return compiled_engine(self.model, self.eng, self.sample_kw,
+                               prefetch=self.cfg.prefetch_sampling)
+
+    @property
+    def chunk(self):
+        return self._compiled().chunk
+
+    def device_data(self) -> dict:
+        d = self._data_cache.get("local")
+        if d is None:
+            d = self.data.device_arrays()
+            self._data_cache["local"] = d
+        return d
+
+    def run_chunk(self, state, key, length):
+        return self._compiled().chunk(state, key, self.device_data(),
+                                      length=length)
+
+    def evaluate(self, state):
+        d = self.device_data()
+        return self._compiled().evaluate(state["params"], d["test_x"],
+                                         d["test_y"])
+
+    def prune_decision(self, state, init_params):
+        from repro.core import fedap
+
+        params = jax.tree.map(jnp.copy, state["params"])
+        return fedap.fedap_decision(
+            self.model, self.data, self.cfg.fedap, params,
+            init_params=init_params,
+            rng=np.random.default_rng(self.cfg.seed))
+
+
+# ---------------------------------------------------------------------------
+# MeshBackend — the client-sharded SPMD path
+# ---------------------------------------------------------------------------
+
+class MeshBackend(_EngineBackend):
+    """The same scan-compiled rounds, client-sharded over a device mesh.
+
+    * the federated dataset is placed with the client dimension sharded
+      over the mesh client axes (``FederatedData.device_arrays(mesh=)``);
+    * the in-scan sampled round batch is sharding-constrained
+      (``fl_specs.fl_sim_batch_specs``), so the local-epoch vmap runs
+      client-parallel across devices and the FedAvg einsum partitions into
+      per-shard partial sums + one all-reduce — GSPMD inserts the
+      collectives, so `round_core` itself is untouched and the numerics
+      stay within float tolerance of the local path (locked per round
+      against LocalScanBackend AND the f64 oracle by
+      tests/test_mesh_backend.py);
+    * engine state follows ``fl_specs.fl_state_specs`` (replicated for the
+      simulation models, which publish no model-sharding axes);
+    * Prune events run pod-side: ``fedap.fedap_decision_sharded`` computes
+      the probe/Fisher statistics on mesh-sharded participants, and the
+      decision is injected through ``launch.steps.with_masks`` — the
+      chunk program is NOT re-lowered (mask mode keeps every shape, and
+      the carry structure was final from round 0).
+    """
+
+    name = "mesh"
+
+    def __init__(self, model, data, cfg, *, use_masks: bool = False,
+                 mesh=None, data_cache: dict | None = None):
+        from repro.core.rounds import engine_config
+        from repro.launch.mesh import make_host_mesh
+        from repro.sharding.specs import MeshPlan
+
+        self.model, self.data, self.cfg = model, data, cfg
+        self.eng = dataclasses.replace(engine_config(cfg),
+                                       use_masks=use_masks)
+        self.sample_kw = sim_sample_kw(cfg, data)
+        self._data_cache = {} if data_cache is None else data_cache
+        self.mesh = mesh if mesh is not None else make_host_mesh(model=1)
+        axes = dict(self.mesh.shape)
+        if "data" not in axes:
+            raise ValueError(
+                f"MeshBackend needs a 'data' mesh axis to host FL clients; "
+                f"got axes {tuple(axes)}")
+        self.plan = MeshPlan(
+            mesh=self.mesh, multi_pod="pod" in axes,
+            client_axes=(("pod", "data") if "pod" in axes else ("data",)),
+            fsdp_axes=(), tp_axes=(("model",) if "model" in axes else ()),
+            batch_axes=(), num_clients=axes["data"] * axes.get("pod", 1))
+        self._chunk = None
+        self._eval = None
+
+    # -- shardings -----------------------------------------------------------
+    def _named(self, spec_tree):
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        return jax.tree.map(lambda s: NamedSharding(self.mesh, s), spec_tree,
+                            is_leaf=lambda x: isinstance(x, P))
+
+    def _place_state(self, state: dict) -> dict:
+        from repro.sharding.fl_specs import fl_state_specs
+
+        return jax.device_put(state, self._named(
+            fl_state_specs(state, None, self.plan)))
+
+    def device_data(self) -> dict:
+        # Mesh hashes by devices + axis names, so equal meshes built
+        # independently still share one device-resident dataset copy
+        key = ("mesh", self.mesh)
+        d = self._data_cache.get(key)
+        if d is None:
+            d = self.data.device_arrays(mesh=self.mesh,
+                                        client_axes=self.plan.client_axes)
+            self._data_cache[key] = d
+        return d
+
+    # -- programs ------------------------------------------------------------
+    def _programs(self):
+        if self._chunk is None:
+            from repro.sharding.fl_specs import fl_sim_batch_specs
+
+            grad_fn, la_fn = model_fns(self.model, self.eng)
+            shardings = self._named(fl_sim_batch_specs(
+                self.cfg.clients_per_round, self.plan))
+
+            def constrain(batch):
+                return jax.lax.with_sharding_constraint(batch, shardings)
+
+            chunk = build_chunk(self.eng, grad_fn, la_fn, self.sample_kw,
+                                prefetch=self.cfg.prefetch_sampling,
+                                constrain=constrain)
+            self._chunk = jax.jit(chunk, static_argnames=("length",),
+                                  donate_argnums=(0,))
+            self._eval = eval_program(self.model)
+        return self._chunk
+
+    @property
+    def chunk(self):
+        return self._programs()
+
+    def run_chunk(self, state, key, length):
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        # pin the key to the mesh (replicated): a fresh host key is
+        # uncommitted while the chunk's output key is mesh-committed, and
+        # that sharding difference alone would re-trace the chunk program
+        key = jax.device_put(key, NamedSharding(self.mesh, P()))
+        return self._programs()(state, key, self.device_data(),
+                                length=length)
+
+    def evaluate(self, state):
+        self._programs()
+        d = self.device_data()
+        return self._eval(state["params"], d["test_x"], d["test_y"])
+
+    # -- pod-side FedAP ------------------------------------------------------
+    def prune_decision(self, state, init_params):
+        from repro.core import fedap
+
+        params = jax.tree.map(jnp.copy, state["params"])
+        return fedap.fedap_decision_sharded(
+            self.model, self.data, self.cfg.fedap, params,
+            init_params=init_params,
+            rng=np.random.default_rng(self.cfg.seed),
+            mesh=self.mesh, client_axes=self.plan.client_axes)
+
+    def apply_prune(self, state, mode, kept, *, compact_existing=False):
+        if mode != "mask":
+            return super().apply_prune(state, mode, kept,
+                                       compact_existing=compact_existing)
+        # mask mode: the pod-path injection helper — shapes, shardings and
+        # the lowered chunk program are untouched
+        from repro.core import pruning
+        from repro.launch.steps import with_masks
+
+        params = state["params"]
+        spec = self.model.prune_spec(params)
+        masks = pruning.param_masks(params, spec, kept)
+        fmasks = pruning.filter_masks(params, spec, kept)
+        new_state = with_masks(
+            state, masks,
+            filter_masks=fmasks if self._kernel_masks else None)
+        return self._place_state(new_state), {"filter_masks": fmasks}
+
+
+# ---------------------------------------------------------------------------
+# The executor — ONE schedule loop over any backend
+# ---------------------------------------------------------------------------
+
+class PlanExecutor:
+    """Executes a :class:`TrainPlan` against an :class:`ExecutionBackend`.
+
+    All schedule semantics live HERE, once: history rows record the true
+    completed-round count ``t`` (Eval AND Callback), artifact keys
+    deduplicate with ``#k`` suffixes, ``Prune(reuse=...)`` re-applies an
+    earlier event's kept-filter decision instead of re-running Algorithm 3,
+    and a Callback returning params restarts the round state through the
+    backend (the legacy hook contract).
+    """
+
+    def __init__(self, backend: ExecutionBackend, *, trainer=None):
+        self.backend = backend
+        self.trainer = trainer
+
+    def run(self, plan: TrainPlan, *, params, key):
+        """Returns (RunResult, advanced key)."""
+        backend = self.backend
+        # Prune events estimate the Lipschitz constant against the params
+        # the run started from (the legacy hooks took them explicitly).
+        init_params = jax.tree.map(jnp.copy, params)
+        state = backend.init_state(params)
+
+        history = {"round": [], "acc": [], "loss": [], "tau_eff": [],
+                   "time": []}
+        artifacts: dict[str, Any] = {}
+        t0 = time.time()
+        t = 0
+        last_tau = 0.0
+
+        def record(name, value):
+            k, i = name, 1
+            while k in artifacts:
+                k = f"{name}#{i}"
+                i += 1
+            artifacts[k] = value
+
+        for ev in plan.compiled():
+            if isinstance(ev, Scan):
+                state, key, taus = backend.run_chunk(state, key, ev.rounds)
+                t += ev.rounds
+                last_tau = float(taus[-1])
+            elif isinstance(ev, Eval):
+                loss, acc = backend.evaluate(state)
+                # the TRUE round count: t rounds have completed when this
+                # Eval runs, so a leading Eval() (evaluate-before-training)
+                # records round 0, not a fabricated round -1
+                history["round"].append(t)
+                history["acc"].append(float(acc))
+                history["loss"].append(float(loss))
+                history["tau_eff"].append(last_tau)
+                history["time"].append(time.time() - t0)
+            elif isinstance(ev, Snapshot):
+                record(ev.name, {"round": t, "params": backend.snapshot(state)})
+            elif isinstance(ev, Prune):
+                state, art = self._prune(ev, state, init_params, artifacts)
+                record(ev.name, art)
+            elif isinstance(ev, Callback):
+                # the true completed-round count (NOT t-1 — mirrors the
+                # Eval fix); params are a copy because the next scan chunk
+                # donates the round state
+                maybe = ev.fn(self.trainer, t, backend.snapshot(state))
+                if maybe is not None:   # legacy contract: replace + restart
+                    state = backend.replace_params(state, maybe)
+            else:  # pragma: no cover — TrainPlan validates event types
+                raise TypeError(f"unknown plan event: {ev!r}")
+
+        return (RunResult(params=state["params"], history=history,
+                          artifacts=artifacts, state=state), key)
+
+    def _prune(self, ev: Prune, state: dict, init_params,
+               artifacts: dict):
+        """Decision + apply of one Prune event -> (new state, artifact)."""
+        backend = self.backend
+        if ev.reuse is not None:
+            # the MOST RECENT artifact under that name: record() renames
+            # repeated events to "name#k", and a reuse-shrink must compact
+            # to the decision currently in force, not the first one
+            src = None
+            for k, v in artifacts.items():
+                if (k.split("#", 1)[0] == ev.reuse
+                        and isinstance(v, dict) and "kept" in v):
+                    src = v
+            if src is None:
+                raise ValueError(
+                    f"Prune(reuse={ev.reuse!r}) found no earlier prune "
+                    f"artifact named {ev.reuse!r} (have: "
+                    f"{sorted(artifacts)})")
+            kept = src["kept"]
+            new_state, extra = backend.apply_prune(state, ev.mode, kept,
+                                                   compact_existing=True)
+            art = {"mode": ev.mode, "reused": ev.reuse, "kept": kept,
+                   "kept_counts": {k: int(len(v)) for k, v in kept.items()},
+                   "p_star": src.get("p_star"),
+                   "layer_rates": src.get("layer_rates")}
+        else:
+            decision = backend.prune_decision(state, init_params)
+            art = decision.summary()
+            art["kept"] = decision.kept
+            art["mode"] = ev.mode
+            new_state, extra = backend.apply_prune(state, ev.mode,
+                                                   decision.kept)
+        art.update(extra)
+        return new_state, art

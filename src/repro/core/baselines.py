@@ -210,9 +210,12 @@ def make_unstructured_pruning_hook(*, rate: float, prune_round: int,
     state = {"mask": None}
 
     def hook(trainer, t, params):
-        redo = (t + 1 == prune_round) or (
+        # t is the number of COMPLETED rounds when the callback fires (the
+        # first post-round hook sees t=1) — the executor's Eval/Callback
+        # round bookkeeping agree
+        redo = (t == prune_round) or (
             refresh_every and state["mask"] is not None
-            and (t + 1 - prune_round) % refresh_every == 0 and t + 1 > prune_round)
+            and (t - prune_round) % refresh_every == 0 and t > prune_round)
         if redo:
             state["mask"] = unstructured_magnitude_mask(params, rate)
         if state["mask"] is not None:
@@ -228,7 +231,7 @@ def make_hrank_pruning_hook(model, data, *, rate: float, prune_round: int,
     the paper's foil for FedAP's layer-adaptive rates."""
 
     def hook(trainer, t, params):
-        if t + 1 != prune_round:
+        if t != prune_round:   # t = completed rounds at the callback
             return None
         spec: PruneSpec = model.prune_spec(params)
         fmaps = model.feature_maps(params, jnp.asarray(data.server_x[:probe]))

@@ -77,6 +77,49 @@ class FedAPDecision:
                 "kept_counts": {k: int(len(v)) for k, v in self.kept.items()}}
 
 
+def _draw_participants(data, cfg: FedAPConfig, rng: np.random.Generator
+                       ) -> np.ndarray:
+    """The probed client subset (index 0 of the rate vectors is always the
+    server), clamped to the available clients with a warning."""
+    num_clients = data.client_x.shape[0]
+    draw = min(cfg.participants, num_clients)
+    if draw < cfg.participants:
+        warnings.warn(
+            f"FedAPConfig.participants={cfg.participants} exceeds the "
+            f"{num_clients} available clients; probing all {num_clients} "
+            "instead (every client's local data contributes a rate)",
+            stacklevel=3)
+    return rng.choice(num_clients, size=draw, replace=False)
+
+
+def _finish_decision(model, data, cfg: FedAPConfig, params: Any,
+                     rates, sizes, degrees) -> FedAPDecision:
+    """Algorithm 3, steps 2-4 (shared by the host-side and the pod-side
+    step-1 implementations): Formula 15 -> global magnitude threshold ->
+    per-layer rates -> HRank selection on server data."""
+    p_star = aggregate_rates(jnp.asarray(rates), jnp.asarray(sizes),
+                             jnp.asarray(degrees), cfg.eps)
+    # optional compression-budget floor (cfg.min_rate=0 keeps Algorithm 3's
+    # pure eigen-gap decision, which may legitimately prune nothing)
+    p_star = jnp.clip(p_star, cfg.min_rate, cfg.max_rate)
+
+    spec: PruneSpec = model.prune_spec(params)
+    thr = global_threshold(params, spec, p_star)
+    layer_rates = per_layer_rates(params, spec, thr)
+
+    fmaps = model.feature_maps(params,
+                               jnp.asarray(data.server_x[: cfg.probe_size]))
+    kept = {}
+    for layer in spec.layers:
+        scores = feature_map_ranks(fmaps[layer.feature_key or layer.name])
+        kept[layer.name] = select_filters(scores,
+                                          float(layer_rates[layer.name]),
+                                          align=cfg.align)
+    return FedAPDecision(kept=kept, p_star=float(p_star),
+                         layer_rates={k: float(v)
+                                      for k, v in layer_rates.items()})
+
+
 def fedap_decision(model, data, cfg: FedAPConfig, params: Any, *,
                    init_params: Any, rng: np.random.Generator | None = None
                    ) -> FedAPDecision:
@@ -92,15 +135,7 @@ def fedap_decision(model, data, cfg: FedAPConfig, params: Any, *,
     p_bar = niid.global_distribution(data.client_dists, data.sizes)
 
     # --- per-participant expected rates (index 0 = server) ----------------
-    num_clients = data.client_x.shape[0]
-    draw = min(cfg.participants, num_clients)
-    if draw < cfg.participants:
-        warnings.warn(
-            f"FedAPConfig.participants={cfg.participants} exceeds the "
-            f"{num_clients} available clients; probing all {num_clients} "
-            "instead (every client's local data contributes a rate)",
-            stacklevel=2)
-    ids = rng.choice(num_clients, size=draw, replace=False)
+    ids = _draw_participants(data, cfg, rng)
     rates, sizes, degrees = [], [], []
     r0 = participant_rate(model, params, init_params,
                           jnp.asarray(data.server_x),
@@ -116,26 +151,61 @@ def fedap_decision(model, data, cfg: FedAPConfig, params: Any, *,
         sizes.append(float(data.sizes[k]))
         degrees.append(niid.non_iid_degree(data.client_dists[k], p_bar))
 
-    p_star = aggregate_rates(jnp.stack(rates), jnp.asarray(sizes),
-                             jnp.stack(degrees), cfg.eps)
-    # optional compression-budget floor (cfg.min_rate=0 keeps Algorithm 3's
-    # pure eigen-gap decision, which may legitimately prune nothing)
-    p_star = jnp.clip(p_star, cfg.min_rate, cfg.max_rate)
+    return _finish_decision(model, data, cfg, params,
+                            jnp.stack(rates), jnp.asarray(sizes),
+                            jnp.stack(degrees))
 
-    # --- per-layer rates from the global magnitude threshold --------------
-    spec: PruneSpec = model.prune_spec(params)
-    thr = global_threshold(params, spec, p_star)
-    layer_rates = per_layer_rates(params, spec, thr)
 
-    # --- HRank selection on server data -----------------------------------
-    fmaps = model.feature_maps(params,
-                               jnp.asarray(data.server_x[: cfg.probe_size]))
-    kept = {}
-    for layer in spec.layers:
-        scores = feature_map_ranks(fmaps[layer.feature_key or layer.name])
-        kept[layer.name] = select_filters(scores,
-                                          float(layer_rates[layer.name]),
-                                          align=cfg.align)
-    return FedAPDecision(kept=kept, p_star=float(p_star),
-                         layer_rates={k: float(v)
-                                      for k, v in layer_rates.items()})
+def fedap_decision_sharded(model, data, cfg: FedAPConfig, params: Any, *,
+                           init_params: Any,
+                           rng: np.random.Generator | None = None,
+                           mesh=None, client_axes: tuple = ("data",)
+                           ) -> FedAPDecision:
+    """Algorithm 3 with step 1 executed POD-SIDE (the MeshBackend's Prune
+    path): the participants' probe sets are STACKED into one
+    ``[participants+1, probe, ...]`` batch, placed with the participant
+    axis sharded over the mesh client axes, and the per-participant Fisher
+    spectra + Lipschitz estimates run as ONE vmapped program — every device
+    probes its own participants in parallel, and the resulting rate vector
+    is gathered back for the host-side Formula-15 aggregation.  Steps 2-4
+    are shared with :func:`fedap_decision`, so the two entry points make
+    the same decision up to float tolerance (locked by
+    tests/test_mesh_backend.py).
+
+    Requires every probed participant to hold at least ``cfg.probe_size``
+    samples (the stacked probe must be rectangular).
+    """
+    rng = np.random.default_rng(0) if rng is None else rng
+    p_bar = niid.global_distribution(data.client_dists, data.sizes)
+    ids = _draw_participants(data, cfg, rng)
+
+    probe = cfg.probe_size
+    n0 = data.server_x.shape[0]
+    n_k = data.client_x.shape[1]
+    if min(n0, n_k) < probe:
+        raise ValueError(
+            f"fedap_decision_sharded stacks rectangular probes: every "
+            f"participant needs >= probe_size={probe} samples, but "
+            f"n0={n0}, n_k={n_k}")
+    xs = np.stack([np.asarray(data.server_x[:probe])]
+                  + [np.asarray(data.client_x[k][:probe]) for k in ids])
+    ys = np.stack([np.asarray(data.server_y[:probe])]
+                  + [np.asarray(data.client_y[k][:probe]) for k in ids])
+    sizes = jnp.asarray([float(n0)] + [float(data.sizes[k]) for k in ids])
+    degrees = jnp.stack(
+        [niid.non_iid_degree(data.server_dist, p_bar)]
+        + [niid.non_iid_degree(data.client_dists[k], p_bar) for k in ids])
+
+    xs_d, ys_d = jnp.asarray(xs), jnp.asarray(ys)
+    if mesh is not None and client_axes:
+        from repro.sharding.fl_specs import client_dim_sharding
+
+        sh = client_dim_sharding(mesh, client_axes, xs.shape[0])
+        xs_d, ys_d = jax.device_put(xs_d, sh), jax.device_put(ys_d, sh)
+    # the probes are already probe_size-sliced, so participant_rate (the
+    # host path's step 1, unchanged) vmaps over the participant axis
+    rates = jax.jit(jax.vmap(
+        lambda x, y: participant_rate(model, params, init_params, x, y,
+                                      cfg)))(xs_d, ys_d)
+
+    return _finish_decision(model, data, cfg, params, rates, sizes, degrees)

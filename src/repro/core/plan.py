@@ -19,7 +19,8 @@ A :class:`TrainPlan` is a typed sequence of segments and events:
 The plan replaces the old ``FederatedTrainer.run(n, on_round_end=...)``
 callback API, whose per-round hook forced the scan into ``length=1``
 chunks and made FedAP — the paper's cheap efficiency win — the most
-expensive thing in the system.  The executor (`repro.core.rounds`)
+expensive thing in the system.  The executor
+(`repro.core.backend.PlanExecutor`, driving a local-scan or mesh backend)
 compiles a plan into the minimal set of jitted scan chunks: consecutive
 ``Scan`` segments merge, and chunk programs are cached per (engine config,
 chunk length), so a plan with ten ``Scan(5)`` segments compiles exactly
@@ -74,15 +75,29 @@ class Prune:
     Both modes restart the server momentum (the paper's prune round resets
     optimizer state), so they produce identical training trajectories on
     normalization-free models.
+
+    ``reuse`` (mode="shrink" only) names an EARLIER Prune event's artifact
+    whose kept-filter decision this event compacts to — no second FedAP
+    run, and the momentum buffers are compacted rather than restarted, so
+    the event is a pure re-materialization of the masked training state.
+    This is the mask-now-shrink-later pattern (``fedap_plan(...,
+    shrink_round=K)``): the prune round stays inside the compiled scan
+    (mask), and the next segment boundary compacts to the genuinely
+    smaller — and faster per round — model.
     """
 
     mode: str = "mask"
     name: str = "prune"
+    reuse: str | None = None
 
     def __post_init__(self):
         if self.mode not in ("mask", "shrink"):
             raise ValueError(f"Prune.mode must be 'mask' or 'shrink', "
                              f"got {self.mode!r}")
+        if self.reuse is not None and self.mode != "shrink":
+            raise ValueError(
+                "Prune.reuse compacts to an earlier event's decision and "
+                f"needs mode='shrink', got mode={self.mode!r}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -211,21 +226,43 @@ class TrainPlan:
 
 
 def fedap_plan(num_rounds: int, *, prune_round: int, mode: str = "mask",
-               eval_every: int = 1) -> TrainPlan:
+               eval_every: int = 1,
+               shrink_round: int | None = None) -> TrainPlan:
     """The paper's FedDUMAP schedule: train, FedAP once at ``prune_round``,
     keep training.  ``mode="mask"`` keeps every round inside the compiled
-    scan; ``mode="shrink"`` re-materializes (legacy-hook behaviour)."""
+    scan; ``mode="shrink"`` re-materializes (legacy-hook behaviour).
+
+    ``shrink_round=K`` (mask mode only) schedules the mask-now-shrink-later
+    pattern: the FedAP decision at ``prune_round`` is applied as masks (no
+    mid-scan re-jit), and at round ``K`` a follow-up
+    ``Prune(mode="shrink", reuse="prune")`` compacts the state to the SAME
+    kept filters — momentum included, no second FedAP run — so the
+    steady-state rounds after ``K`` train the genuinely smaller model.
+    On normalization-free models the result is exactly
+    shrink-from-``prune_round`` training (locked by tests/test_plan.py).
+    """
     if not 0 < prune_round <= num_rounds:
         raise ValueError(f"prune_round must be in (0, {num_rounds}], "
                          f"got {prune_round}")
     if eval_every < 1:
         raise ValueError(f"eval_every must be >= 1, got {eval_every}")
+    if shrink_round is not None:
+        if mode != "mask":
+            raise ValueError("shrink_round schedules a follow-up compaction "
+                             "of a MASK prune; use mode='mask' (got "
+                             f"mode={mode!r})")
+        if not prune_round < shrink_round <= num_rounds:
+            raise ValueError(
+                f"shrink_round must be in (prune_round={prune_round}, "
+                f"{num_rounds}], got {shrink_round}")
     events: list[Event] = []
     t = 0
     while t < num_rounds:
         stops = [t + eval_every - (t % eval_every), num_rounds]
         if t < prune_round:
             stops.append(prune_round)
+        if shrink_round is not None and t < shrink_round:
+            stops.append(shrink_round)
         stop = min(stops)
         events.append(Scan(stop - t))
         t = stop
@@ -233,6 +270,8 @@ def fedap_plan(num_rounds: int, *, prune_round: int, mode: str = "mask",
             events.append(Eval())
         if t == prune_round:
             events.append(Prune(mode=mode))
+        if shrink_round is not None and t == shrink_round:
+            events.append(Prune(mode="shrink", reuse="prune", name="shrink"))
     return TrainPlan(events)
 
 

@@ -1,4 +1,4 @@
-"""Scan-compiled federated simulation driver (the paper's 100-device setting).
+"""The simulation trainer: a thin facade over pluggable execution backends.
 
 One round (Section 3.1):
   (1) select a random device subset D^t, broadcast w^{t-1};
@@ -10,28 +10,44 @@ One round (Section 3.1):
   (6) at the predefined round, FedAP prunes the model — as a scheduled
       ``Prune`` event of the declarative :class:`~repro.core.plan.TrainPlan`.
 
-The round itself lives in :mod:`repro.core.engine` (``round_core``) and is
-SHARED with the pod-scale SPMD path in :mod:`repro.launch.steps` — this
-module only adds the simulation plumbing around it:
+The round itself lives in :mod:`repro.core.engine` (``round_core``).  HOW a
+:class:`TrainPlan` over it executes is the job of
+:mod:`repro.core.backend`: the backend-agnostic :class:`PlanExecutor`
+drives a narrow backend protocol (init_state / run_chunk / evaluate /
+prune_decision / apply_prune / snapshot / replace_params), and
+:class:`FederatedTrainer` is only the user-facing facade that picks the
+substrate::
 
-  * the federated dataset is moved to device ONCE
+    FederatedTrainer(model, data, cfg)                     # local scan
+    FederatedTrainer(model, data, cfg, backend="mesh")     # client-sharded
+
+  * ``backend="local"`` (:class:`~repro.core.backend.LocalScanBackend`)
+    moves the federated dataset to ONE device
     (:meth:`FederatedData.device_arrays`); client selection and batch
     sampling run on device through `jax.random` keys in the scan carry
-    (`engine.sample_round_batches`) — no per-round host work;
-  * training follows a :class:`~repro.core.plan.TrainPlan`: every ``Scan``
-    segment is ONE compiled ``jax.lax.scan`` over ``round_core``, and the
-    executor caches one jitted chunk program per (model, engine config,
-    sampling shape) in a session-scoped cache, so trainers sharing a model
-    and config (e.g. the integration-test matrix) compile once;
+    (`engine.sample_round_batches`), and every ``Scan`` segment is ONE
+    compiled ``jax.lax.scan`` over ``round_core``, with one jitted chunk
+    program cached per (model, engine config, sampling shape, prefetch
+    mode) in a session-scoped cache (:func:`compiled_engine`);
+  * ``backend="mesh"`` (:class:`~repro.core.backend.MeshBackend`) runs the
+    SAME chunk client-sharded over a device mesh: the dataset's client
+    dimension and the sampled round batch shard over the mesh client axes
+    (`sharding/fl_specs.py`), the FedAvg reduction becomes per-shard
+    partial sums + one all-reduce, and ``Prune`` events run pod-side
+    (`fedap_decision_sharded` + `launch.steps.with_masks`, no re-lower);
+  * both backends double-buffer the in-scan sampling by default
+    (``FLConfig.prefetch_sampling``): round t+1's gather is issued while
+    round t computes, with a bit-identical key chain and batch sequence;
   * ``Prune(mode="mask")`` injects FedAP keep-masks into the scan carry
     (``EngineConfig.use_masks``) — the prune round and everything after it
     run inside the SAME compiled program; with
     ``FLConfig(masked_compute="kernel")`` filter-level masks also ride in
     the carry and the model fns route masked dense layers through the
-    differentiable Pallas ``masked_matmul`` kernel, realizing the pruned
-    FLOP savings during training; ``Prune(mode="shrink")``
-    re-materializes the smaller model at the segment boundary (the next
-    chunk re-traces at the new shapes);
+    differentiable Pallas ``masked_matmul`` kernel; ``Prune(mode="shrink")``
+    re-materializes the smaller model at the segment boundary, and
+    ``fedap_plan(..., shrink_round=K)`` chains both (mask now, compact to
+    the same decision later — no second FedAP run, no mid-scan re-jit,
+    smaller steady-state model);
   * all clients share n_k in the paper's label-shard protocol, so local
     step counts are equal and the engine's client vmap is exact.
 
@@ -44,7 +60,8 @@ Momentum modes (covers the paper's baselines):
 
 Every mode is differentially tested against the pure-NumPy oracle in
 :mod:`repro.core.ref_engine` (tests/test_engine_diff.py), including the
-masked mode.
+masked mode; the mesh backend is additionally locked per round against the
+local backend AND the oracle (tests/test_mesh_backend.py).
 
 Migrating from the legacy callback API
 --------------------------------------
@@ -64,30 +81,28 @@ becomes a declarative schedule returning a structured result::
 
 Per-round hooks that must stay (distillation, baseline pruning) migrate to
 ``TrainPlan.with_callback(60, hook, eval_every=2)`` — the hook signature
-``fn(trainer, round_idx, params) -> new params | None`` is unchanged.
+``fn(trainer, round_idx, params) -> new params | None`` is unchanged, and
+``round_idx`` is the number of COMPLETED rounds when the hook fires (the
+first post-round hook of a run sees 1).
 """
 from __future__ import annotations
 
 import dataclasses
-import time
-from typing import Any
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
-from repro.core import engine
+from repro.core.backend import (  # noqa: F401  (public re-exports)
+    CompiledEngine,
+    LocalScanBackend,
+    MeshBackend,
+    PlanExecutor,
+    clear_compiled_cache,
+    compiled_engine,
+    sim_sample_kw,
+)
 from repro.core.engine import EngineConfig
 from repro.core.momentum import FedDUMConfig
-from repro.core.plan import (
-    Callback,
-    Eval,
-    Prune,
-    RunResult,
-    Scan,
-    Snapshot,
-    TrainPlan,
-)
+from repro.core.plan import RunResult, TrainPlan
 from repro.core.pruning import FedAPConfig
 from repro.core.server_update import FedDUConfig
 
@@ -110,6 +125,10 @@ class FLConfig:
     # so masked dense layers run the differentiable Pallas masked_matmul
     # (FedAP's FLOP savings realized during training).
     masked_compute: str = "params"
+    # Double-buffered in-scan sampling: round t+1's client/server gather is
+    # issued while round t computes (bit-identical batches and key chain —
+    # purely a scheduling change; False restores the serial draw).
+    prefetch_sampling: bool = True
     # Server data usage per round: tau = server_epochs * floor(n0 / B_server).
     server_epochs: int = 1
     server_batch_size: int = 32
@@ -163,134 +182,64 @@ def engine_config(cfg: FLConfig) -> EngineConfig:
         feddu=cfg.feddu, feddum=cfg.feddum)
 
 
-# ---------------------------------------------------------------------------
-# Session-scoped compiled-engine cache
-# ---------------------------------------------------------------------------
+_BACKENDS = {"local": LocalScanBackend, "mesh": MeshBackend}
 
-@dataclasses.dataclass
-class CompiledEngine:
-    """The jitted programs for one (model, engine config, sampling shape).
-
-    ``model`` is held as a strong reference so the ``id(model)`` cache key
-    stays valid for the lifetime of the entry.
-    """
-
-    model: Any
-    eng: EngineConfig
-    chunk: Any        # (state, key, data_dev, *, length) -> (state, key, taus)
-    round_core: Any   # (state, batch) -> (state, metrics)
-    evaluate: Any     # (params, x, y) -> (loss, acc)
-
-
-_COMPILED_CACHE: dict[tuple, CompiledEngine] = {}
-_EVAL_CACHE: dict[int, tuple] = {}
-
-
-def clear_compiled_cache() -> None:
-    _COMPILED_CACHE.clear()
-    _EVAL_CACHE.clear()
-
-
-def compiled_engine(model, eng: EngineConfig, sample_kw: dict) -> CompiledEngine:
-    """Session-scoped cache of the jitted scan-chunk / round / eval programs.
-
-    Trainers over the same model object and equal (engine config, sampling
-    shape) share ONE compiled program set — e.g. the integration-test matrix
-    re-running baselines over a module-scoped model fixture compiles each
-    distinct configuration once per session instead of once per trainer.
-    """
-    key = (id(model), eng, tuple(sorted(sample_kw.items())))
-    ce = _COMPILED_CACHE.get(key)
-    if ce is not None:
-        return ce
-
-    if eng.use_masks and eng.masked_compute == "kernel":
-        # Mask-aware model fns: round_core passes the carry's filter masks
-        # as a third argument; the model routes masked dense layers through
-        # the differentiable Pallas masked_matmul kernel.
-        def grad_fn(p, b, fm):
-            return jax.grad(
-                lambda q: model.loss_and_acc(q, b[0], b[1], masks=fm)[0])(p)
-
-        def la_fn(p, b, fm):
-            return model.loss_and_acc(p, b[0], b[1], masks=fm)
-    else:
-        def grad_fn(p, b):
-            return jax.grad(lambda q: model.loss_and_acc(q, b[0], b[1])[0])(p)
-
-        def la_fn(p, b):
-            return model.loss_and_acc(p, b[0], b[1])
-
-    def chunk(state, key, data_dev, length):
-        def body(carry, _):
-            st, k = carry
-            k, sub = jax.random.split(k)
-            batch = engine.sample_round_batches(sub, data_dev, **sample_kw)
-            st, metrics = engine.round_core(eng, grad_fn, la_fn, st, batch)
-            return (st, k), metrics["tau_eff"]
-
-        (state, key), taus = jax.lax.scan(body, (state, key), None,
-                                          length=length)
-        return state, key, taus
-
-    ev = _EVAL_CACHE.get(id(model))
-    if ev is None:
-        ev = (model, jax.jit(model.loss_and_acc))
-        _EVAL_CACHE[id(model)] = ev
-
-    ce = CompiledEngine(
-        model=model, eng=eng,
-        chunk=jax.jit(chunk, static_argnames=("length",), donate_argnums=(0,)),
-        round_core=jax.jit(
-            lambda state, batch: engine.round_core(eng, grad_fn, la_fn,
-                                                   state, batch)),
-        evaluate=ev[1])
-    _COMPILED_CACHE[key] = ce
-    return ce
-
-
-# ---------------------------------------------------------------------------
-# The trainer: a TrainPlan executor over the scan-compiled engine
-# ---------------------------------------------------------------------------
 
 class FederatedTrainer:
-    """Simulation-grade FL trainer over the scan-compiled engine.
+    """Simulation-grade FL trainer — a facade that binds (model, data,
+    config) to an execution backend and hands TrainPlans to the
+    :class:`~repro.core.backend.PlanExecutor`.
 
     model: an object exposing
         init(rng) -> params
         loss_and_acc(params, x, y) -> (scalar loss, scalar acc)
         prune_spec(params) / feature_maps(params, x)   (only for Prune events)
     data: repro.data.pipeline.FederatedData
+    backend: "local" (single-host scan) | "mesh" (client-sharded over a
+        device mesh; ``mesh=`` overrides the default host mesh)
     """
 
-    def __init__(self, model, data, cfg: FLConfig):
+    def __init__(self, model, data, cfg: FLConfig, *,
+                 backend: str = "local", mesh=None):
+        if backend not in _BACKENDS:
+            raise ValueError(f"unknown backend: {backend!r} "
+                             f"(expected one of {sorted(_BACKENDS)})")
         self.model, self.data, self.cfg = model, data, cfg
+        self.backend_name = backend
+        self._mesh = mesh
         self._key = jax.random.key(cfg.seed)
-        self._data_dev = None
         self.engine_config = engine_config(cfg)
+        self._sample_kw = sim_sample_kw(cfg, data)
+        self._backends: dict = {}
+        # both mask-mode backend instances share ONE device-resident copy
+        # of the federated dataset
+        self._data_cache: dict = {}
 
-        n_k = int(self.data.client_x.shape[1])
-        n0 = int(self.data.server_x.shape[0])
-        self._sample_kw = dict(
-            clients_per_round=cfg.clients_per_round,
-            batch_size=cfg.batch_size,
-            local_steps=max(1, n_k // cfg.batch_size) * cfg.local_epochs,
-            server_batch=cfg.server_batch_size,
-            server_tau=max(1, n0 // cfg.server_batch_size) * cfg.server_epochs,
-        )
+    # -- backend plumbing ----------------------------------------------------
+    def backend(self, *, use_masks: bool = False):
+        """The (cached) execution backend for this trainer; one instance
+        per mask mode so the jitted programs persist across runs."""
+        if use_masks not in self._backends:
+            kw = {}
+            if self.backend_name == "mesh":
+                if self._mesh is None:
+                    # resolve the default host mesh ONCE: both mask-mode
+                    # backend instances must agree on the mesh (and share
+                    # the device-resident dataset keyed on it)
+                    from repro.launch.mesh import make_host_mesh
+                    self._mesh = make_host_mesh(model=1)
+                kw["mesh"] = self._mesh
+            self._backends[use_masks] = _BACKENDS[self.backend_name](
+                self.model, self.data, self.cfg, use_masks=use_masks,
+                data_cache=self._data_cache, **kw)
+        return self._backends[use_masks]
 
     def _compiled(self, *, use_masks: bool = False) -> CompiledEngine:
+        """The session-cached local jitted programs (differential tests and
+        benchmarks drive the engine through these directly)."""
         eng = dataclasses.replace(self.engine_config, use_masks=use_masks)
-        return compiled_engine(self.model, eng, self._sample_kw)
-
-    def _init_filter_masks(self, params):
-        """All-ones per-layer filter masks (``masked_compute="kernel"``):
-        the carry structure must be final from round 0 so the prune event
-        only swaps contents, never re-traces."""
-        from repro.core import pruning
-
-        spec = self.model.prune_spec(params)
-        return pruning.filter_masks(params, spec, {})
+        return compiled_engine(self.model, eng, self._sample_kw,
+                               prefetch=self.cfg.prefetch_sampling)
 
     def round_step(self, state, batch):
         """One round at explicit batches — the engine exactly as the pod
@@ -298,9 +247,7 @@ class FederatedTrainer:
         return self._compiled().round_core(state, batch)
 
     def _device_data(self) -> dict:
-        if self._data_dev is None:
-            self._data_dev = self.data.device_arrays()
-        return self._data_dev
+        return self.backend().device_data()
 
     # -- public API ----------------------------------------------------------
     def run(self, plan: TrainPlan | int, *, eval_every: int = 1,
@@ -309,126 +256,9 @@ class FederatedTrainer:
         train+eval plan for that many rounds).  Returns a RunResult."""
         if isinstance(plan, int):
             plan = TrainPlan.standard(plan, eval_every=eval_every)
-        use_masks = plan.uses_masks
-        eng = dataclasses.replace(self.engine_config, use_masks=use_masks)
-        ce = self._compiled(use_masks=use_masks)
-        cfg = self.cfg
-
-        params0 = (self.model.init(jax.random.key(cfg.seed))
+        params0 = (self.model.init(jax.random.key(self.cfg.seed))
                    if params is None else params)
-        # Prune events estimate the Lipschitz constant against the params
-        # the run started from (the legacy hooks took them explicitly).
-        init_params = jax.tree.map(jnp.copy, params0)
-        fmasks0 = (self._init_filter_masks(params0)
-                   if use_masks and eng.masked_compute == "kernel" else None)
-        # the scan chunk donates its input state — never the caller's arrays
-        state = engine.init_round_state(jax.tree.map(jnp.copy, params0), eng,
-                                        filter_masks=fmasks0)
-        data_dev = self._device_data()
-
-        history = {"round": [], "acc": [], "loss": [], "tau_eff": [],
-                   "time": []}
-        artifacts: dict[str, Any] = {}
-        t0 = time.time()
-        t = 0
-        last_tau = 0.0
-
-        def record(name, value):
-            key, k = name, 1
-            while key in artifacts:
-                key = f"{name}#{k}"
-                k += 1
-            artifacts[key] = value
-
-        for ev in plan.compiled():
-            if isinstance(ev, Scan):
-                state, self._key, taus = ce.chunk(state, self._key, data_dev,
-                                                  length=ev.rounds)
-                t += ev.rounds
-                last_tau = float(taus[-1])
-            elif isinstance(ev, Eval):
-                loss, acc = ce.evaluate(state["params"], data_dev["test_x"],
-                                        data_dev["test_y"])
-                # the TRUE round count: t rounds have completed when this
-                # Eval runs, so a leading Eval() (evaluate-before-training)
-                # records round 0, not a fabricated round -1
-                history["round"].append(t)
-                history["acc"].append(float(acc))
-                history["loss"].append(float(loss))
-                history["tau_eff"].append(last_tau)
-                history["time"].append(time.time() - t0)
-            elif isinstance(ev, Snapshot):
-                record(ev.name, {"round": t, "params": jax.tree.map(
-                    jnp.copy, state["params"])})
-            elif isinstance(ev, Prune):
-                state, art = self._prune_event(ev, state, eng, init_params)
-                record(ev.name, art)
-            elif isinstance(ev, Callback):
-                # callbacks get a copy: the next scan chunk donates the
-                # round state, which would invalidate retained params
-                maybe = ev.fn(self, t - 1,
-                              jax.tree.map(jnp.copy, state["params"]))
-                if maybe is not None:   # legacy contract: replace + restart
-                    round_ = state["round"]
-                    masks = state.get("masks")
-                    fmasks = state.get("filter_masks")
-                    state = engine.init_round_state(
-                        jax.tree.map(jnp.copy, maybe), eng,
-                        filter_masks=fmasks)
-                    state["round"] = round_
-                    if masks is not None:
-                        # keep an earlier Prune(mode="mask") decision in
-                        # force across the state rebuild
-                        state["masks"] = masks
-                        state["params"] = engine.apply_masks(state["params"],
-                                                             masks)
-            else:  # pragma: no cover — TrainPlan validates event types
-                raise TypeError(f"unknown plan event: {ev!r}")
-
-        return RunResult(params=state["params"], history=history,
-                         artifacts=artifacts, state=state)
-
-    # -- FedAP plan event ----------------------------------------------------
-    def _prune_event(self, ev: Prune, state: dict, eng: EngineConfig,
-                     init_params) -> tuple[dict, dict]:
-        """Algorithm 3 at a segment boundary.  mask: inject keep-masks into
-        the carry (same compiled program keeps running); shrink:
-        re-materialize (next chunk re-traces).  Both restart momentum with
-        the round counter preserved, so the two modes train identically on
-        normalization-free models."""
-        from repro.core import fedap as fedap_mod
-        from repro.core import pruning
-
-        apcfg = self.cfg.fedap
-        params = jax.tree.map(jnp.copy, state["params"])
-        decision = fedap_mod.fedap_decision(
-            self.model, self.data, apcfg, params, init_params=init_params,
-            rng=np.random.default_rng(self.cfg.seed))
-        spec = self.model.prune_spec(params)
-        art = decision.summary()
-        art["kept"] = decision.kept
-        art["mode"] = ev.mode
-        round_ = state["round"]
-
-        if ev.mode == "mask":
-            masks = pruning.param_masks(params, spec, decision.kept)
-            fmasks = pruning.filter_masks(params, spec, decision.kept)
-            new_state = engine.init_round_state(
-                engine.apply_masks(params, masks), eng,
-                filter_masks=(fmasks if eng.masked_compute == "kernel"
-                              else None))
-            new_state["masks"] = masks
-            art["filter_masks"] = fmasks
-        else:
-            new_params = pruning.shrink_params(params, spec, decision.kept)
-            # kernel mode (reachable when a mask-mode prune elsewhere in
-            # the plan set use_masks): all-ones filter masks at the SHRUNK
-            # shapes — the compacted model has nothing left to skip
-            fm = (self._init_filter_masks(new_params)
-                  if eng.use_masks and eng.masked_compute == "kernel"
-                  else None)
-            new_state = engine.init_round_state(new_params, eng,
-                                                filter_masks=fm)
-            art["params_before"] = params   # the shrink discards them
-        new_state["round"] = round_
-        return new_state, art
+        executor = PlanExecutor(self.backend(use_masks=plan.uses_masks),
+                                trainer=self)
+        result, self._key = executor.run(plan, params=params0, key=self._key)
+        return result

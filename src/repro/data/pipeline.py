@@ -29,11 +29,22 @@ class FederatedData:
     test_x: np.ndarray
     test_y: np.ndarray
 
-    def device_arrays(self) -> dict:
+    def device_arrays(self, *, mesh=None,
+                      client_axes: tuple = ("data",)) -> dict:
         """The whole federated dataset as ONE device-resident dict — the
         single host->device transfer point for the scan-compiled engine
         (`repro.core.engine.sample_round_batches` draws every round's
-        client subset and batches from these arrays on device)."""
+        client subset and batches from these arrays on device).
+
+        With ``mesh`` the dict is placed for the client-sharded MeshBackend:
+        the per-client arrays (``client_x``/``client_y``/``sizes``/
+        ``client_dists``) shard their leading client dimension over the
+        mesh ``client_axes`` (falling back to replication when the client
+        count does not divide), so each device STORES only its clients'
+        data; everything else (server pool, test split, scalars) is
+        replicated.  Without ``mesh`` the arrays land on the default
+        device, exactly as before."""
+        import jax
         import jax.numpy as jnp
 
         from repro.core import niid
@@ -41,7 +52,7 @@ class FederatedData:
         dists = jnp.asarray(self.client_dists, jnp.float32)
         sizes = jnp.asarray(self.sizes, jnp.float32)
         p_bar = niid.global_distribution(dists, sizes)
-        return {
+        out = {
             "client_x": jnp.asarray(self.client_x),
             "client_y": jnp.asarray(self.client_y, jnp.int32),
             "sizes": sizes,
@@ -54,6 +65,19 @@ class FederatedData:
             "test_x": jnp.asarray(self.test_x),
             "test_y": jnp.asarray(self.test_y, jnp.int32),
         }
+        if mesh is None:
+            return out
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        from repro.sharding.fl_specs import client_dim_sharding
+
+        replicated = NamedSharding(mesh, P())
+        client_sharded = client_dim_sharding(mesh, client_axes,
+                                             self.client_x.shape[0])
+        per_client = ("client_x", "client_y", "sizes", "client_dists")
+        return jax.device_put(
+            out, {k: (client_sharded if k in per_client else replicated)
+                  for k in out})
 
 
 def _dists(ys: np.ndarray, num_classes: int) -> np.ndarray:

@@ -20,7 +20,12 @@ def make_production_mesh(*, multi_pod: bool = False):
 
 
 def make_host_mesh(*, data: int | None = None, model: int = 1):
-    """Small mesh over the actually-present local devices (tests, CPU)."""
+    """Small mesh over the actually-present local devices (tests, CPU).
+
+    Also the default substrate of the simulation MeshBackend
+    (`repro.core.backend`): every local device lands on the 'data' axis,
+    which hosts the FL client dimension — force a multi-device CPU mesh
+    with ``XLA_FLAGS=--xla_force_host_platform_device_count=8``."""
     n = len(jax.devices())
     data = data or (n // model)
     return jax.make_mesh((data, model), ("data", "model"))

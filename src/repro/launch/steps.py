@@ -28,6 +28,17 @@ this one program possible with zero extra communication).  With
 like the params, so the prune round needs no re-lower of the mesh
 program (``with_masks`` injects a decision mid-run).
 
+This module is the POD-SCALE entry point — big-model (arch x shape) FL
+over `sharding/fl_specs.py` partition specs.  The simulation-scale
+client-sharded driver lives in :mod:`repro.core.backend`
+(``MeshBackend``), which reuses the pieces here: its Prune events compute
+the FedAP decision from mesh-sharded participants
+(``fedap.fedap_decision_sharded`` — the driver the ROADMAP's pod-path
+prune-orchestration item asked for) and inject it through
+:func:`with_masks`, whose canonical state transform is
+``backend.masked_round_state`` (shared with the local executor so the two
+paths cannot diverge).
+
 Serve steps (``prefill_step`` / ``decode_step``) run the aggregated global
 model — plain distributed inference.
 """
@@ -172,7 +183,7 @@ def with_masks(state: dict, masks: Any, filter_masks: Any = None) -> dict:
     program) are untouched.  ``filter_masks`` swaps the kernel-mode filter
     masks too (required when the state carries a ``filter_masks`` slot —
     its pytree structure must stay identical)."""
-    from repro.core.engine import apply_masks
+    from repro.core.backend import masked_round_state
 
     if "masks" not in state:
         raise ValueError("state has no mask slot — build the step with "
@@ -182,19 +193,11 @@ def with_masks(state: dict, masks: Any, filter_masks: Any = None) -> dict:
             "state carries a filter_masks slot (masked_compute='kernel') — "
             "pass filter_masks=pruning.filter_masks(...) so the kernel path "
             "prunes the same filters the param masks zero")
-    new = {k: (jax.tree.map(jnp.zeros_like, v)
-               if k in ("server_m", "global_m") else v)
-           for k, v in state.items()}
-    new["params"] = apply_masks(state["params"], masks)
-    new["masks"] = masks
-    if filter_masks is not None:
-        if "filter_masks" not in state:
-            raise ValueError(
-                "filter_masks given but the state has no filter_masks slot — "
-                "build the step with FLRunConfig(masked_compute='kernel')")
-        new["filter_masks"] = jax.tree.map(
-            lambda m: jnp.array(m, jnp.float32), filter_masks)
-    return new
+    if filter_masks is not None and "filter_masks" not in state:
+        raise ValueError(
+            "filter_masks given but the state has no filter_masks slot — "
+            "build the step with FLRunConfig(masked_compute='kernel')")
+    return masked_round_state(state, masks, filter_masks=filter_masks)
 
 
 def make_prefill_step(cfg: ModelConfig):

@@ -25,16 +25,66 @@ def fl_state_specs(state_shapes: Any, model_axes: Any, plan: MeshPlan) -> Any:
     ``filter_masks`` slot (per-layer [d_l] vectors, a few KB) is fully
     replicated: every shard needs the whole block mask to decide which MXU
     blocks to skip.  Key-generic so the communicated-momentum (FedDA)
-    state and the mask slots shard without special-casing."""
+    state and the mask slots shard without special-casing.
+
+    ``model_axes=None`` (the MeshBackend's simulation models, which publish
+    no logical-axis tree) replicates every param-structured slot: on the
+    simulation path the CLIENT axis of the batch is what shards over the
+    mesh, and the global model rides replicated."""
 
     def one(k, v):
         if k == "round":
             return P()
-        if k == "filter_masks":
+        if k == "filter_masks" or model_axes is None:
             return jax.tree.map(lambda _: P(), v)
         return param_specs(v, model_axes, plan)
 
     return {k: one(k, v) for k, v in state_shapes.items()}
+
+
+def client_dim_sharding(mesh, client_axes: tuple, leading_dim: int):
+    """NamedSharding for an array whose LEADING dim is the FL-client axis:
+    sharded over ``client_axes`` when the dim divides the axis size,
+    replicated otherwise (the production-safe fallback used throughout
+    this module).  One implementation for every client-leading placement —
+    the federated dataset (``FederatedData.device_arrays``) and the FedAP
+    probe stack (``fedap_decision_sharded``) must never disagree."""
+    from jax.sharding import NamedSharding
+
+    size = 1
+    for a in client_axes:
+        size *= mesh.shape[a]
+    if client_axes and leading_dim % size == 0:
+        return NamedSharding(mesh, P(_axis(client_axes)))
+    return NamedSharding(mesh, P())
+
+
+def fl_sim_batch_specs(clients_per_round: int, plan: MeshPlan) -> dict:
+    """PartitionSpecs for the SIMULATION path's round batch — the pytree
+    built on device by ``engine.sample_round_batches``:
+
+      client  (x [C, steps, b, ...], y [C, steps, b]) — C over the client
+              axes (the per-client local-epoch vmap partitions over the
+              mesh; the FedAvg einsum becomes per-shard partial sums + one
+              all-reduce, inserted by GSPMD);
+      sizes   [C] — alongside the client dim;
+      server  (x [tau, b, ...], y [tau, b]) and the non-IID scalars —
+              replicated (the server update is a single-model SGD loop).
+
+    A non-divisible ``clients_per_round`` falls back to replication, the
+    production-safe default everywhere else in this module."""
+    ca = _axis(plan.client_axes)
+    ok = bool(plan.client_axes) and \
+        clients_per_round % plan.axis_size(plan.client_axes) == 0
+    cspec = P(ca) if ok else P()
+    return {
+        "client": (cspec, cspec),
+        "sizes": cspec,
+        "server": (P(), P()),
+        "d_round": P(),
+        "d_server": P(),
+        "n0": P(),
+    }
 
 
 def fl_batch_partition_specs(batch_shapes: Any, plan: MeshPlan) -> Any:

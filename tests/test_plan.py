@@ -73,6 +73,29 @@ class TestPlanCompilation:
         with pytest.raises(ValueError):
             fedap_plan(6, prune_round=7)
 
+    def test_fedap_plan_shrink_round_schedules_reuse_shrink(self):
+        """Mask-now-shrink-later: the prune round applies masks (inside
+        the compiled scan) and ``shrink_round`` compacts to the SAME
+        decision via Prune(mode="shrink", reuse="prune")."""
+        plan = fedap_plan(6, prune_round=2, shrink_round=4, eval_every=2)
+        assert plan.events == (
+            Scan(2), Eval(), Prune(mode="mask"),
+            Scan(2), Eval(), Prune(mode="shrink", reuse="prune",
+                                   name="shrink"),
+            Scan(2), Eval())
+        assert plan.uses_masks
+        with pytest.raises(ValueError, match="shrink_round"):
+            fedap_plan(6, prune_round=2, shrink_round=2)
+        with pytest.raises(ValueError, match="shrink_round"):
+            fedap_plan(6, prune_round=2, shrink_round=7)
+        with pytest.raises(ValueError, match="mask"):
+            fedap_plan(6, prune_round=2, shrink_round=4, mode="shrink")
+
+    def test_prune_reuse_validation(self):
+        with pytest.raises(ValueError, match="reuse"):
+            Prune(mode="mask", reuse="prune")
+        assert Prune(mode="shrink", reuse="prune").reuse == "prune"
+
     def test_with_callback_interleaves(self):
         fn = lambda tr, t, p: None
         plan = TrainPlan.with_callback(4, fn, every=2, eval_every=4)
@@ -162,6 +185,11 @@ class TestExecutor:
         assert all(np.isfinite(res.history["loss"]))
 
     def test_callback_replacement_restarts_state(self, tiny_world):
+        """Legacy-hook contract: the callback fires at segment boundaries
+        with the TRUE completed-round count (the first post-round hook
+        sees 1, mirroring the Eval round fix — the old ``t - 1``
+        bookkeeping fabricated a round 0), and a non-None return restarts
+        the round state with the counter preserved."""
         data, model = tiny_world
         seen = []
 
@@ -173,7 +201,7 @@ class TestExecutor:
 
         tr = FederatedTrainer(model, data, feddumap_config(**CFG))
         res = tr.run(TrainPlan.with_callback(3, cb, eval_every=3))
-        assert seen == [0, 1, 2]
+        assert seen == [1, 2, 3]
         assert float(res.state["round"]) == 3.0   # counter survived restart
 
     def test_compiled_engine_cache_shared_across_trainers(self, tiny_world):
@@ -313,6 +341,140 @@ class TestFedAPPlan:
         for a, b in zip(jax.tree.leaves(res.params),
                         jax.tree.leaves(state["params"])):
             np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+class TestMaskNowShrinkLater:
+    """fedap_plan(..., shrink_round=K): the prune round stays inside the
+    compiled scan (mask), and K compacts to the SAME kept filters with the
+    momentum buffers compacted, not restarted — so the trajectory equals
+    shrink-from-the-start on a norm-free model while the steady-state
+    rounds after K train the genuinely smaller model (the ROADMAP's
+    warm-path gap)."""
+
+    @pytest.fixture(scope="class")
+    def runs(self, tiny_world):
+        data, model = tiny_world
+        apcfg = FedAPConfig(prune_round=2, probe_size=8, participants=2,
+                            min_rate=0.5)
+        cfg = feddumap_config(**CFG, fedap=apcfg)
+
+        def run(plan):
+            return FederatedTrainer(model, data, cfg).run(plan)
+
+        res_ms = run(fedap_plan(6, prune_round=2, shrink_round=4,
+                                eval_every=2))
+        res_s = run(fedap_plan(6, prune_round=2, mode="shrink",
+                               eval_every=2))
+        return res_ms, res_s
+
+    def test_masked_then_shrunk_equals_shrink_from_start(self, runs):
+        res_ms, res_s = runs
+        kept = res_ms.artifacts["prune"]["kept"]
+        assert {k: v.tolist() for k, v in kept.items()} \
+            == {k: v.tolist()
+                for k, v in res_s.artifacts["prune"]["kept"].items()}
+        assert sum(len(v) for v in kept.values()) < 4 + 8 + 8   # real prune
+        # compacted shapes from round 4 on — and the same numbers round 6
+        assert (jax.tree.map(jnp.shape, res_ms.params)
+                == jax.tree.map(jnp.shape, res_s.params))
+        for a, b in zip(jax.tree.leaves(res_ms.params),
+                        jax.tree.leaves(res_s.params)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=5e-5)
+        # momentum was COMPACTED at the shrink, not restarted
+        for a, b in zip(jax.tree.leaves(res_ms.state["server_m"]),
+                        jax.tree.leaves(res_s.state["server_m"])):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=5e-5)
+        np.testing.assert_allclose(res_ms.history["tau_eff"],
+                                   res_s.history["tau_eff"], atol=1e-4)
+
+    def test_shrink_artifact_records_reuse(self, runs):
+        res_ms, _ = runs
+        art = res_ms.artifacts["shrink"]
+        assert art["mode"] == "shrink"
+        assert art["reused"] == "prune"
+        assert art["p_star"] == res_ms.artifacts["prune"]["p_star"]
+        # the artifact has the same summary shape as a decision-backed
+        # prune (consumers index kept_counts)
+        assert art["kept_counts"] == {k: len(v)
+                                      for k, v in art["kept"].items()}
+        # one FedAP decision for the whole plan: the shrink carries the
+        # mask event's kept indices verbatim
+        assert {k: v.tolist() for k, v in art["kept"].items()} \
+            == {k: v.tolist()
+                for k, v in res_ms.artifacts["prune"]["kept"].items()}
+
+    def test_reuse_resolves_most_recent_decision(self, tiny_world):
+        """Two mask prunes then a reuse-shrink: record() files the second
+        decision as 'prune#1', and the shrink must compact to THAT one —
+        the decision actually in force — not the stale first artifact."""
+        data, model = tiny_world
+        apcfg = FedAPConfig(prune_round=1, probe_size=8, participants=2,
+                            min_rate=0.5)
+        cfg = feddumap_config(**CFG, fedap=apcfg)
+        tr = FederatedTrainer(model, data, cfg)
+        res = tr.run(TrainPlan(Scan(1), Prune(mode="mask"), Scan(1),
+                               Prune(mode="mask"), Scan(1),
+                               Prune(mode="shrink", reuse="prune",
+                                     name="shrink"), Scan(1), Eval()))
+        live = res.artifacts["prune#1"]["kept"]
+        assert {k: v.tolist() for k, v in res.artifacts["shrink"]
+                ["kept"].items()} \
+            == {k: v.tolist() for k, v in live.items()}
+        # the compacted shapes match the in-force decision's kept counts
+        from repro.core.pruning import get_path
+        spec = model.prune_spec(model.init(jax.random.key(0)))
+        for layer in spec.layers:
+            w = get_path(res.params, layer.weight)
+            assert w.shape[layer.filter_axis] == len(live[layer.name])
+        assert np.isfinite(res.history["loss"][-1])
+
+    def test_reuse_without_prior_prune_fails(self, tiny_world):
+        data, model = tiny_world
+        cfg = feddumap_config(**CFG)
+        tr = FederatedTrainer(model, data, cfg)
+        with pytest.raises(ValueError, match="reuse"):
+            tr.run(TrainPlan(Scan(1),
+                             Prune(mode="shrink", reuse="prune")))
+
+
+class TestPrefetchSampling:
+    """Double-buffered in-scan sampling must be a pure scheduling change:
+    bit-identical history, params and key chain vs the serial draw."""
+
+    def test_prefetch_bit_exact(self, tiny_world):
+        import dataclasses as dc
+
+        data, model = tiny_world
+        plan = TrainPlan(Scan(2), Eval(), Scan(3), Eval())
+        cfg_pf = feddumap_config(**CFG)
+        cfg_serial = dc.replace(cfg_pf, prefetch_sampling=False)
+        assert cfg_pf.prefetch_sampling        # the default
+        res_pf = FederatedTrainer(model, data, cfg_pf).run(plan)
+        res_serial = FederatedTrainer(model, data, cfg_serial).run(plan)
+        assert res_pf.history["loss"] == res_serial.history["loss"]
+        assert res_pf.history["acc"] == res_serial.history["acc"]
+        assert res_pf.history["tau_eff"] == res_serial.history["tau_eff"]
+        for a, b in zip(jax.tree.leaves(res_pf.params),
+                        jax.tree.leaves(res_serial.params)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_prefetch_key_chain_identical(self, tiny_world):
+        """The chunk consumes exactly one key split per round in BOTH
+        modes, so a run split across chunk boundaries stays aligned."""
+        import dataclasses as dc
+
+        data, model = tiny_world
+        cfg = feddumap_config(**CFG)
+        tr_pf = FederatedTrainer(model, data, cfg)
+        tr_serial = FederatedTrainer(
+            model, data, dc.replace(cfg, prefetch_sampling=False))
+        tr_pf.run(TrainPlan(Scan(3)))
+        tr_serial.run(TrainPlan(Scan(3)))
+        np.testing.assert_array_equal(
+            np.asarray(jax.random.key_data(tr_pf._key)),
+            np.asarray(jax.random.key_data(tr_serial._key)))
 
 
 class TestMaskedComputeKernel:
