@@ -46,6 +46,22 @@ hardware claim is that the client axis (sampling, local epochs, FedAvg
 reduction) partitions across real devices with bit-compatible numerics
 (tests/test_mesh_backend.py locks mesh == local == f64 oracle).
 
+Sharded-server/eval benchmark (emits BENCH_mesh_server_eval.json):
+
+  PYTHONPATH=src python -m benchmarks.perf_iter --mesh-server-eval
+
+per-round time of the MeshBackend with the FedDU server-update scan and
+the test-split evaluation batch-SHARDED over the mesh data axis (the
+default) vs REPLICATED on every device (backend_opts={"shard_server":
+False, "shard_eval": False}), at tau in {5, 20} server steps per round,
+plus the Prune(mode="shrink") state-compaction time: the jitted
+shard-local gather vs the legacy host re-materialize + re-place.  The
+same CPU caveat as BENCH_mesh_backend.json applies: 8 virtual devices
+share this container's cores, so sharded-vs-replicated here measures
+GSPMD partitioning overhead rather than the multi-device win; the parity
+tests carry the correctness claim and the record carries the scaling
+shape.
+
 Masked-training-compute benchmark (emits BENCH_masked_train.json):
 
   PYTHONPATH=src python -m benchmarks.perf_iter --masked-train
@@ -477,6 +493,156 @@ def bench_mesh_backend(out_dir: str, *, rounds: int = 12) -> dict:
     return rec
 
 
+def bench_mesh_server_eval(out_dir: str, *, rounds: int = 8) -> dict:
+    """Replicated vs batch-sharded FedDU server scan + eval on the mesh.
+
+    Three measurements, all on the 8-virtual-device host mesh:
+      * warm rounds/s of a Scan-only plan with the server-update batches
+        sharded over the data axis vs replicated (tau in {5, 20} — the
+        server scan's share of the round grows with tau, which is where
+        FedDUAP's server-side work dominates);
+      * warm seconds per Eval event, sharded test batch vs replicated
+        full-test pass;
+      * seconds per Prune(mode="shrink") compaction of a masked round
+        state (params + momentum): the jitted shard-local gather (new)
+        vs the legacy host re-materialize + device_put re-place (old).
+    """
+    import time
+
+    import jax
+
+    from repro.core import (
+        FederatedTrainer,
+        Prune,
+        Scan,
+        TrainPlan,
+        feddumap_config,
+    )
+    from repro.core.backend import _EngineBackend
+    from repro.data import build_federated_data
+    from repro.data.synthetic import SyntheticSpec
+    from repro.models import SimpleCNN
+
+    n_dev = len(jax.devices())
+    model = SimpleCNN(num_classes=10, image_shape=(8, 8, 3),
+                      channels=(8, 8, 8), fc_width=16)
+    spec = SyntheticSpec(num_classes=10, image_shape=(8, 8, 3),
+                         train_size=2800, test_size=200, noise_scale=0.5)
+    # n0 = 0.1 * 1600 = 160 server rows, server_batch 32 -> 5 steps/epoch
+    data = build_federated_data(num_clients=16, server_fraction=0.1,
+                                device_pool=1600, spec=spec)
+
+    def trainer(cfg, *, sharded):
+        opts = {} if sharded else {"shard_server": False,
+                                   "shard_eval": False}
+        return FederatedTrainer(model, data, cfg, backend="mesh",
+                                backend_opts=opts)
+
+    def timed_rounds(tr):
+        plan = TrainPlan(Scan(rounds))
+        tr.run(plan)                                    # compile + data
+        t0 = time.perf_counter()
+        jax.block_until_ready(tr.run(plan).params)
+        return (time.perf_counter() - t0) / rounds
+
+    def timed_eval(tr, reps=20):
+        be = tr.backend()
+        state = be.init_state(model.init(jax.random.key(0)))
+        jax.block_until_ready(be.evaluate(state))       # compile
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            out = be.evaluate(state)
+        jax.block_until_ready(out)
+        return (time.perf_counter() - t0) / reps
+
+    scenarios = []
+    for server_epochs in (1, 4):                        # tau = 5, 20
+        cfg = feddumap_config(num_clients=16, clients_per_round=8,
+                              local_epochs=1, batch_size=10, lr=0.05,
+                              server_batch_size=32,
+                              server_epochs=server_epochs)
+        tau = server_epochs * (data.server_x.shape[0] // 32)
+        tr_s, tr_r = trainer(cfg, sharded=True), trainer(cfg, sharded=False)
+        round_s, round_r = timed_rounds(tr_s), timed_rounds(tr_r)
+        eval_s, eval_r = timed_eval(tr_s), timed_eval(tr_r)
+        scenarios.append({
+            "server_tau": tau,
+            "round_s_sharded": round_s,
+            "round_s_replicated": round_r,
+            "round_sharded_vs_replicated": round_r / round_s,
+            "eval_s_sharded": eval_s,
+            "eval_s_replicated": eval_r,
+            "eval_sharded_vs_replicated": eval_r / eval_s,
+        })
+        print(f"mesh_server_eval[tau={tau}]: round sharded "
+              f"{round_s * 1e3:.1f} ms vs replicated {round_r * 1e3:.1f} ms "
+              f"({round_r / round_s:.2f}x); eval sharded "
+              f"{eval_s * 1e3:.1f} ms vs replicated {eval_r * 1e3:.1f} ms "
+              f"({eval_r / eval_s:.2f}x)")
+
+    # --- shrink round-trip: jitted shard-local gather vs host path ---------
+    apcfg = dataclasses.replace(
+        feddumap_config().fedap, prune_round=2, probe_size=8,
+        participants=2, min_rate=0.5)
+    cfg = feddumap_config(num_clients=16, clients_per_round=8,
+                          local_epochs=1, batch_size=10, lr=0.05,
+                          server_batch_size=32, fedap=apcfg)
+    tr = trainer(cfg, sharded=True)
+    res = tr.run(TrainPlan(Scan(2), Prune(mode="mask")))
+    be = tr.backend(use_masks=True)
+    state, kept = res.state, res.artifacts["prune"]["kept"]
+
+    def timed_shrink(apply_fn, reps=10):
+        out, _ = apply_fn()                             # compile
+        jax.block_until_ready(out)
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            out, _ = apply_fn()
+        jax.block_until_ready(out)
+        return (time.perf_counter() - t0) / reps
+
+    shrink_new = timed_shrink(
+        lambda: be.apply_prune(state, "shrink", kept, compact_existing=True))
+    shrink_old = timed_shrink(
+        lambda: _EngineBackend.apply_prune(be, state, "shrink", kept,
+                                           compact_existing=True))
+    print(f"mesh_server_eval[shrink]: sharded compaction "
+          f"{shrink_new * 1e3:.1f} ms vs host re-materialize "
+          f"{shrink_old * 1e3:.1f} ms ({shrink_old / shrink_new:.2f}x)")
+
+    rec = {
+        "bench": "mesh_server_eval",
+        "rounds": rounds,
+        "devices": n_dev,
+        "algorithm": "feddumap",
+        "config": {"num_clients": 16, "clients_per_round": 8,
+                   "server_batch_size": 32, "test_size": 200},
+        "timing_note": "warm timings; 8 virtual CPU devices share the "
+                       "container's cores, so sharded/replicated here "
+                       "measures GSPMD partitioning overhead, not the "
+                       "multi-device win — on real hardware the sharded "
+                       "server scan and eval split work that was "
+                       "redundantly replicated per device "
+                       "(tests/test_mesh_backend.py locks the numerics)",
+        "scenarios": scenarios,
+        "shrink": {
+            "sharded_compaction_s": shrink_new,
+            "host_rematerialize_s": shrink_old,
+            "speedup": shrink_old / shrink_new,
+            "note": "Prune(mode='shrink') of params+momentum on a masked "
+                    "mesh state: one jitted gather with NamedSharding "
+                    "outputs vs eager per-tensor slicing + device_put "
+                    "re-place",
+        },
+    }
+    out = Path(out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+    path = out / "BENCH_mesh_server_eval.json"
+    path.write_text(json.dumps(rec, indent=2))
+    print(f"-> {path}")
+    return rec
+
+
 def bench_masked_train(out_dir: str, *, steps: int = 5,
                        prune_rate: float = 0.5) -> dict:
     """One masked TRAINING step: Pallas masked-matmul (kernel path, with
@@ -604,14 +770,19 @@ def main():
     ap.add_argument("--mesh-backend", action="store_true",
                     help="rounds/sec: LocalScanBackend vs. client-sharded "
                          "MeshBackend (forces 8 virtual devices)")
+    ap.add_argument("--mesh-server-eval", action="store_true",
+                    help="per-round server-update/eval time: batch-sharded "
+                         "vs replicated on the mesh, + the shrink "
+                         "compaction round-trip (forces 8 virtual devices)")
     ap.add_argument("--masked-train", action="store_true",
                     help="training step: Pallas masked-matmul kernel vs. "
                          "dense-masked, + analytic FLOP reduction")
-    ap.add_argument("--rounds", type=int, default=30)
+    ap.add_argument("--rounds", type=int, default=None,
+                    help="override the per-benchmark default round count")
     ap.add_argument("--out", default="benchmarks/results/perf")
     args = ap.parse_args()
 
-    if args.mesh_backend:
+    if args.mesh_backend or args.mesh_server_eval:
         # must precede the first jax import — same rule as the dry-run;
         # APPEND so a user's pre-existing XLA_FLAGS can't silently turn
         # this into a 1-device "mesh"
@@ -619,10 +790,13 @@ def main():
         if flag not in os.environ.get("XLA_FLAGS", ""):
             os.environ["XLA_FLAGS"] = \
                 (os.environ.get("XLA_FLAGS", "") + " " + flag).strip()
-        bench_mesh_backend(args.out)
+        if args.mesh_backend:
+            bench_mesh_backend(args.out, rounds=args.rounds or 12)
+        else:
+            bench_mesh_server_eval(args.out, rounds=args.rounds or 8)
         return
     if args.fl_engine:
-        bench_fl_engine(args.out, num_rounds=args.rounds)
+        bench_fl_engine(args.out, num_rounds=args.rounds or 30)
         return
     if args.fedap_plan:
         bench_fedap_plan(args.out)
@@ -632,8 +806,8 @@ def main():
         return
     if not (args.arch and args.shape and args.variant):
         ap.error("--arch/--shape/--variant are required unless one of "
-                 "--fl-engine/--fedap-plan/--mesh-backend/--masked-train "
-                 "is given")
+                 "--fl-engine/--fedap-plan/--mesh-backend/"
+                 "--mesh-server-eval/--masked-train is given")
 
     spec = VARIANTS[args.variant]
     for k, v in spec.get("env", {}).items():

@@ -21,6 +21,15 @@ pass over the full server set — one server-batch forward saved per round
 (§Perf iteration B2).  The pure-NumPy oracle in `repro.core.ref_engine`
 implements the same semantics naively and is the differential-test target.
 
+Nothing here is sharding-aware by construction: under the MeshBackend the
+client dim of ``batch["client"]`` AND the per-step batch dim of
+``batch["server"]`` arrive sharding-constrained
+(`sharding.fl_specs.fl_sim_batch_specs`), so the local-epoch vmap, the
+FedAvg einsum and every one of the (5a) server-SGD steps partition over
+the mesh with GSPMD-inserted collectives — the scan below compiles to
+per-shard partial gradients + one all-reduce per step, with this source
+unchanged (locked against the f64 oracle, first-step acc gate included).
+
 Round state is a dict ``{"params", "server_m", ["global_m"], ["masks"],
 "round"}``; ``global_m`` is present only for ``local_momentum ==
 "communicated"`` (FedDA), where the globally-aggregated momentum buffer is

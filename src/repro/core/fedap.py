@@ -30,6 +30,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import niid
+from repro.utils.arrays import pad_rows_with_first
 from repro.core.pruning import (
     FedAPConfig,
     PruneSpec,
@@ -61,6 +62,45 @@ def participant_rate(model, params, init_params, x, y, cfg: FedAPConfig):
 
     lip = lipschitz_estimate(grad_fn, params, init_params, probe)
     return expected_rate_from_spectrum(eigs, lip, cfg.max_rate)
+
+
+def participant_rate_padded(model, params, init_params, x, y, row_mask,
+                            n_valid, cfg: FedAPConfig):
+    """p*_k from a PADDED probe set (the sharded ragged-probe path).
+
+    ``x``/``y`` hold ``n_valid`` real samples followed by padding rows
+    (copies — their values never matter); ``row_mask`` is the matching
+    [rows] 0/1 validity vector.  Padded rows contribute NOTHING to the
+    statistics: their per-sample gradients are zeroed before the Gram
+    product (the padded spectrum is then the valid spectrum plus exact
+    zero eigenvalues, masked out of the eigen-gap search via
+    ``valid=n_valid``), and the Lipschitz estimate differentiates the
+    validity-weighted mean loss.  With an all-ones mask this computes the
+    same decision as :func:`participant_rate` up to float association
+    (vmapped per-sample losses vs one batched forward)."""
+
+    def loss_one(p, xi, yi):
+        return model.loss_and_acc(p, xi[None], yi[None])[0]
+
+    def per_sample_grads(p, batch):
+        bx, by, bm, _ = batch
+        g = jax.vmap(lambda xi, yi: jax.grad(loss_one)(p, xi, yi))(bx, by)
+        return jax.tree.map(
+            lambda t: t * bm.reshape((t.shape[0],) + (1,) * (t.ndim - 1)), g)
+
+    batch = (x, y, row_mask, n_valid)
+    eigs = fisher_spectrum(per_sample_grads, params, batch,
+                           n_valid=n_valid.astype(jnp.float32))
+
+    def masked_loss(p, b):
+        bx, by, bm, nv = b
+        losses = jax.vmap(lambda xi, yi: loss_one(p, xi, yi))(bx, by)
+        return jnp.sum(losses * bm) / nv.astype(jnp.float32)
+
+    lip = lipschitz_estimate(jax.grad(masked_loss), params, init_params,
+                             batch)
+    return expected_rate_from_spectrum(eigs, lip, cfg.max_rate,
+                                       valid=n_valid)
 
 
 @dataclasses.dataclass
@@ -172,8 +212,15 @@ def fedap_decision_sharded(model, data, cfg: FedAPConfig, params: Any, *,
     the same decision up to float tolerance (locked by
     tests/test_mesh_backend.py).
 
-    Requires every probed participant to hold at least ``cfg.probe_size``
-    samples (the stacked probe must be rectangular).
+    RAGGED probe sets — participants holding fewer than ``cfg.probe_size``
+    samples (e.g. a small server pool next to larger clients) — are
+    handled by padding: every participant's probe is padded to the widest
+    actual probe with copies of its own first row, and a per-row validity
+    mask zeroes the padded rows out of the Fisher spectrum and the
+    Lipschitz estimate (:func:`participant_rate_padded`), so each
+    participant's rate is computed over exactly the samples the host path
+    would probe.  Rectangular probes keep the host path's
+    :func:`participant_rate` verbatim.
     """
     rng = np.random.default_rng(0) if rng is None else rng
     p_bar = niid.global_distribution(data.client_dists, data.sizes)
@@ -182,30 +229,48 @@ def fedap_decision_sharded(model, data, cfg: FedAPConfig, params: Any, *,
     probe = cfg.probe_size
     n0 = data.server_x.shape[0]
     n_k = data.client_x.shape[1]
-    if min(n0, n_k) < probe:
-        raise ValueError(
-            f"fedap_decision_sharded stacks rectangular probes: every "
-            f"participant needs >= probe_size={probe} samples, but "
-            f"n0={n0}, n_k={n_k}")
-    xs = np.stack([np.asarray(data.server_x[:probe])]
-                  + [np.asarray(data.client_x[k][:probe]) for k in ids])
-    ys = np.stack([np.asarray(data.server_y[:probe])]
-                  + [np.asarray(data.client_y[k][:probe]) for k in ids])
+    takes = np.asarray([min(probe, n0)] + [min(probe, n_k)] * len(ids))
+    p_max = int(takes.max())
+
+    def pad0(a, take):
+        return pad_rows_with_first(np.asarray(a[:take]), p_max)
+
+    xs = np.stack([pad0(data.server_x, takes[0])]
+                  + [pad0(data.client_x[k], t)
+                     for k, t in zip(ids, takes[1:])])
+    ys = np.stack([pad0(data.server_y, takes[0])]
+                  + [pad0(data.client_y[k], t)
+                     for k, t in zip(ids, takes[1:])])
     sizes = jnp.asarray([float(n0)] + [float(data.sizes[k]) for k in ids])
     degrees = jnp.stack(
         [niid.non_iid_degree(data.server_dist, p_bar)]
         + [niid.non_iid_degree(data.client_dists[k], p_bar) for k in ids])
 
+    ragged = bool((takes != p_max).any())
     xs_d, ys_d = jnp.asarray(xs), jnp.asarray(ys)
+    sh = None
     if mesh is not None and client_axes:
         from repro.sharding.fl_specs import client_dim_sharding
 
         sh = client_dim_sharding(mesh, client_axes, xs.shape[0])
         xs_d, ys_d = jax.device_put(xs_d, sh), jax.device_put(ys_d, sh)
-    # the probes are already probe_size-sliced, so participant_rate (the
-    # host path's step 1, unchanged) vmaps over the participant axis
-    rates = jax.jit(jax.vmap(
-        lambda x, y: participant_rate(model, params, init_params, x, y,
-                                      cfg)))(xs_d, ys_d)
+    if ragged:
+        row_mask = (np.arange(p_max)[None, :]
+                    < takes[:, None]).astype(np.float32)
+        mask_d = jnp.asarray(row_mask)
+        nv_d = jnp.asarray(takes, jnp.int32)
+        if sh is not None:
+            mask_d, nv_d = jax.device_put(mask_d, sh), jax.device_put(nv_d,
+                                                                      sh)
+        rates = jax.jit(jax.vmap(
+            lambda x, y, m, nv: participant_rate_padded(
+                model, params, init_params, x, y, m, nv, cfg)))(
+                    xs_d, ys_d, mask_d, nv_d)
+    else:
+        # rectangular probes, already probe-sliced: participant_rate (the
+        # host path's step 1, unchanged) vmaps over the participant axis
+        rates = jax.jit(jax.vmap(
+            lambda x, y: participant_rate(model, params, init_params, x, y,
+                                          cfg)))(xs_d, ys_d)
 
     return _finish_decision(model, data, cfg, params, rates, sizes, degrees)

@@ -134,18 +134,28 @@ def fisher_spectrum(
     per_sample_grad_fn: Callable[[Any, Any], Any],
     params: Any,
     probe_batch: Any,
+    *,
+    n_valid: jnp.ndarray | int | None = None,
 ) -> jnp.ndarray:
     """Empirical-Fisher eigenvalues via the Gram trick.
 
     ``per_sample_grad_fn(params, batch) -> pytree with leading axis n`` must
     return per-sample gradients (e.g. ``jax.vmap(jax.grad(loss_one))``).
     Returns eigenvalues sorted ASCENDING (paper convention).
+
+    ``n_valid`` supports PADDED probe batches (the sharded ragged-probe
+    path): the Gram normalizer becomes ``n_valid`` instead of the row
+    count, and — provided ``per_sample_grad_fn`` zeroes the padded rows —
+    the padded Gram's spectrum is exactly the valid-row spectrum plus
+    ``n - n_valid`` zero eigenvalues (zero rows/columns), which
+    :func:`expected_rate_from_spectrum` masks out via its ``valid=``
+    argument.
     """
     g = per_sample_grad_fn(params, probe_batch)
     flat = jnp.concatenate(
         [x.reshape(x.shape[0], -1).astype(jnp.float32) for x in jax.tree.leaves(g)], axis=1
     )
-    n = flat.shape[0]
+    n = flat.shape[0] if n_valid is None else n_valid
     gram = flat @ flat.T / n                      # [n, n], same nonzero spectrum
     eigs = jnp.linalg.eigvalsh(gram)              # ascending
     return jnp.clip(eigs, 0.0, None)
@@ -168,21 +178,34 @@ def lipschitz_estimate(
 
 
 def expected_rate_from_spectrum(eigs: jnp.ndarray, lipschitz: jnp.ndarray,
-                                max_rate: float = 0.9) -> jnp.ndarray:
+                                max_rate: float = 0.9, *,
+                                valid: jnp.ndarray | int | None = None
+                                ) -> jnp.ndarray:
     """p*_k = m_k / d_k where m_k is the FIRST index (ascending order) with
     eig[m_k+1] - eig[m_k] > 4 L — the paper's Section 3.4 criterion: the
     modes below the first spectral gap form the prunable complement of the
     inertial manifold [62].
 
+    ``valid`` restricts the search to a PADDED spectrum's valid tail (the
+    sharded ragged-probe path): after clipping at 0, the ascending padded
+    spectrum is value-for-value ``[0]*(len(eigs)-valid) + sorted(valid
+    spectrum)``, so the eigen-gap search over its last ``valid`` entries —
+    with indices re-based and the pad|valid boundary gap excluded — is
+    exactly the search the host path runs on the unpadded spectrum.
+
     If no gap clears the bar, p*_k = 0 (prune nothing — safe default).
     """
-    d = eigs.shape[0]
-    gaps = eigs[1:] - eigs[:-1]                      # [d-1]
-    ok = gaps > 4.0 * lipschitz
-    idx = jnp.arange(1, d)
+    d_pad = eigs.shape[0]
+    d = jnp.asarray(d_pad if valid is None else valid, jnp.int32)
+    gaps = eigs[1:] - eigs[:-1]                      # [d_pad-1]
+    # index of each gap within the valid tail; <= 0 means padding or the
+    # pad|valid boundary, which the host path's spectrum has no gap for
+    idx = jnp.arange(1, d_pad, dtype=jnp.int32) - (jnp.int32(d_pad) - d)
+    ok = (gaps > 4.0 * lipschitz) & (idx >= 1)
     m = jnp.min(jnp.where(ok, idx, d))
-    m = jnp.where(m >= d, 0, m)                      # no qualifying gap
-    return jnp.clip(m.astype(jnp.float32) / d, 0.0, max_rate)
+    m = jnp.where(m >= d, jnp.int32(0), m)           # no qualifying gap
+    return jnp.clip(m.astype(jnp.float32) / d.astype(jnp.float32),
+                    0.0, max_rate)
 
 
 # ---------------------------------------------------------------------------

@@ -196,17 +196,37 @@ class FederatedTrainer:
         prune_spec(params) / feature_maps(params, x)   (only for Prune events)
     data: repro.data.pipeline.FederatedData
     backend: "local" (single-host scan) | "mesh" (client-sharded over a
-        device mesh; ``mesh=`` overrides the default host mesh)
+        device mesh; ``mesh=`` overrides the default host mesh, and
+        ``backend_opts`` forwards extra backend constructor switches —
+        e.g. ``{"shard_server": False}`` / ``{"shard_eval": False}`` to
+        fall back to the replicated server scan / evaluation, which the
+        BENCH_mesh_server_eval benchmark uses as its baseline)
     """
 
     def __init__(self, model, data, cfg: FLConfig, *,
-                 backend: str = "local", mesh=None):
+                 backend: str = "local", mesh=None,
+                 backend_opts: dict | None = None):
         if backend not in _BACKENDS:
             raise ValueError(f"unknown backend: {backend!r} "
                              f"(expected one of {sorted(_BACKENDS)})")
         self.model, self.data, self.cfg = model, data, cfg
         self.backend_name = backend
         self._mesh = mesh
+        self._backend_opts = dict(backend_opts or {})
+        # fail HERE with a clear message, not as a TypeError (or a silent
+        # override) deep inside the first run()'s backend construction
+        if backend != "mesh" and self._backend_opts:
+            raise ValueError(
+                f"backend_opts={sorted(self._backend_opts)} are "
+                f"mesh-backend switches; pass backend=\"mesh\" "
+                f"(got backend={backend!r})")
+        reserved = {"mesh", "use_masks", "data_cache"} & set(
+            self._backend_opts)
+        if reserved:
+            raise ValueError(
+                f"backend_opts may not override trainer-managed backend "
+                f"arguments {sorted(reserved)}; use the mesh= trainer "
+                f"parameter / plan-driven masking instead")
         self._key = jax.random.key(cfg.seed)
         self.engine_config = engine_config(cfg)
         self._sample_kw = sim_sample_kw(cfg, data)
@@ -220,7 +240,7 @@ class FederatedTrainer:
         """The (cached) execution backend for this trainer; one instance
         per mask mode so the jitted programs persist across runs."""
         if use_masks not in self._backends:
-            kw = {}
+            kw = dict(self._backend_opts)
             if self.backend_name == "mesh":
                 if self._mesh is None:
                     # resolve the default host mesh ONCE: both mask-mode

@@ -29,8 +29,8 @@ class FederatedData:
     test_x: np.ndarray
     test_y: np.ndarray
 
-    def device_arrays(self, *, mesh=None,
-                      client_axes: tuple = ("data",)) -> dict:
+    def device_arrays(self, *, mesh=None, client_axes: tuple = ("data",),
+                      shard_test: bool = True) -> dict:
         """The whole federated dataset as ONE device-resident dict — the
         single host->device transfer point for the scan-compiled engine
         (`repro.core.engine.sample_round_batches` draws every round's
@@ -41,9 +41,15 @@ class FederatedData:
         ``client_dists``) shard their leading client dimension over the
         mesh ``client_axes`` (falling back to replication when the client
         count does not divide), so each device STORES only its clients'
-        data; everything else (server pool, test split, scalars) is
-        replicated.  Without ``mesh`` the arrays land on the default
-        device, exactly as before."""
+        data, and — with ``shard_test`` — the test split shards its batch
+        dimension the same way, padded with copies of row 0 up to the axis
+        size so evaluation is ALWAYS data-parallel (the MeshBackend's eval
+        program corrects the padded rows out exactly; `MeshBackend`
+        closes over the true row count).  The server pool and scalars stay
+        replicated (per-round server batches are sharding-constrained
+        in-scan instead — `fl_specs.fl_sim_batch_specs`).  Without
+        ``mesh`` the arrays land on the default device, exactly as
+        before."""
         import jax
         import jax.numpy as jnp
 
@@ -74,10 +80,25 @@ class FederatedData:
         replicated = NamedSharding(mesh, P())
         client_sharded = client_dim_sharding(mesh, client_axes,
                                              self.client_x.shape[0])
-        per_client = ("client_x", "client_y", "sizes", "client_dists")
-        return jax.device_put(
-            out, {k: (client_sharded if k in per_client else replicated)
-                  for k in out})
+        shardings = {k: replicated for k in out}
+        for k in ("client_x", "client_y", "sizes", "client_dists"):
+            shardings[k] = client_sharded
+        if shard_test:
+            axis_size = 1
+            for a in client_axes:
+                axis_size *= mesh.shape[a]
+            n = self.test_x.shape[0]
+            pad = -n % axis_size
+            if pad:
+                from repro.utils.arrays import pad_rows_with_first
+
+                out["test_x"] = jnp.asarray(
+                    pad_rows_with_first(self.test_x, n + pad))
+                out["test_y"] = jnp.asarray(
+                    pad_rows_with_first(self.test_y, n + pad), jnp.int32)
+            test_sharded = client_dim_sharding(mesh, client_axes, n + pad)
+            shardings["test_x"] = shardings["test_y"] = test_sharded
+        return jax.device_put(out, shardings)
 
 
 def _dists(ys: np.ndarray, num_classes: int) -> np.ndarray:

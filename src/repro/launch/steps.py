@@ -33,11 +33,15 @@ over `sharding/fl_specs.py` partition specs.  The simulation-scale
 client-sharded driver lives in :mod:`repro.core.backend`
 (``MeshBackend``), which reuses the pieces here: its Prune events compute
 the FedAP decision from mesh-sharded participants
-(``fedap.fedap_decision_sharded`` — the driver the ROADMAP's pod-path
-prune-orchestration item asked for) and inject it through
-:func:`with_masks`, whose canonical state transform is
-``backend.masked_round_state`` (shared with the local executor so the two
-paths cannot diverge).
+(``fedap.fedap_decision_sharded`` — ragged probe sets padded and masked)
+and inject MASK decisions through :func:`with_masks`, whose canonical
+state transform is ``backend.masked_round_state`` (shared with the local
+executor so the two paths cannot diverge); SHRINK decisions compact the
+sharded state in one jitted shard-local gather
+(``MeshBackend._sharded_shrink``) — the pod analogue of the same
+no-host-round-trip rule this module follows for the round itself.  Its
+server-update and eval batches shard over the mesh exactly as
+``fl_batch_partition_specs`` shards the server batch dim here.
 
 Serve steps (``prefill_step`` / ``decode_step``) run the aggregated global
 model — plain distributed inference.

@@ -59,7 +59,8 @@ def client_dim_sharding(mesh, client_axes: tuple, leading_dim: int):
     return NamedSharding(mesh, P())
 
 
-def fl_sim_batch_specs(clients_per_round: int, plan: MeshPlan) -> dict:
+def fl_sim_batch_specs(clients_per_round: int, plan: MeshPlan, *,
+                       server_batch: int | None = None) -> dict:
     """PartitionSpecs for the SIMULATION path's round batch — the pytree
     built on device by ``engine.sample_round_batches``:
 
@@ -68,19 +69,28 @@ def fl_sim_batch_specs(clients_per_round: int, plan: MeshPlan) -> dict:
               mesh; the FedAvg einsum becomes per-shard partial sums + one
               all-reduce, inserted by GSPMD);
       sizes   [C] — alongside the client dim;
-      server  (x [tau, b, ...], y [tau, b]) and the non-IID scalars —
-              replicated (the server update is a single-model SGD loop).
+      server  (x [tau, b, ...], y [tau, b]) — with ``server_batch`` given,
+              the PER-STEP batch dim b shards over the client axes, so each
+              of the tau FedDU server-update steps (the Formula 4-7 scan in
+              ``engine.round_core``) computes per-shard partial gradients +
+              one GSPMD all-reduce instead of replicating the whole server
+              step on every device; ``server_batch=None`` (or a
+              non-divisible b) keeps it replicated;
+      the non-IID scalars — replicated.
 
     A non-divisible ``clients_per_round`` falls back to replication, the
     production-safe default everywhere else in this module."""
     ca = _axis(plan.client_axes)
-    ok = bool(plan.client_axes) and \
-        clients_per_round % plan.axis_size(plan.client_axes) == 0
+    size = plan.axis_size(plan.client_axes) if plan.client_axes else 1
+    ok = bool(plan.client_axes) and clients_per_round % size == 0
     cspec = P(ca) if ok else P()
+    sok = bool(plan.client_axes) and server_batch is not None \
+        and server_batch % size == 0
+    sspec = P(None, ca) if sok else P()
     return {
         "client": (cspec, cspec),
         "sizes": cspec,
-        "server": (P(), P()),
+        "server": (sspec, sspec),
         "d_round": P(),
         "d_server": P(),
         "n0": P(),

@@ -1,3 +1,4 @@
+from repro.utils.arrays import pad_rows_with_first
 from repro.utils.tree import (
     tree_add,
     tree_sub,
@@ -11,6 +12,7 @@ from repro.utils.tree import (
 )
 
 __all__ = [
+    "pad_rows_with_first",
     "tree_add",
     "tree_sub",
     "tree_scale",

@@ -1,0 +1,33 @@
+"""Host-side (NumPy) array plumbing shared across layers.
+
+Kept separate from :mod:`repro.utils.tree` (device pytree arithmetic):
+these helpers run at data-placement / decision time on the host.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def pad_rows_with_first(a: np.ndarray, target_rows: int) -> np.ndarray:
+    """Pad ``a`` along axis 0 to ``target_rows`` with copies of row 0.
+
+    The canonical padding of every "pad then mask/correct the pad back
+    out" path in this repo — the mesh-sharded test split
+    (`FederatedData.device_arrays`: the eval program subtracts the padded
+    rows' row-0 contribution exactly) and the ragged FedAP probe stack
+    (`fedap_decision_sharded`: padded rows are masked out of the
+    Fisher/Lipschitz statistics).  Row 0 (not zeros) keeps the padded
+    rows numerically well-behaved through any model forward.  ``a`` must
+    be non-empty; ``target_rows`` must be >= ``len(a)``.
+    """
+    a = np.asarray(a)
+    if a.shape[0] == 0:
+        raise ValueError("cannot pad an empty array with copies of row 0")
+    pad = target_rows - a.shape[0]
+    if pad < 0:
+        raise ValueError(
+            f"target_rows={target_rows} < existing rows {a.shape[0]}")
+    if pad == 0:
+        return a
+    return np.concatenate(
+        [a, np.broadcast_to(a[:1], (pad,) + a.shape[1:])])

@@ -62,7 +62,11 @@ def host_mesh():
 
 DIM, CLASSES = 6, 4
 N_CLIENTS, N_K = 8, 20
-N_SERVER, N_TEST = 15, 12
+# 16 server rows / server_batch 8: the per-step server batch dim divides
+# the CI job's 8-way client axis, so the FedDU server scan GENUINELY
+# shards in these parity tests; 12 test rows do NOT divide 8, so the
+# sharded eval's pad-and-correct path is exercised against the oracle too
+N_SERVER, N_TEST = 16, 12
 ROUNDS = 4
 
 
@@ -104,7 +108,7 @@ def softmax_world():
         test_x=x(N_TEST), test_y=y(N_TEST))
     cfg = feddumap_config(
         num_clients=N_CLIENTS, clients_per_round=N_CLIENTS, local_epochs=1,
-        batch_size=5, lr=0.08, lr_decay=0.97, server_batch_size=5)
+        batch_size=5, lr=0.08, lr_decay=0.97, server_batch_size=8)
     return data, OracleSoftmaxModel(), cfg
 
 
@@ -170,6 +174,37 @@ class TestMeshOracleParity:
         for leaf, ref_leaf in zip(jax.tree.leaves(res_m.state["server_m"]),
                                   jax.tree.leaves(ref_state["server_m"])):
             np.testing.assert_allclose(np.asarray(leaf), ref_leaf, atol=1e-5)
+
+    @pytest.mark.parametrize("local_m,server_m",
+                             [("none", False), ("communicated", True)])
+    def test_all_momentum_modes_sharded_server_scan(self, softmax_world,
+                                                    local_m, server_m):
+        """mesh == local == f64 oracle per round with the batch-sharded
+        FedDU server scan (and sharded eval) enabled, for the momentum
+        modes the module fixture (restart + server momentum) does not
+        cover.  tau_eff rides on the first-step server_acc gate, so its
+        parity transitively checks the sharded first server forward."""
+        data, model, cfg = softmax_world
+        cfg = dataclasses.replace(cfg, local_momentum=local_m,
+                                  server_momentum=server_m)
+        rounds = 3
+        plan = per_round_plan(rounds)
+        res_l = FederatedTrainer(model, data, cfg).run(plan)
+        res_m = FederatedTrainer(model, data, cfg, backend="mesh").run(plan)
+        ref_state, ref_hist = oracle_run(data, model, cfg, rounds)
+        for res, tag in ((res_l, "local"), (res_m, "mesh")):
+            np.testing.assert_allclose(res.history["loss"], ref_hist["loss"],
+                                       atol=1e-5, err_msg=tag)
+            np.testing.assert_allclose(res.history["tau_eff"],
+                                       ref_hist["tau_eff"], atol=1e-5,
+                                       err_msg=tag)
+        for a, b in zip(jax.tree.leaves(res_m.params),
+                        jax.tree.leaves(ref_state["params"])):
+            np.testing.assert_allclose(np.asarray(a), b, atol=1e-5)
+        if local_m == "communicated":
+            for a, b in zip(jax.tree.leaves(res_m.state["global_m"]),
+                            jax.tree.leaves(ref_state["global_m"])):
+                np.testing.assert_allclose(np.asarray(a), b, atol=1e-5)
 
 
 # ---------------------------------------------------------------------------
@@ -250,7 +285,16 @@ class TestMeshFullPlan:
         d = be.device_data()
         if N_CLIENTS % mesh.shape["data"] == 0 and mesh.shape["data"] > 1:
             assert d["client_x"].sharding.spec == P("data")
+        # server POOL replicated (per-step server batches are sharded
+        # in-scan instead); TEST split padded to the axis size and sharded
+        # on its batch dim — eval is no longer a replicated full-test pass
         assert d["server_x"].sharding == NamedSharding(mesh, P())
+        size = mesh.shape["data"]
+        n_test = be.data.test_x.shape[0]
+        assert d["test_x"].shape[0] == n_test + (-n_test % size)
+        if size > 1:
+            assert d["test_x"].sharding.spec == P("data")
+            assert d["test_y"].sharding.spec == P("data")
 
     def test_snapshot_and_callback_round_indices(self, cnn_world):
         data, model, cfg = cnn_world
@@ -301,14 +345,179 @@ class TestShardedDecisionMatchesHost:
         assert {k: v.tolist() for k, v in host.kept.items()} \
             == {k: v.tolist() for k, v in pod.kept.items()}
 
-    def test_rectangular_probe_validation(self, cnn_world):
+    def test_ragged_probe_equals_host(self, cnn_world):
+        """Ragged probe sets (server pool smaller than the requested probe,
+        clients larger): the sharded path pads the stacked probe to
+        rectangular and masks the padded rows out of the Fisher/Lipschitz
+        statistics, so each participant's rate is computed over exactly
+        the samples the host path probes.  With the compression floor
+        binding the two entry points pick IDENTICAL filters (the same
+        contract the rectangular floor test locks)."""
         data, model, cfg = cnn_world
-        apcfg = dataclasses.replace(cfg.fedap, probe_size=10_000)
-        with pytest.raises(ValueError, match="probe_size"):
-            fedap_decision_sharded(model, data, apcfg,
-                                   model.init(jax.random.key(0)),
-                                   init_params=model.init(jax.random.key(0)),
-                                   mesh=host_mesh())
+        n0, n_k = data.server_x.shape[0], data.client_x.shape[1]
+        probe = n_k - 4          # > n0 (=64) but <= n_k (=80): truly ragged
+        assert n0 < probe <= n_k
+        apcfg = dataclasses.replace(cfg.fedap, probe_size=probe,
+                                    min_rate=0.7)
+        params = model.init(jax.random.key(3))
+        kw = dict(init_params=model.init(jax.random.key(0)))
+        host = fedap_decision(model, data, apcfg, params,
+                              rng=np.random.default_rng(5), **kw)
+        pod = fedap_decision_sharded(model, data, apcfg, params,
+                                     rng=np.random.default_rng(5),
+                                     mesh=host_mesh(), client_axes=("data",),
+                                     **kw)
+        assert host.p_star == pytest.approx(pod.p_star, abs=1e-6)
+        assert host.layer_rates == pytest.approx(pod.layer_rates, abs=1e-6)
+        assert {k: v.tolist() for k, v in host.kept.items()} \
+            == {k: v.tolist() for k, v in pod.kept.items()}
+
+    def test_ragged_probe_rates_close_to_host(self, cnn_world):
+        """Off the floor, the padded/masked step-1 statistics must stay
+        within the discrete eigen-index tolerance of the host path (same
+        contract as the rectangular closeness test)."""
+        data, model, cfg = cnn_world
+        probe = data.client_x.shape[1] - 4
+        apcfg = dataclasses.replace(cfg.fedap, probe_size=probe)
+        params = model.init(jax.random.key(3))
+        kw = dict(init_params=model.init(jax.random.key(0)))
+        host = fedap_decision(model, data, apcfg, params,
+                              rng=np.random.default_rng(5), **kw)
+        pod = fedap_decision_sharded(model, data, apcfg, params,
+                                     rng=np.random.default_rng(5),
+                                     mesh=host_mesh(), client_axes=("data",),
+                                     **kw)
+        # one flipped eigen index per participant at most, over the
+        # SMALLEST actual probe (the server's n0 rows)
+        assert abs(host.p_star - pod.p_star) <= 1.0 / data.server_x.shape[0]
+
+
+# ---------------------------------------------------------------------------
+# Batch-sharded evaluation: sharded eval == replicated eval on the same
+# params (pad-and-correct path included), built without lowering the chunk
+# ---------------------------------------------------------------------------
+
+class TestShardedEval:
+    def test_sharded_eval_equals_replicated(self, cnn_world):
+        """The sharded eval program — test batch padded (100 -> 104 on the
+        8-way axis) and sharded over the mesh — must score the SAME params
+        like the replicated full-test pass, the padded rows corrected out
+        exactly (up to f32 association)."""
+        from repro.core.backend import MeshBackend
+
+        data, model, cfg = cnn_world
+        mesh = host_mesh()
+        be_s = MeshBackend(model, data, cfg, mesh=mesh)
+        be_r = MeshBackend(model, data, cfg, mesh=mesh, shard_eval=False,
+                           shard_server=False)
+        state = be_s.init_state(model.init(jax.random.key(1)))
+        loss_s, acc_s = be_s.evaluate(state)
+        loss_r, acc_r = be_r.evaluate(state)
+        np.testing.assert_allclose(float(loss_s), float(loss_r), atol=1e-6)
+        np.testing.assert_allclose(float(acc_s), float(acc_r), atol=1e-6)
+
+    def test_evaluate_does_not_lower_chunk(self, cnn_world):
+        """`evaluate` on a FRESH backend must not pay the full chunk
+        lowering — eval-program construction is factored out of
+        `_programs` (the `self._programs()`-for-side-effect satellite)."""
+        from repro.core.backend import MeshBackend
+
+        data, model, cfg = cnn_world
+        be = MeshBackend(model, data, cfg, mesh=host_mesh())
+        state = be.init_state(model.init(jax.random.key(1)))
+        loss, acc = be.evaluate(state)
+        assert np.isfinite(float(loss)) and np.isfinite(float(acc))
+        assert be._chunk is None, \
+            "evaluate() lowered the chunk program as a side effect"
+
+
+# ---------------------------------------------------------------------------
+# Shard-local shrink compaction: no host round-trip, values == host shrink
+# (params AND momentum), outputs mesh-committed NamedShardings
+# ---------------------------------------------------------------------------
+
+class TestShardedShrink:
+    @pytest.fixture()
+    def masked_state(self, cnn_world):
+        """A mesh round state two rounds in with a mask decision applied —
+        the state a reuse-shrink compacts."""
+        data, model, cfg = cnn_world
+        tr = FederatedTrainer(model, data, cfg, backend="mesh")
+        res = tr.run(TrainPlan(Scan(2), Prune(mode="mask")))
+        be = tr.backend(use_masks=True)
+        return be, res.state, res.artifacts["prune"]["kept"]
+
+    def test_sharded_shrink_matches_host_and_stays_on_mesh(self,
+                                                           masked_state):
+        from repro.core import backend as backend_mod
+
+        be, state, kept = masked_state
+        # the host (base-class) path on the same state — the "before"
+        host_state, host_extra = backend_mod._EngineBackend.apply_prune(
+            be, state, "shrink", kept, compact_existing=True)
+
+        # the sharded path may not re-place any STATE array via
+        # jax.device_put (the compaction is one jitted program whose
+        # out_shardings pin the mesh placement); the only device_put
+        # traffic allowed is the trace-time conversion of the tiny static
+        # kept-INDEX constants
+        calls = []
+        orig = jax.device_put
+        jax.device_put = lambda x, *a, **k: calls.append(x) or orig(x, *a, **k)
+        try:
+            new_state, extra = be.apply_prune(state, "shrink", kept,
+                                              compact_existing=True)
+        finally:
+            jax.device_put = orig
+        for x in calls:
+            assert np.issubdtype(np.asarray(x).dtype, np.integer) \
+                and np.asarray(x).ndim <= 1, \
+                f"sharded shrink re-placed a state array via device_put: " \
+                f"{np.asarray(x).dtype} {np.asarray(x).shape}"
+
+        # params AND momentum leaf-equal to the host shrink (pure gathers
+        # of identical inputs -> exact), round preserved
+        for (p1, l1), (p2, l2) in zip(
+                jax.tree_util.tree_leaves_with_path(host_state),
+                jax.tree_util.tree_leaves_with_path(new_state)):
+            assert p1 == p2
+            assert l1.shape == l2.shape, p1
+            np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2),
+                                          err_msg=str(p1))
+        # every leaf is a mesh-committed NamedSharding output of the jitted
+        # compaction — the acceptance-criterion placement assertion
+        for path, leaf in jax.tree_util.tree_leaves_with_path(new_state):
+            assert isinstance(leaf.sharding, NamedSharding), path
+            assert leaf.sharding.mesh == be.mesh, path
+        # artifact contract unchanged
+        assert set(extra) == set(host_extra) == {"params_before"}
+
+    def test_mask_then_shrink_plan_parity(self, cnn_world):
+        """Full executor path: Scan/Prune(mask)/Scan/Prune(shrink,
+        reuse)/Scan/Eval on the mesh == local, params and compacted
+        momentum within 1e-5; one chunk program per shape (the shrink's
+        re-trace is the shape change, nothing else re-lowers)."""
+        data, model, cfg = cnn_world
+        plan = TrainPlan(Scan(2), Prune(mode="mask"), Scan(2),
+                         Prune(mode="shrink", reuse="prune", name="shrink"),
+                         Scan(2), Eval())
+        tr_m = FederatedTrainer(model, data, cfg, backend="mesh")
+        res_m = tr_m.run(plan)
+        res_l = FederatedTrainer(model, data, cfg).run(plan)
+        np.testing.assert_allclose(res_m.history["loss"],
+                                   res_l.history["loss"], atol=1e-5)
+        np.testing.assert_allclose(res_m.history["acc"],
+                                   res_l.history["acc"], atol=1e-5)
+        for a, b in zip(jax.tree.leaves(res_m.params),
+                        jax.tree.leaves(res_l.params)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=1e-5)
+        for a, b in zip(jax.tree.leaves(res_m.state["server_m"]),
+                        jax.tree.leaves(res_l.state["server_m"])):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=1e-5)
+        be = tr_m.backend(use_masks=True)
+        assert be.chunk._cache_size() == 2      # pre-shrink + post-shrink
 
 
 # ---------------------------------------------------------------------------

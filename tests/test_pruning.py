@@ -48,6 +48,31 @@ class TestEigenGapRule:
         rate = expected_rate_from_spectrum(eigs, jnp.asarray(0.001), max_rate=0.5)
         assert float(rate) <= 0.5
 
+    @pytest.mark.parametrize("pad", [0, 1, 4])
+    def test_padded_spectrum_equals_unpadded(self, pad):
+        """The ragged-probe contract: a spectrum padded with leading zero
+        eigenvalues (what zeroed per-sample-gradient rows add to the Gram)
+        searched with ``valid=d`` must give EXACTLY the unpadded rate —
+        including the boundary gap between the last padding zero and the
+        smallest valid eigenvalue, which must never qualify."""
+        rng = np.random.default_rng(0)
+        for lip in (0.01, 0.5, 5.0):
+            eigs = jnp.asarray(np.sort(rng.gamma(1.0, 2.0, size=12)))
+            base = expected_rate_from_spectrum(eigs, jnp.asarray(lip))
+            padded = jnp.concatenate([jnp.zeros((pad,)), eigs])
+            got = expected_rate_from_spectrum(padded, jnp.asarray(lip),
+                                              valid=eigs.shape[0])
+            assert float(got) == pytest.approx(float(base))
+
+    def test_boundary_gap_excluded(self):
+        """A huge jump from the padding zeros into the valid spectrum is
+        NOT an eigen-gap (the host path has no gap before valid[0])."""
+        eigs = jnp.asarray([100.0, 101.0, 102.0, 103.0])  # no internal gap
+        base = expected_rate_from_spectrum(eigs, jnp.asarray(1.0))
+        padded = jnp.concatenate([jnp.zeros((3,)), eigs])
+        got = expected_rate_from_spectrum(padded, jnp.asarray(1.0), valid=4)
+        assert float(base) == float(got) == 0.0
+
 
 class TestFormula15:
     def test_low_niid_dominates(self):
