@@ -8,7 +8,16 @@ pool, pruning at round 30.
   PYTHONPATH=src python -m benchmarks.paper_experiments --suite main
   PYTHONPATH=src python -m benchmarks.paper_experiments --suite ablations
 
-Writes one JSON per run into benchmarks/results/paper/.
+The heterogeneity scenario matrix (client algorithm x Dirichlet skew x
+participation/stragglers, both backends) is a separate grid runner:
+
+  PYTHONPATH=src python -m benchmarks.paper_experiments --grid smoke --backend mesh
+  PYTHONPATH=src python -m benchmarks.paper_experiments --grid full --backend both
+
+Writes one JSON per run into benchmarks/results/paper/ (the grid writes
+one combined BENCH_scenario_matrix.json).  Every cell trains on its OWN
+key derived from (base_seed, cell_index) via ``jax.random.fold_in`` —
+rerunning a grid reproduces it array-exactly.
 """
 from __future__ import annotations
 
@@ -16,19 +25,24 @@ import argparse
 import dataclasses
 import json
 import time
+import zlib
 from pathlib import Path
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (
     FedAPConfig,
     FedDUConfig,
+    FedDynConfig,
+    FedProxConfig,
     FederatedTrainer,
     TrainPlan,
     baselines,
     fedap_plan,
     feddumap_config,
+    niid,
 )
 from repro.core.rounds import FLConfig
 from repro.data import build_federated_data
@@ -36,6 +50,14 @@ from repro.data.synthetic import SyntheticSpec
 from repro.models import LeNet5, SimpleCNN
 
 OUT = Path("benchmarks/results/paper")
+
+
+def _cell_seed(base_seed: int, cell_index: int) -> int:
+    """The per-cell seed: fold the cell index into the base key.  Every
+    grid cell gets its own deterministic key chain instead of all cells
+    silently reusing the raw base seed."""
+    key = jax.random.fold_in(jax.random.key(base_seed), cell_index)
+    return int(jax.random.bits(key, dtype=jnp.uint32))
 
 # Scaled-down paper protocol (1-core CPU): 100 clients, 10/round, E=5, B=10.
 NUM_CLIENTS = 100
@@ -56,7 +78,7 @@ def make_model(name: str):
 
 
 def run_one(tag: str, *, model_name="cnn", algo="fedavg", p=0.05,
-            server_niid="iid", rounds=ROUNDS, seed=0,
+            server_niid="iid", rounds=ROUNDS, seed=0, cell_index=None,
             feddu_overrides=None, prune_round=30, static_tau=None,
             backend="local", out_dir: Path = OUT):
     out_dir.mkdir(parents=True, exist_ok=True)
@@ -65,6 +87,13 @@ def run_one(tag: str, *, model_name="cnn", algo="fedavg", p=0.05,
         print(f"[skip] {tag}")
         return json.loads(path.read_text())
     t0 = time.time()
+    # per-cell key threading: a suite cell trains on fold_in(base, cell),
+    # never the raw base seed shared across every run (tag-hash fallback
+    # keeps ad-hoc single runs distinct too)
+    base_seed = seed
+    if cell_index is None:
+        cell_index = zlib.crc32(tag.encode())
+    seed = _cell_seed(base_seed, cell_index)
     data = build_federated_data(num_clients=NUM_CLIENTS, server_fraction=p,
                                 server_niid=server_niid, device_pool=DEVICE_POOL,
                                 spec=SPEC, seed=seed)
@@ -139,6 +168,7 @@ def run_one(tag: str, *, model_name="cnn", algo="fedavg", p=0.05,
     rec = {
         "tag": tag, "algo": algo, "model": model_name, "p": p,
         "server_niid": server_niid, "rounds": rounds, "seed": seed,
+        "base_seed": base_seed, "cell_index": cell_index,
         "final_acc": hist["acc"][-1],
         "best_acc": max(hist["acc"]),
         "history": hist,
@@ -188,12 +218,122 @@ def suite_lenet():
         run_one(f"lenet_{algo}", model_name="lenet", algo=algo, p=0.05)
 
 
+# ---------------------------------------------------------------------------
+# Heterogeneity scenario matrix: client algorithm x Dirichlet skew x
+# participation/stragglers, on both execution backends
+# ---------------------------------------------------------------------------
+
+SCEN_CLIENTS = 16
+SCEN_SPEC = SyntheticSpec(num_classes=10, image_shape=(8, 8, 3),
+                          train_size=2600, test_size=400, noise_scale=0.45)
+SCEN_POOL = 2000
+SCEN_COMMON = dict(num_clients=SCEN_CLIENTS, local_epochs=1, batch_size=10,
+                   lr=0.08, lr_decay=0.98, server_batch_size=16)
+SCEN_MU, SCEN_FEDDYN_ALPHA = 0.01, 0.01
+
+
+def scenario_cells(grid: str):
+    """The grid: 3 algorithms x Dirichlet alpha x (clients_per_round,
+    dropout_rate).  ``smoke`` is the CI gate (one scenario per algorithm,
+    2 rounds); ``full`` is the recorded BENCH matrix."""
+    algos = ("fedavg", "fedprox", "feddyn")
+    if grid == "smoke":
+        alphas, participation, rounds = (0.5,), ((4, 0.25),), 2
+    elif grid == "full":
+        alphas = (0.1, 0.5, 100.0)
+        participation = ((8, 0.0), (4, 0.0), (8, 0.25))
+        rounds = 8
+    else:
+        raise ValueError(grid)
+    cells = [dict(algo=a, dirichlet_alpha=al, clients_per_round=c,
+                  dropout_rate=d)
+             for a in algos for al in alphas for c, d in participation]
+    return cells, rounds
+
+
+def _scenario_config(cell: dict, seed: int) -> FLConfig:
+    common = dict(SCEN_COMMON, clients_per_round=cell["clients_per_round"],
+                  dropout_rate=cell["dropout_rate"], seed=seed)
+    if cell["algo"] == "fedavg":
+        return baselines.fedavg_config(**common)
+    if cell["algo"] == "fedprox":
+        return baselines.fedprox_config(
+            **common, fedprox=FedProxConfig(mu=SCEN_MU))
+    if cell["algo"] == "feddyn":
+        return baselines.feddyn_config(
+            **common, feddyn=FedDynConfig(alpha=SCEN_FEDDYN_ALPHA))
+    raise ValueError(cell["algo"])
+
+
+def run_scenario_cell(cell: dict, *, rounds: int, backend: str = "local",
+                      base_seed: int = 0, cell_index: int = 0) -> dict:
+    seed = _cell_seed(base_seed, cell_index)
+    data = build_federated_data(
+        num_clients=SCEN_CLIENTS, server_fraction=0.1, device_pool=SCEN_POOL,
+        spec=SCEN_SPEC, partition="dirichlet",
+        dirichlet_alpha=cell["dirichlet_alpha"], seed=seed)
+    p_bar = niid.global_distribution(data.client_dists, data.sizes)
+    degree = float(np.mean(np.asarray(
+        niid.non_iid_degree(data.client_dists, p_bar))))
+    model = SimpleCNN(num_classes=10, image_shape=SCEN_SPEC.image_shape,
+                      channels=(4, 8, 8), fc_width=16)
+    cfg = _scenario_config(cell, seed)
+    t0 = time.time()
+    res = FederatedTrainer(model, data, cfg, backend=backend).run(
+        TrainPlan.standard(rounds, eval_every=1))
+    return {**cell, "backend": backend, "rounds": rounds,
+            "base_seed": base_seed, "cell_index": cell_index, "seed": seed,
+            "mean_niid_degree": degree,
+            "final_acc": float(res.history["acc"][-1]),
+            "final_loss": float(res.history["loss"][-1]),
+            "history": {k: [float(v) for v in vs]
+                        for k, vs in res.history.items()},
+            "wall_s": time.time() - t0}
+
+
+def suite_scenario_matrix(grid: str = "smoke", backends=("local",),
+                          base_seed: int = 0, out_dir: Path = OUT):
+    cells, rounds = scenario_cells(grid)
+    recs = []
+    for backend in backends:
+        for i, cell in enumerate(cells):
+            rec = run_scenario_cell(cell, rounds=rounds, backend=backend,
+                                    base_seed=base_seed, cell_index=i)
+            print(f"[grid] {backend} {cell['algo']} "
+                  f"alpha={cell['dirichlet_alpha']} "
+                  f"C={cell['clients_per_round']} "
+                  f"drop={cell['dropout_rate']} "
+                  f"d={rec['mean_niid_degree']:.3f} "
+                  f"acc={rec['final_acc']:.3f} ({rec['wall_s']:.0f}s)",
+                  flush=True)
+            recs.append(rec)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    path = out_dir / "BENCH_scenario_matrix.json"
+    path.write_text(json.dumps({"grid": grid, "rounds": rounds,
+                                "base_seed": base_seed, "cells": recs},
+                               indent=1))
+    print(f"[done] scenario matrix -> {path} ({len(recs)} cells)")
+    return recs
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--suite", default="all",
                     choices=["main", "psweep", "ablations", "lenet", "all"])
+    ap.add_argument("--grid", default=None, choices=["smoke", "full"],
+                    help="run the heterogeneity scenario matrix instead of "
+                         "the paper suites")
+    ap.add_argument("--backend", default="local",
+                    choices=["local", "mesh", "both"])
+    ap.add_argument("--base-seed", type=int, default=0)
     args = ap.parse_args()
     t0 = time.time()
+    if args.grid:
+        backends = ("local", "mesh") if args.backend == "both" \
+            else (args.backend,)
+        suite_scenario_matrix(args.grid, backends, args.base_seed)
+        print(f"total {time.time() - t0:.0f}s")
+        return
     if args.suite in ("main", "all"):
         suite_main()
     if args.suite in ("psweep", "all"):

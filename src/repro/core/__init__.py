@@ -33,7 +33,13 @@ from repro.core.backend import (
     MeshBackend,
     PlanExecutor,
 )
-from repro.core.engine import EngineConfig, init_round_state, round_core
+from repro.core.engine import (
+    EngineConfig,
+    FedDynConfig,
+    FedProxConfig,
+    init_round_state,
+    round_core,
+)
 from repro.core.plan import (
     Callback,
     Eval,
@@ -53,7 +59,8 @@ __all__ = [
     "backend", "baselines", "engine", "fedap", "momentum", "niid", "plan",
     "pruning", "pruning_lm", "ref_engine", "rounds", "server_update",
     "PlanExecutor", "LocalScanBackend", "MeshBackend",
-    "EngineConfig", "init_round_state", "round_core",
+    "EngineConfig", "FedProxConfig", "FedDynConfig",
+    "init_round_state", "round_core",
     "FederatedTrainer", "FLConfig", "feddumap_config",
     "TrainPlan", "Scan", "Eval", "Prune", "Snapshot", "Callback",
     "RunResult", "fedap_plan",

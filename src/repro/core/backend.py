@@ -105,6 +105,7 @@ def sim_sample_kw(cfg, data) -> dict:
         local_steps=max(1, n_k // cfg.batch_size) * cfg.local_epochs,
         server_batch=cfg.server_batch_size,
         server_tau=max(1, n0 // cfg.server_batch_size) * cfg.server_epochs,
+        dropout_rate=float(getattr(cfg, "dropout_rate", 0.0)),
     )
 
 
@@ -197,12 +198,13 @@ def _match_placement(new: Any, ref: Any) -> Any:
 def masked_round_state(state: dict, masks: Any, filter_masks: Any = None
                        ) -> dict:
     """Inject FedAP keep-masks into a live masked round state: momentum
-    restarts, params are masked, shapes and shardings — and therefore the
-    compiled (or lowered SPMD) program — are untouched.  The canonical
+    (and the FedProx/FedDyn client_state corrections) restarts, params are
+    masked, shapes and shardings — and therefore the compiled (or lowered
+    SPMD) program — are untouched.  The canonical
     implementation behind both the executor's ``Prune(mode="mask")`` apply
     and the pod path's :func:`repro.launch.steps.with_masks`."""
     new = {k: (jax.tree.map(jnp.zeros_like, v)
-               if k in ("server_m", "global_m") else v)
+               if k in ("server_m", "global_m", "client_state") else v)
            for k, v in state.items()}
     new["params"] = _match_placement(
         engine.apply_masks(state["params"], masks), state["params"])
@@ -313,6 +315,11 @@ class _EngineBackend:
     def _kernel_masks(self) -> bool:
         return self.eng.use_masks and self.eng.masked_compute == "kernel"
 
+    @property
+    def _num_clients(self) -> int:
+        """Total client count — sizes the FedDyn per-client state slot."""
+        return int(self.data.client_x.shape[0])
+
     def _place_state(self, state: dict) -> dict:
         """Hook for backends that pin state to explicit shardings."""
         return state
@@ -322,7 +329,8 @@ class _EngineBackend:
                   if self._kernel_masks else None)
         # the scan chunk donates its input state — never the caller's arrays
         state = engine.init_round_state(jax.tree.map(jnp.copy, params),
-                                        self.eng, filter_masks=fmasks)
+                                        self.eng, filter_masks=fmasks,
+                                        num_clients=self._num_clients)
         return self._place_state(state)
 
     def snapshot(self, state: dict):
@@ -338,7 +346,8 @@ class _EngineBackend:
         masks = state.get("masks")
         fmasks = state.get("filter_masks")
         new_state = engine.init_round_state(
-            jax.tree.map(jnp.copy, params), self.eng, filter_masks=fmasks)
+            jax.tree.map(jnp.copy, params), self.eng, filter_masks=fmasks,
+            num_clients=self._num_clients)
         new_state["round"] = round_
         if masks is not None:
             new_state["masks"] = masks
@@ -375,8 +384,12 @@ class _EngineBackend:
         # compacted model has nothing left to skip
         fm = (init_filter_masks(self.model, new_params)
               if self._kernel_masks else None)
+        # FedDyn corrections restart as zeros at the SHRUNK shapes: the old
+        # h lives in the pre-prune coordinate system and cannot be compacted
+        # meaningfully (the correction re-accumulates within a few rounds)
         new_state = engine.init_round_state(new_params, self.eng,
-                                            filter_masks=fm)
+                                            filter_masks=fm,
+                                            num_clients=self._num_clients)
         if compact_existing:
             new_state["server_m"] = pruning.shrink_params(
                 jax.tree.map(jnp.copy, state["server_m"]), spec, kept)
@@ -523,7 +536,8 @@ class MeshBackend(_EngineBackend):
         from repro.sharding.fl_specs import fl_state_specs
 
         return jax.device_put(state, self._named(
-            fl_state_specs(state, None, self.plan)))
+            fl_state_specs(state, None, self.plan,
+                           client_axes=self.plan.client_axes)))
 
     def device_data(self) -> dict:
         # Mesh hashes by devices + axis names, so equal meshes built
@@ -546,7 +560,8 @@ class MeshBackend(_EngineBackend):
             shardings = self._named(fl_sim_batch_specs(
                 self.cfg.clients_per_round, self.plan,
                 server_batch=(self.cfg.server_batch_size
-                              if self.shard_server else None)))
+                              if self.shard_server else None),
+                with_active=bool(self.sample_kw.get("dropout_rate"))))
 
             def constrain(batch):
                 return jax.lax.with_sharding_constraint(batch, shardings)
@@ -679,7 +694,8 @@ class MeshBackend(_EngineBackend):
                 fm = (init_filter_masks(self.model, params)
                       if self._kernel_masks else None)
                 new = engine.init_round_state(params, self.eng,
-                                              filter_masks=fm)
+                                              filter_masks=fm,
+                                              num_clients=self._num_clients)
                 if compact_existing:
                     new["server_m"] = pruning.shrink_params(st["server_m"],
                                                             spec, kept)
@@ -690,7 +706,8 @@ class MeshBackend(_EngineBackend):
                 return new
 
             out_shardings = self._named(fl_state_specs(
-                jax.eval_shape(compact, state), None, self.plan))
+                jax.eval_shape(compact, state), None, self.plan,
+                client_axes=self.plan.client_axes))
             compacted = jax.jit(compact, out_shardings=out_shardings)
             self._shrink_cache[cache_key] = compacted
         return compacted(state), {"params_before": params_before}

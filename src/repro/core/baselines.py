@@ -86,6 +86,22 @@ def fedda_config(**kw) -> FLConfig:
     return FLConfig(**kw)
 
 
+def fedprox_config(**kw) -> FLConfig:
+    """FedProx: plain FedAvg plus a proximal pull toward the round-start
+    global model in every local step (heterogeneity-robust baseline)."""
+    kw.setdefault("use_server_update", False)
+    kw.setdefault("algorithm", "fedprox")
+    return FLConfig(**kw)
+
+
+def feddyn_config(**kw) -> FLConfig:
+    """FedDyn: per-client dynamic regularization — a gradient-correction
+    term carried in the engine's client_state slot across rounds."""
+    kw.setdefault("use_server_update", False)
+    kw.setdefault("algorithm", "feddyn")
+    return FLConfig(**kw)
+
+
 # ---------------------------------------------------------------------------
 # Data-placement baselines — transform the federated dataset
 # ---------------------------------------------------------------------------

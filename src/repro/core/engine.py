@@ -31,10 +31,38 @@ per-shard partial gradients + one all-reduce per step, with this source
 unchanged (locked against the f64 oracle, first-step acc gate included).
 
 Round state is a dict ``{"params", "server_m", ["global_m"], ["masks"],
-"round"}``; ``global_m`` is present only for ``local_momentum ==
-"communicated"`` (FedDA), where the globally-aggregated momentum buffer is
-broadcast back to the devices (2x communication — the baseline FedDUM's
-restart removes).
+["client_state"], "round"}``; ``global_m`` is present only for
+``local_momentum == "communicated"`` (FedDA), where the globally-aggregated
+momentum buffer is broadcast back to the devices (2x communication — the
+baseline FedDUM's restart removes).
+
+``client_state`` (present iff ``cfg.algorithm != "fedavg"``) is the
+per-client persistent slot of the heterogeneity-robust client algorithms —
+the carry structure is keyed by ``cfg.algorithm`` and FIXED from round 0,
+so prune events and chunk caching never re-trace:
+
+  "fedprox"  {"per_client": {}, "shared": {}} — FedProx is stateless (the
+             proximal pull ``mu * (theta - theta_global)`` needs only the
+             broadcast round-start params), but the slot exists so the
+             plumbing (sharding specs, mask scrub, shrink reset) is
+             uniform across algorithms;
+  "feddyn"   {"per_client": {"h": [N, ...] per param},
+              "shared":     {"h": param tree}} — the ALPHA-SCALED FedDyn
+             gradient-correction state.  We store h'_k = alpha * h_k (and
+             the server average likewise), so the local gradient is
+             ``g + alpha (theta - theta_global) - h'_k``, the update is
+             ``h'_k <- h'_k - alpha (theta_k^end - theta_global)`` and the
+             server correction divides back: ``w_half - h'/alpha`` (a
+             static python branch — skipped entirely at alpha == 0, where
+             h' is identically zero and the round is bit-exact FedAvg).
+
+The FedAvg reduction supports a straggler/dropout axis: when the batch
+carries ``"active"`` ([C] 0/1), dropped clients contribute ZERO weight and
+the aggregation runs in DELTA form around the broadcast point
+(``base + sum_k w_k (theta_k - base)``) so an all-dropped round is exactly
+a no-op; dropped clients' FedDyn state is left untouched (their correction
+term is multiplied by ``active``).  Without ``"active"`` the legacy direct
+einsum is used, bit-identical to the pre-dropout engine.
 
 ``masks`` (present iff ``cfg.use_masks``) is a param-structured 0/1 pytree
 that rides in the scan carry: every round the engine multiplies params,
@@ -78,9 +106,39 @@ from repro.core.server_update import FedDUConfig, feddu_apply, tau_eff
 
 
 @dataclasses.dataclass(frozen=True)
+class FedProxConfig:
+    """FedProx's proximal term: local grad = g + mu * (theta - theta_global).
+    mu = 0 is bit-identical to FedAvg (the term multiplies to exact zero)."""
+
+    mu: float = 0.01
+
+    def __post_init__(self):
+        if self.mu < 0:
+            raise ValueError(f"FedProx mu must be >= 0, got {self.mu}")
+
+
+@dataclasses.dataclass(frozen=True)
+class FedDynConfig:
+    """FedDyn's dynamic regularizer (alpha-scaled parameterization — see the
+    module docstring).  alpha = 0 reduces to FedAvg within float identity:
+    the correction state stays exactly zero and the server division is a
+    static python branch that never enters the graph."""
+
+    alpha: float = 0.01
+
+    def __post_init__(self):
+        if self.alpha < 0:
+            raise ValueError(f"FedDyn alpha must be >= 0, got {self.alpha}")
+
+
+ALGORITHMS = ("fedavg", "fedprox", "feddyn")
+
+
+@dataclasses.dataclass(frozen=True)
 class EngineConfig:
     """Algorithm switches of the unified round — covers FedAvg / FedDU /
-    FedDUM / FedDA / FedDUMAP (FedAP prunes BETWEEN rounds; see rounds.py)."""
+    FedDUM / FedDA / FedDUMAP (FedAP prunes BETWEEN rounds; see rounds.py),
+    plus the heterogeneity-robust client algorithms (FedProx / FedDyn)."""
 
     lr: float = 0.1                 # eta: local AND server SGD step size
     lr_decay: float = 1.0           # per-round geometric decay (paper 4.1)
@@ -89,8 +147,11 @@ class EngineConfig:
     server_momentum: bool = False   # FedDUM server SGDM (Formulas 8/12)
     use_masks: bool = False         # static-shape FedAP: masks in the carry
     masked_compute: str = "params"  # params | kernel (see module docstring)
+    algorithm: str = "fedavg"       # fedavg | fedprox | feddyn
     feddu: FedDUConfig = dataclasses.field(default_factory=FedDUConfig)
     feddum: FedDUMConfig = dataclasses.field(default_factory=FedDUMConfig)
+    fedprox: FedProxConfig = dataclasses.field(default_factory=FedProxConfig)
+    feddyn: FedDynConfig = dataclasses.field(default_factory=FedDynConfig)
 
     def __post_init__(self):
         if self.local_momentum not in ("none", "restart", "communicated"):
@@ -99,26 +160,57 @@ class EngineConfig:
             raise ValueError(
                 f"unknown masked_compute: {self.masked_compute!r} "
                 "(expected 'params' or 'kernel')")
+        if self.algorithm not in ALGORITHMS:
+            raise ValueError(f"unknown algorithm: {self.algorithm!r} "
+                             f"(expected one of {ALGORITHMS})")
+
+
+def init_client_state(params: Any, cfg: EngineConfig,
+                      num_clients: int | None) -> dict:
+    """The algorithm-keyed ``client_state`` subtree (see module docstring).
+    Per-client leaves carry a leading [num_clients] dim — the same dim the
+    federated dataset leads with, so ``fl_specs.fl_state_specs`` shards
+    them over the mesh client axes exactly like the data."""
+    if cfg.algorithm == "fedprox":
+        return {"per_client": {}, "shared": {}}
+    if num_clients is None:
+        raise ValueError(
+            "algorithm='feddyn' keeps per-client correction state in the "
+            "scan carry: pass num_clients=N (the TOTAL client count) to "
+            "init_round_state")
+    return {
+        "per_client": {"h": jax.tree.map(
+            lambda p: jnp.zeros((num_clients,) + p.shape, jnp.float32),
+            params)},
+        "shared": {"h": jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)},
+    }
 
 
 def init_round_state(params: Any, cfg: EngineConfig,
-                     filter_masks: Any = None) -> dict:
+                     filter_masks: Any = None,
+                     num_clients: int | None = None) -> dict:
     """{"params", "server_m", ["global_m"], ["masks"], ["filter_masks"],
-    "round"} — the scan carry.  Masks start as all-ones (a bit-exact no-op
-    round) so a masked engine compiles once and the prune event only swaps
-    carry contents.
+    ["client_state"], "round"} — the scan carry.  Masks start as all-ones
+    (a bit-exact no-op round) so a masked engine compiles once and the
+    prune event only swaps carry contents.
 
     ``filter_masks`` (required iff ``cfg.masked_compute == "kernel"``) is
     the per-layer {name: [d] 0/1} dict of ``pruning.filter_masks``; its
     pytree STRUCTURE must already be final (all-ones before the prune
     decision), because the prune event may only swap carry contents, never
     the carry structure, without forcing a re-trace.
+
+    ``num_clients`` (required iff ``cfg.algorithm == "feddyn"``) sizes the
+    per-client leaves of ``client_state``.
     """
     zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
     state = {"params": params, "server_m": zeros,
              "round": jnp.zeros((), jnp.float32)}
     if cfg.local_momentum == "communicated":
         state["global_m"] = jax.tree.map(jnp.copy, zeros)
+    if cfg.algorithm != "fedavg":
+        state["client_state"] = init_client_state(params, cfg, num_clients)
     if cfg.use_masks:
         state["masks"] = jax.tree.map(
             lambda p: jnp.ones(p.shape, jnp.float32), params)
@@ -141,18 +233,40 @@ def apply_masks(tree: Any, masks: Any) -> Any:
 
 
 def local_train(cfg: EngineConfig, grad_fn: Callable, params: Any, m0: Any,
-                batches: Any, lr) -> tuple[Any, Any]:
+                batches: Any, lr, anchor: Any = None,
+                h: Any = None) -> tuple[Any, Any]:
     """E local epochs on ONE client (Formula 11 when momentum is on).
 
     ``batches`` is a pytree with a leading [steps] axis; scanned, so the
     local loop never unrolls into the HLO.
+
+    ``anchor`` is the broadcast round-start global model (the proximal /
+    dynamic-regularizer reference point; required for fedprox/feddyn);
+    ``h`` is this client's alpha-scaled FedDyn correction (required for
+    feddyn), held FIXED over the local epochs.  Both corrections feed the
+    momentum recursion like any other gradient term, so they compose with
+    every local-momentum mode unchanged.
     """
     use_m = cfg.local_momentum != "none"
     beta = cfg.feddum.beta_local
 
+    def corrected(g, p):
+        if cfg.algorithm == "fedprox":
+            mu = cfg.fedprox.mu
+            return jax.tree.map(
+                lambda gi, pi, ai: (gi + mu * (pi - ai)).astype(gi.dtype),
+                g, p, anchor)
+        if cfg.algorithm == "feddyn":
+            alpha = cfg.feddyn.alpha
+            return jax.tree.map(
+                lambda gi, pi, ai, hi:
+                (gi + alpha * (pi - ai) - hi).astype(gi.dtype),
+                g, p, anchor, h)
+        return g
+
     def body(carry, batch):
         p, m = carry
-        g = grad_fn(p, batch)
+        g = corrected(grad_fn(p, batch), p)
         if use_m:
             m = jax.tree.map(
                 lambda mi, gi: beta * mi + (1 - beta) * gi.astype(jnp.float32),
@@ -178,6 +292,11 @@ def round_core(cfg: EngineConfig, grad_fn: Callable, loss_and_acc_fn: Callable,
       d_round   D(Pbar'^t) — non-IID degree of this round's selection
       d_server  D(P0)      — non-IID degree of the server data
       n0        scalar f32 — number of server samples
+      sel       [C] int32, OPTIONAL — the selected clients' global indices
+                (required for algorithm="feddyn": indexes client_state)
+      active    [C] 0/1 f32, OPTIONAL — straggler/dropout mask; when
+                present the FedAvg reduction runs in delta form and
+                dropped clients contribute zero weight (state untouched)
 
     Returns (new_state, {"tau_eff", "server_acc"}).
     """
@@ -214,17 +333,85 @@ def round_core(cfg: EngineConfig, grad_fn: Callable, loss_and_acc_fn: Callable,
         m0 = _m(state["global_m"])             # FedDA: broadcast momentum
     else:
         m0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
-    locals_, local_ms = jax.vmap(
-        lambda b: local_train(cfg, grad_fn, params, m0, b, lr))(batch["client"])
+    if cfg.algorithm == "feddyn":
+        if "sel" not in batch:
+            raise ValueError(
+                "algorithm='feddyn' needs batch['sel'] (the selected "
+                "clients' global indices) to gather per-client state — "
+                "sample_round_batches emits it")
+        h_all = state["client_state"]["per_client"]["h"]
+        h_sel = _m(jax.tree.map(lambda x: x[batch["sel"]], h_all))
+        locals_, local_ms = jax.vmap(
+            lambda b, hk: local_train(cfg, grad_fn, params, m0, b, lr,
+                                      anchor=params, h=hk))(
+                batch["client"], h_sel)
+    elif cfg.algorithm == "fedprox":
+        locals_, local_ms = jax.vmap(
+            lambda b: local_train(cfg, grad_fn, params, m0, b, lr,
+                                  anchor=params))(batch["client"])
+    else:
+        locals_, local_ms = jax.vmap(
+            lambda b: local_train(cfg, grad_fn, params, m0, b,
+                                  lr))(batch["client"])
 
     # (3-4) upload + FedAvg: ONE weighted reduction over the client axis.
-    w = batch["sizes"].astype(jnp.float32)
-    w = w / jnp.sum(w)
-    agg = lambda l: jnp.einsum(
-        "c,c...->...", w, l.astype(jnp.float32)).astype(l.dtype)
-    w_half = jax.tree.map(agg, locals_)
-    new_global_m = (jax.tree.map(agg, local_ms)
-                    if cfg.local_momentum == "communicated" else None)
+    # With a dropout mask the reduction runs in DELTA form around the
+    # broadcast point (an all-dropped round is exactly a no-op); without
+    # one, the legacy direct einsum — bit-identical to the pre-dropout
+    # engine.
+    sizes = batch["sizes"].astype(jnp.float32)
+    active = batch.get("active")
+    if active is not None:
+        act = active.astype(jnp.float32)
+        w = sizes * act
+        w = w / jnp.maximum(jnp.sum(w), 1e-12)
+
+        def agg_tree(trees, base):
+            def one(l, b):
+                d = jnp.einsum("c,c...->...", w, l.astype(jnp.float32)
+                               - b.astype(jnp.float32))
+                return (b.astype(jnp.float32) + d).astype(l.dtype)
+            return jax.tree.map(one, trees, base)
+
+        w_half = agg_tree(locals_, params)
+        new_global_m = (agg_tree(local_ms, m0)
+                        if cfg.local_momentum == "communicated" else None)
+    else:
+        act = jnp.ones_like(sizes)
+        w = sizes / jnp.sum(sizes)
+        agg = lambda l: jnp.einsum(
+            "c,c...->...", w, l.astype(jnp.float32)).astype(l.dtype)
+        w_half = jax.tree.map(agg, locals_)
+        new_global_m = (jax.tree.map(agg, local_ms)
+                        if cfg.local_momentum == "communicated" else None)
+
+    # FedDyn: update the per-client correction of the selected ACTIVE
+    # clients (scatter), the server average, and pull w_half toward the
+    # implicit consensus point — all BEFORE the FedDU server update, which
+    # then trains from the corrected model.
+    new_client_state = state.get("client_state")
+    if cfg.algorithm == "feddyn":
+        alpha = cfg.feddyn.alpha
+        n_total = jax.tree.leaves(h_all)[0].shape[0]
+        bcast = lambda v, leaf: v.reshape(v.shape + (1,) * (leaf.ndim - 1))
+        drift = jax.tree.map(
+            lambda l, p0: l.astype(jnp.float32) - p0.astype(jnp.float32),
+            locals_, params)
+        h_sel_new = jax.tree.map(
+            lambda hk, d: hk - alpha * bcast(act, d) * d, h_sel, drift)
+        h_new = jax.tree.map(
+            lambda ha, hs: ha.at[batch["sel"]].set(hs.astype(ha.dtype)),
+            h_all, h_sel_new)
+        h_shared_new = jax.tree.map(
+            lambda hs, d: hs - (alpha / n_total)
+            * jnp.einsum("c,c...->...", act, d),
+            _m(state["client_state"]["shared"]["h"]), drift)
+        if alpha > 0:  # static branch: at alpha == 0, h is identically zero
+            w_half = jax.tree.map(
+                lambda wh, hs: (wh.astype(jnp.float32) - hs / alpha
+                                ).astype(wh.dtype), w_half, h_shared_new)
+        new_client_state = {"per_client": {"h": _m(h_new)},
+                            "shared": {"h": _m(h_shared_new)}}
 
     # (5a) FedDU dynamic server update (Formulas 4-7).  acc comes from the
     # FIRST server step's own forward — no separate evaluation pass.
@@ -268,6 +455,8 @@ def round_core(cfg: EngineConfig, grad_fn: Callable, loss_and_acc_fn: Callable,
                  "round": state["round"] + 1}
     if cfg.local_momentum == "communicated":
         new_state["global_m"] = _m(new_global_m)
+    if new_client_state is not None:
+        new_state["client_state"] = new_client_state
     if cfg.use_masks:
         new_state["masks"] = masks
         if cfg.masked_compute == "kernel":
@@ -295,17 +484,26 @@ def epoch_indices(key: jax.Array, n: int, count: int) -> jax.Array:
 
 def sample_round_batches(key: jax.Array, data: dict, *, clients_per_round: int,
                          batch_size: int, local_steps: int, server_batch: int,
-                         server_tau: int) -> dict:
+                         server_tau: int, dropout_rate: float = 0.0) -> dict:
     """Builds one round's ``round_core`` batch entirely on device.
 
     data (all jnp, see FederatedData.device_arrays):
       client_x [N, n_k, ...], client_y [N, n_k], sizes [N],
       client_dists [N, classes], p_bar [classes], d_server scalar,
       server_x [n0, ...], server_y [n0].
+
+    ``dropout_rate`` > 0 simulates stragglers: each selected client
+    independently drops with that probability, emitted as the 0/1
+    ``"active"`` mask.  At the default 0.0 the key is split exactly as
+    before (3 ways), so existing runs stay bit-identical; dropout configs
+    split 4 ways and draw their own deterministic chain.
     """
     from repro.core import niid
 
-    k_sel, k_cl, k_srv = jax.random.split(key, 3)
+    if dropout_rate:
+        k_sel, k_cl, k_srv, k_drop = jax.random.split(key, 4)
+    else:
+        k_sel, k_cl, k_srv = jax.random.split(key, 3)
     num_clients, n_k = data["client_y"].shape
     n0 = data["server_y"].shape[0]
 
@@ -325,11 +523,17 @@ def sample_round_batches(key: jax.Array, data: dict, *, clients_per_round: int,
 
     p_round = niid.round_distribution(data["client_dists"], data["sizes"], sel)
     d_round = niid.non_iid_degree(p_round, data["p_bar"])
-    return {
+    batch = {
         "client": (cx, cy),
         "sizes": data["sizes"][sel],
         "server": (sx, sy),
         "d_round": d_round,
         "d_server": data["d_server"],
         "n0": jnp.asarray(n0, jnp.float32),
+        "sel": sel.astype(jnp.int32),
     }
+    if dropout_rate:
+        batch["active"] = (
+            jax.random.uniform(k_drop, (clients_per_round,))
+            >= dropout_rate).astype(jnp.float32)
+    return batch

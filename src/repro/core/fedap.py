@@ -36,11 +36,12 @@ from repro.core.pruning import (
     PruneSpec,
     aggregate_rates,
     expected_rate_from_spectrum,
+    feature_map_ranks,
+    feature_map_scores,
     fisher_spectrum,
     global_threshold,
     lipschitz_estimate,
     per_layer_rates,
-    feature_map_ranks,
     select_filters,
 )
 
@@ -133,10 +134,25 @@ def _draw_participants(data, cfg: FedAPConfig, rng: np.random.Generator
 
 
 def _finish_decision(model, data, cfg: FedAPConfig, params: Any,
-                     rates, sizes, degrees) -> FedAPDecision:
+                     rates, sizes, degrees, *, mesh=None,
+                     client_axes: tuple = ()) -> FedAPDecision:
     """Algorithm 3, steps 2-4 (shared by the host-side and the pod-side
     step-1 implementations): Formula 15 -> global magnitude threshold ->
-    per-layer rates -> HRank selection on server data."""
+    per-layer rates -> HRank selection on server data.
+
+    With ``mesh``/``client_axes`` the HRank probe forward is BATCH-SHARDED
+    over the mesh like the eval pass: the server probe batch is padded to a
+    multiple of the client axes with copies of row 0, each shard computes
+    PER-SAMPLE scores (:func:`pruning.feature_map_scores` — each row
+    depends only on its own activations) summed over its rows, and the
+    padded rows' contribution is subtracted back out exactly with one
+    single-row forward:
+
+        scores_true = (sum_pad - k * scores(row 0)) / n_true
+
+    Conv ranks are integer-valued per sample, so the float32 sums — and
+    therefore the sharded decision — equal the host decision exactly
+    (locked by tests/test_mesh_backend.py's decision-equality tests)."""
     p_star = aggregate_rates(jnp.asarray(rates), jnp.asarray(sizes),
                              jnp.asarray(degrees), cfg.eps)
     # optional compression-budget floor (cfg.min_rate=0 keeps Algorithm 3's
@@ -147,17 +163,51 @@ def _finish_decision(model, data, cfg: FedAPConfig, params: Any,
     thr = global_threshold(params, spec, p_star)
     layer_rates = per_layer_rates(params, spec, thr)
 
-    fmaps = model.feature_maps(params,
-                               jnp.asarray(data.server_x[: cfg.probe_size]))
+    probe_x = np.asarray(data.server_x[: cfg.probe_size])
+    scores_by = _probe_scores(model, params, spec, probe_x,
+                              mesh=mesh, client_axes=client_axes)
     kept = {}
     for layer in spec.layers:
-        scores = feature_map_ranks(fmaps[layer.feature_key or layer.name])
-        kept[layer.name] = select_filters(scores,
+        kept[layer.name] = select_filters(scores_by[layer.name],
                                           float(layer_rates[layer.name]),
                                           align=cfg.align)
     return FedAPDecision(kept=kept, p_star=float(p_star),
                          layer_rates={k: float(v)
                                       for k, v in layer_rates.items()})
+
+
+def _probe_scores(model, params, spec: PruneSpec, probe_x, *, mesh=None,
+                  client_axes: tuple = ()) -> dict[str, np.ndarray]:
+    """{layer name: [d_l] HRank scores} over the server probe batch —
+    host-side single forward, or mesh-sharded (see ``_finish_decision``)."""
+    if mesh is None or not client_axes:
+        fmaps = model.feature_maps(params, jnp.asarray(probe_x))
+        return {l.name: feature_map_ranks(fmaps[l.feature_key or l.name])
+                for l in spec.layers}
+
+    from repro.sharding.fl_specs import client_dim_sharding
+
+    size = 1
+    for a in client_axes:
+        size *= mesh.shape[a]
+    n_true = probe_x.shape[0]
+    n_pad = -(-n_true // size) * size
+
+    def score_sums(x):
+        fmaps = model.feature_maps(params, x)
+        return {l.name: jnp.sum(
+            feature_map_scores(fmaps[l.feature_key or l.name]), axis=0)
+            for l in spec.layers}
+
+    xd = jax.device_put(jnp.asarray(pad_rows_with_first(probe_x, n_pad)),
+                        client_dim_sharding(mesh, client_axes, n_pad))
+    sums = jax.jit(score_sums)(xd)
+    if n_pad == n_true:
+        return {k: np.asarray(v) / n_true for k, v in sums.items()}
+    k_pad = float(n_pad - n_true)
+    s0 = jax.jit(score_sums)(jnp.asarray(probe_x[:1]))
+    return {k: (np.asarray(sums[k]) - k_pad * np.asarray(s0[k])) / n_true
+            for k in sums}
 
 
 def fedap_decision(model, data, cfg: FedAPConfig, params: Any, *,
@@ -273,4 +323,5 @@ def fedap_decision_sharded(model, data, cfg: FedAPConfig, params: Any, *,
             lambda x, y: participant_rate(model, params, init_params, x, y,
                                           cfg)))(xs_d, ys_d)
 
-    return _finish_decision(model, data, cfg, params, rates, sizes, degrees)
+    return _finish_decision(model, data, cfg, params, rates, sizes, degrees,
+                            mesh=mesh, client_axes=client_axes)

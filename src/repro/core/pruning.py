@@ -264,16 +264,30 @@ def feature_map_ranks(fmap: jnp.ndarray) -> jnp.ndarray:
     """
     fmap = fmap.astype(jnp.float32)
     if fmap.ndim >= 4:
+        return jnp.mean(feature_map_scores(fmap), axis=0)
+    # [B, d] (or flatten middle dims): activation energy per neuron.
+    flat = fmap.reshape(fmap.shape[0], -1, fmap.shape[-1])
+    return jnp.mean(jnp.abs(flat), axis=(0, 1))
+
+
+def feature_map_scores(fmap: jnp.ndarray) -> jnp.ndarray:
+    """PER-SAMPLE HRank scores — [B, d_l], each row depending only on that
+    sample's activations, so a batch-sharded forward can sum them and
+    correct padded rows out exactly (the mesh path of
+    ``fedap._finish_decision``).  ``feature_map_ranks`` is the batch mean
+    of these scores: conv ranks per sample are integer-valued (<=
+    min(H, W*)), so float32 sums over any probe batch are exact.
+    """
+    fmap = fmap.astype(jnp.float32)
+    if fmap.ndim >= 4:
         b = fmap.shape[0]
         d = fmap.shape[-1]
         maps = jnp.moveaxis(fmap, -1, 1).reshape(b, d, fmap.shape[1], -1)  # [B,d,H,W*]
         s = jnp.linalg.svd(maps, compute_uv=False)                          # [B,d,min]
         tol = jnp.max(s, axis=-1, keepdims=True) * max(maps.shape[-2:]) * 1e-6
-        ranks = jnp.sum(s > tol, axis=-1).astype(jnp.float32)               # [B,d]
-        return jnp.mean(ranks, axis=0)
-    # [B, d] (or flatten middle dims): activation energy per neuron.
+        return jnp.sum(s > tol, axis=-1).astype(jnp.float32)                # [B,d]
     flat = fmap.reshape(fmap.shape[0], -1, fmap.shape[-1])
-    return jnp.mean(jnp.abs(flat), axis=(0, 1))
+    return jnp.mean(jnp.abs(flat), axis=1)
 
 
 def select_filters(

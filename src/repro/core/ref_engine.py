@@ -17,7 +17,20 @@ mirrored here:
     the descent-consistent sign — see repro.core.momentum);
   * the static-shape masked mode (``cfg.use_masks``): params, gradients
     and momentum buffers are multiplied by the 0/1 keep-masks in
-    ``state["masks"]`` every round, exactly where the engine does.
+    ``state["masks"]`` every round, exactly where the engine does;
+  * the client-state algorithms: FedProx's proximal pull
+    ``g + mu * (theta - anchor)`` inside each local step, and FedDyn's
+    per-client correction in the engine's alpha-scaled parameterization
+    (``h`` stores ``alpha * h_paper``): local gradient
+    ``g + alpha * (theta - anchor) - h_k``, per-client update
+    ``h_k <- h_k - alpha * act_k * (theta_k^end - anchor)``, shared
+    ``h <- h - (alpha / N) * sum_k act_k * drift_k``, and server
+    correction ``w_half <- w_half - h / alpha`` (skipped entirely when
+    ``alpha == 0``, where ``h`` is identically zero);
+  * straggler/dropout: when ``batch["active"]`` is present, aggregation
+    runs in delta form ``base + sum w_k (local_k - base)`` with
+    ``w = sizes * active / max(sum, 1e-12)``, so an all-dropped round is
+    exactly a no-op and dropped clients' state is untouched.
 
 The Formula-7 accuracy gate matches the engine's fused semantics: the
 accuracy of w^{t-1/2} evaluated on the FIRST server batch.
@@ -69,13 +82,27 @@ def ref_tau_eff(feddu, *, acc: float, round_idx: float, n0: float,
 
 
 def ref_local_train(cfg: EngineConfig, grad_fn: Callable, params: Any,
-                    m0: Any, batches: list, lr: float):
-    """E local epochs on one client — Formula 11 when momentum is on."""
+                    m0: Any, batches: list, lr: float,
+                    anchor: Any = None, h: Any = None):
+    """E local epochs on one client — Formula 11 when momentum is on.
+
+    ``anchor`` is the round-start global model for the FedProx/FedDyn
+    correction terms; ``h`` is this client's (alpha-scaled) FedDyn
+    correction.  Both are ignored under plain FedAvg.
+    """
     use_m = cfg.local_momentum != "none"
     beta = cfg.feddum.beta_local
     p, m = params, m0
     for b in batches:
         g = grad_fn(p, b)
+        if cfg.algorithm == "fedprox":
+            mu = cfg.fedprox.mu
+            g = jax.tree.map(lambda gi, pi, ai: gi + mu * (pi - ai),
+                             g, p, anchor)
+        elif cfg.algorithm == "feddyn":
+            alpha = cfg.feddyn.alpha
+            g = jax.tree.map(lambda gi, pi, ai, hi: gi + alpha * (pi - ai) - hi,
+                             g, p, anchor, h)
         if use_m:
             m = jax.tree.map(lambda mi, gi: beta * mi + (1 - beta) * gi, m, g)
             upd = m
@@ -113,23 +140,83 @@ def ref_round(cfg: EngineConfig, grad_fn: Callable, loss_and_acc_fn: Callable,
         m0 = _m(tree_f64(state["global_m"]))
     else:
         m0 = _zeros_like(params)
+    anchor = params if cfg.algorithm in ("fedprox", "feddyn") else None
+    if cfg.algorithm == "feddyn":
+        if "sel" not in batch:
+            raise ValueError("feddyn needs batch['sel'] to index client state")
+        sel = np.asarray(batch["sel"], np.int64)
+        h_all = tree_f64(state["client_state"]["per_client"]["h"])
+        h_sels = [_m(jax.tree.map(lambda x: x[sel[c]], h_all))
+                  for c in range(num_clients)]
+    else:
+        h_sels = [None] * num_clients
     locals_, local_ms = [], []
     for c in range(num_clients):
         bs = [_index(batch["client"], c, s) for s in range(steps)]
-        p, m = ref_local_train(cfg, grad_fn, params, m0, bs, lr)
+        p, m = ref_local_train(cfg, grad_fn, params, m0, bs, lr,
+                               anchor=anchor, h=h_sels[c])
         locals_.append(p)
         local_ms.append(m)
 
-    # (3-4) FedAvg aggregation with n_k/n' weights
-    w = sizes / sizes.sum()
+    # (3-4) FedAvg aggregation with n_k/n' weights; when the batch carries
+    # an "active" vector (straggler/dropout), run in delta form so dropped
+    # clients contribute exactly zero and an all-dropped round is a no-op.
+    active = batch.get("active")
+    if active is not None:
+        act = np.asarray(active, np.float64)
+        w = sizes * act
+        w = w / max(w.sum(), 1e-12)
 
-    def weighted_mean(trees):
-        return jax.tree.map(
-            lambda *leaves: sum(wi * li for wi, li in zip(w, leaves)), *trees)
+        def weighted_mean(trees, base):
+            return jax.tree.map(
+                lambda b_, *leaves: b_ + sum(wi * (li - b_)
+                                             for wi, li in zip(w, leaves)),
+                base, *trees)
 
-    w_half = weighted_mean(locals_)
-    new_global_m = (weighted_mean(local_ms)
-                    if cfg.local_momentum == "communicated" else None)
+        w_half = weighted_mean(locals_, params)
+        new_global_m = (weighted_mean(local_ms, m0)
+                        if cfg.local_momentum == "communicated" else None)
+    else:
+        act = np.ones_like(sizes)
+        w = sizes / sizes.sum()
+
+        def weighted_mean(trees):
+            return jax.tree.map(
+                lambda *leaves: sum(wi * li for wi, li in zip(w, leaves)),
+                *trees)
+
+        w_half = weighted_mean(locals_)
+        new_global_m = (weighted_mean(local_ms)
+                        if cfg.local_momentum == "communicated" else None)
+
+    # (4b) FedDyn correction updates + server-side correction of w_half
+    new_client_state = state.get("client_state")
+    if cfg.algorithm == "feddyn":
+        alpha = cfg.feddyn.alpha
+        n_total = jax.tree.leaves(h_all)[0].shape[0]
+        drifts = [jax.tree.map(lambda l, p0: l - p0, locals_[c], params)
+                  for c in range(num_clients)]
+
+        def scatter(ha, *rows):
+            out = ha.copy()
+            for c in range(num_clients):
+                out[sel[c]] = rows[c]
+            return out
+
+        h_sel_new = [jax.tree.map(lambda hk, d, a=act[c]: hk - alpha * a * d,
+                                  h_sels[c], drifts[c])
+                     for c in range(num_clients)]
+        h_new = jax.tree.map(scatter, h_all, *h_sel_new)
+        h_shared = _m(tree_f64(state["client_state"]["shared"]["h"]))
+        h_shared_new = jax.tree.map(
+            lambda hs, *ds: hs - (alpha / n_total) * sum(
+                a * d for a, d in zip(act, ds)),
+            h_shared, *drifts)
+        if alpha > 0:  # static branch: at alpha == 0, h is identically zero
+            w_half = jax.tree.map(lambda wh, hs: wh - hs / alpha,
+                                  w_half, h_shared_new)
+        new_client_state = {"per_client": {"h": _m(h_new)},
+                            "shared": {"h": _m(h_shared_new)}}
 
     # (5a) FedDU: tau server SGD steps; g0_bar is the literal Formula-6
     # average of the per-step gradients; acc gate from the first forward.
@@ -174,10 +261,13 @@ def ref_round(cfg: EngineConfig, grad_fn: Callable, loss_and_acc_fn: Callable,
         new_state["global_m"] = _m(new_global_m)
     if cfg.use_masks:
         new_state["masks"] = masks
+    if new_client_state is not None:
+        new_state["client_state"] = new_client_state
     return new_state, {"tau_eff": t_eff, "server_acc": acc}
 
 
-def ref_init_state(params: Any, cfg: EngineConfig, masks: Any = None) -> dict:
+def ref_init_state(params: Any, cfg: EngineConfig, masks: Any = None,
+                   num_clients: int | None = None) -> dict:
     state = {"params": tree_f64(params), "server_m": _zeros_like(params),
              "round": 0.0}
     if cfg.local_momentum == "communicated":
@@ -186,6 +276,17 @@ def ref_init_state(params: Any, cfg: EngineConfig, masks: Any = None) -> dict:
         state["masks"] = (tree_f64(masks) if masks is not None else
                           jax.tree.map(lambda x: np.ones_like(
                               np.asarray(x, np.float64)), params))
+    if cfg.algorithm == "fedprox":
+        state["client_state"] = {"per_client": {}, "shared": {}}
+    elif cfg.algorithm == "feddyn":
+        if num_clients is None:
+            raise ValueError("feddyn needs num_clients for its per-client h")
+        state["client_state"] = {
+            "per_client": {"h": jax.tree.map(
+                lambda x: np.zeros((num_clients,) + np.shape(x), np.float64),
+                params)},
+            "shared": {"h": _zeros_like(params)},
+        }
     return state
 
 

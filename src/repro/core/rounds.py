@@ -100,7 +100,12 @@ from repro.core.backend import (  # noqa: F401  (public re-exports)
     compiled_engine,
     sim_sample_kw,
 )
-from repro.core.engine import EngineConfig
+from repro.core.engine import (
+    ALGORITHMS,
+    EngineConfig,
+    FedDynConfig,
+    FedProxConfig,
+)
 from repro.core.momentum import FedDUMConfig
 from repro.core.plan import RunResult, TrainPlan
 from repro.core.pruning import FedAPConfig
@@ -120,6 +125,14 @@ class FLConfig:
     use_server_update: bool = True       # FedDU
     local_momentum: str = "none"         # none | restart | communicated
     server_momentum: bool = False
+    # Client-state algorithm: "fedavg" (stateless), "fedprox" (proximal
+    # pull toward the round-start model), "feddyn" (per-client gradient
+    # correction carried in the scan's client_state slot).
+    algorithm: str = "fedavg"
+    # Straggler/dropout simulation: each selected client independently drops
+    # this round with probability dropout_rate; dropped clients contribute
+    # zero aggregation weight and their client state is untouched.
+    dropout_rate: float = 0.0
     # Masked-mode compute path: "params" zeroes the parameter tree only
     # (full-density matmuls); "kernel" threads filter masks into the model
     # so masked dense layers run the differentiable Pallas masked_matmul
@@ -135,6 +148,8 @@ class FLConfig:
     feddu: FedDUConfig = dataclasses.field(default_factory=FedDUConfig)
     feddum: FedDUMConfig = dataclasses.field(default_factory=FedDUMConfig)
     fedap: FedAPConfig = dataclasses.field(default_factory=FedAPConfig)
+    fedprox: FedProxConfig = dataclasses.field(default_factory=FedProxConfig)
+    feddyn: FedDynConfig = dataclasses.field(default_factory=FedDynConfig)
 
     def __post_init__(self):
         # Mirror EngineConfig.__post_init__: a bad switch must fail HERE,
@@ -160,6 +175,12 @@ class FLConfig:
             raise ValueError(f"lr must be > 0, got {self.lr}")
         if self.lr_decay <= 0:
             raise ValueError(f"lr_decay must be > 0, got {self.lr_decay}")
+        if self.algorithm not in ALGORITHMS:
+            raise ValueError(f"unknown algorithm: {self.algorithm!r} "
+                             f"(expected one of {ALGORITHMS})")
+        if not 0.0 <= self.dropout_rate < 1.0:
+            raise ValueError(f"dropout_rate must be in [0, 1), got "
+                             f"{self.dropout_rate}")
 
 
 def feddumap_config(**kw) -> FLConfig:
@@ -179,7 +200,9 @@ def engine_config(cfg: FLConfig) -> EngineConfig:
         local_momentum=cfg.local_momentum,
         server_momentum=cfg.server_momentum,
         masked_compute=cfg.masked_compute,
-        feddu=cfg.feddu, feddum=cfg.feddum)
+        algorithm=cfg.algorithm,
+        feddu=cfg.feddu, feddum=cfg.feddum,
+        fedprox=cfg.fedprox, feddyn=cfg.feddyn)
 
 
 _BACKENDS = {"local": LocalScanBackend, "mesh": MeshBackend}

@@ -56,7 +56,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import InputShape, ModelConfig
-from repro.core.engine import EngineConfig, init_round_state, round_core
+from repro.core.engine import (
+    EngineConfig,
+    FedDynConfig,
+    FedProxConfig,
+    init_round_state,
+    round_core,
+)
 from repro.core.momentum import FedDUMConfig
 from repro.core.server_update import FedDUConfig
 from repro.models.api import build_model, decode_cache_len, input_specs
@@ -84,6 +90,12 @@ class FLRunConfig:
     # Pallas masked_matmul; requires a masks-aware model
     # (model.loss/apply accept masks=).  "params" masks the tree only.
     masked_compute: str = "params"
+    # Client-state algorithm (fedavg | fedprox | feddyn) — the pod round
+    # state grows the same client_state slot as the simulation path
+    # (fl_specs.fl_state_specs shards its per-client leaves).
+    algorithm: str = "fedavg"
+    fedprox: FedProxConfig = dataclasses.field(default_factory=FedProxConfig)
+    feddyn: FedDynConfig = dataclasses.field(default_factory=FedDynConfig)
 
 
 def token_accuracy(model, params, batch) -> jnp.ndarray:
@@ -132,6 +144,9 @@ def engine_config(run: FLRunConfig) -> EngineConfig:
         server_momentum=run.use_momentum,
         use_masks=run.use_masks,
         masked_compute=run.masked_compute,
+        algorithm=run.algorithm,
+        fedprox=run.fedprox,
+        feddyn=run.feddyn,
         feddu=run.feddu,
         feddum=FedDUMConfig(beta_server=run.beta_server,
                             beta_local=run.beta_local,
@@ -171,7 +186,8 @@ def make_fl_train_step(cfg: ModelConfig, run: FLRunConfig, num_clients: int,
 
     def init_state(rng, filter_masks=None):
         return init_round_state(model.init(rng), eng,
-                                filter_masks=filter_masks)
+                                filter_masks=filter_masks,
+                                num_clients=num_clients)
 
     def train_step(state, batch):
         new_state, metrics = round_core(eng, grad_fn, la_fn, state, batch)
@@ -278,7 +294,7 @@ def fl_batch_specs(cfg: ModelConfig, shape: InputShape, num_clients: int,
         (lambda v: jnp.asarray(v, jnp.float32))
     sizes = (jax.ShapeDtypeStruct((c,), jnp.float32) if abstract
              else jnp.ones((c,), jnp.float32))
-    return {
+    batch = {
         "client": client,
         "server": server,
         "sizes": sizes,
@@ -286,3 +302,9 @@ def fl_batch_specs(cfg: ModelConfig, shape: InputShape, num_clients: int,
         "d_server": scalar(0.01),
         "n0": scalar(2048.0),
     }
+    if run.algorithm == "feddyn":
+        # selected-client ids indexing the client_state's per-client slot;
+        # the pod shape exercises full participation (client k <- slot k)
+        batch["sel"] = (jax.ShapeDtypeStruct((c,), jnp.int32) if abstract
+                        else jnp.arange(c, dtype=jnp.int32))
+    return batch

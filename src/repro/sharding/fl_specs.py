@@ -16,25 +16,51 @@ def _axis(axes: tuple):
     return axes if len(axes) > 1 else axes[0]
 
 
-def fl_state_specs(state_shapes: Any, model_axes: Any, plan: MeshPlan) -> Any:
+def fl_state_specs(state_shapes: Any, model_axes: Any, plan: MeshPlan, *,
+                   client_axes: tuple = ()) -> Any:
     """Engine round state = {params, server_m, [global_m], [masks],
-    [filter_masks], round}: every momentum buffer — and the FedAP
-    keep-masks of the static-shape masked mode (``EngineConfig.use_masks``)
-    — mirrors the params' model sharding (TP/FSDP, replicated over client
-    axes); the round counter is replicated.  The kernel-mode
-    ``filter_masks`` slot (per-layer [d_l] vectors, a few KB) is fully
-    replicated: every shard needs the whole block mask to decide which MXU
-    blocks to skip.  Key-generic so the communicated-momentum (FedDA)
-    state and the mask slots shard without special-casing.
+    [filter_masks], [client_state], round}: every momentum buffer — and the
+    FedAP keep-masks of the static-shape masked mode
+    (``EngineConfig.use_masks``) — mirrors the params' model sharding
+    (TP/FSDP, replicated over client axes); the round counter is
+    replicated.  The kernel-mode ``filter_masks`` slot (per-layer [d_l]
+    vectors, a few KB) is fully replicated: every shard needs the whole
+    block mask to decide which MXU blocks to skip.  Key-generic so the
+    communicated-momentum (FedDA) state and the mask slots shard without
+    special-casing.
+
+    The ``client_state`` slot (FedProx/FedDyn) splits in two: leaves under
+    ``per_client`` carry a LEADING num-clients dim and shard over
+    ``client_axes`` exactly like the federated dataset (replicated when
+    the dim does not divide the axis size — the production-safe fallback
+    used throughout this module); leaves under ``shared`` are
+    param-structured and follow the model placement.
 
     ``model_axes=None`` (the MeshBackend's simulation models, which publish
     no logical-axis tree) replicates every param-structured slot: on the
     simulation path the CLIENT axis of the batch is what shards over the
     mesh, and the global model rides replicated."""
+    ca = _axis(client_axes)
+    csize = plan.axis_size(client_axes) if client_axes else 1
+
+    def per_client_spec(leaf):
+        dim = leaf.shape[0] if len(leaf.shape) else 0
+        if client_axes and dim % csize == 0:
+            return P(ca)
+        return P()
+
+    def shared_spec(v):
+        if model_axes is None:
+            return jax.tree.map(lambda _: P(), v)
+        return param_specs(v, model_axes, plan)
 
     def one(k, v):
         if k == "round":
             return P()
+        if k == "client_state":
+            return {"per_client": jax.tree.map(per_client_spec,
+                                               v["per_client"]),
+                    "shared": shared_spec(v["shared"])}
         if k == "filter_masks" or model_axes is None:
             return jax.tree.map(lambda _: P(), v)
         return param_specs(v, model_axes, plan)
@@ -60,7 +86,8 @@ def client_dim_sharding(mesh, client_axes: tuple, leading_dim: int):
 
 
 def fl_sim_batch_specs(clients_per_round: int, plan: MeshPlan, *,
-                       server_batch: int | None = None) -> dict:
+                       server_batch: int | None = None,
+                       with_active: bool = False) -> dict:
     """PartitionSpecs for the SIMULATION path's round batch — the pytree
     built on device by ``engine.sample_round_batches``:
 
@@ -87,14 +114,22 @@ def fl_sim_batch_specs(clients_per_round: int, plan: MeshPlan, *,
     sok = bool(plan.client_axes) and server_batch is not None \
         and server_batch % size == 0
     sspec = P(None, ca) if sok else P()
-    return {
+    specs = {
         "client": (cspec, cspec),
         "sizes": cspec,
         "server": (sspec, sspec),
         "d_round": P(),
         "d_server": P(),
         "n0": P(),
+        # "sel" ([C] int32 selected-client ids) stays replicated: it indexes
+        # the client_state's per-client leaves, whose gather/scatter GSPMD
+        # resolves against their own (possibly client-sharded) placement.
+        "sel": P(),
     }
+    if with_active:
+        # dropout indicator [C], alongside the client dim like "sizes"
+        specs["active"] = cspec
+    return specs
 
 
 def fl_batch_partition_specs(batch_shapes: Any, plan: MeshPlan) -> Any:
@@ -130,7 +165,7 @@ def fl_batch_partition_specs(batch_shapes: Any, plan: MeshPlan) -> Any:
             parts[bdim] = sa
         return P(*parts)
 
-    return {
+    out = {
         "client": {k: one_client(v, 3 if k == "positions" else 2)
                    for k, v in batch_shapes["client"].items()},
         "server": {k: one_server(v, 2 if k == "positions" else 1)
@@ -140,6 +175,10 @@ def fl_batch_partition_specs(batch_shapes: Any, plan: MeshPlan) -> Any:
         "d_server": P(),
         "n0": P(),
     }
+    for k in ("sel", "active"):
+        if k in batch_shapes:
+            out[k] = P()
+    return out
 
 
 def serve_batch_specs(batch_shapes: dict, plan: MeshPlan) -> dict:

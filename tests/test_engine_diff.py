@@ -1,19 +1,28 @@
 """Differential tests: the scan-compiled engine vs. the pure-NumPy oracle.
 
-Every algorithm mode (FedAvg / FedDU / FedDUM / FedDA / FedDUMAP wiring,
-restart vs. communicated momentum, server momentum on/off) is run for
-several rounds through BOTH
+The core lock is ONE table-driven parity fixture
+(``test_parity_table_local_mesh_oracle``): every (client algorithm,
+momentum mode, use_masks) combination — FedAvg / FedProx / FedDyn crossed
+with the FedDU / FedDUM / FedDA wirings, plus dropout rows — runs for
+several rounds through THREE legs
 
   * `repro.core.engine.round_core` under `jax.lax.scan` + `jit` (exactly
-    how the simulation driver and the pod path execute it), and
+    how the simulation driver and the pod path execute it),
+  * the SAME scan with the round state placed on a host mesh through
+    ``fl_specs.fl_state_specs`` NamedShardings (the MeshBackend's state
+    placement, client_state per-client leaves included), and
   * `repro.core.ref_engine.ref_round` — naive float64 NumPy loops,
 
-on identical explicit batches, and must agree to <= 1e-5 in float32.
+on identical explicit batches, and every leg must agree with the oracle to
+<= 1e-5 PER ROUND through one shared assertion helper — a new engine mode
+gets locked by adding one table row.
 
 A second suite locks the two public wirings to each other: the pod path's
 ``make_fl_train_step`` (FLRunConfig) and the simulation trainer's
 ``round_step`` (FLConfig) must produce IDENTICAL params from the same
-params/batches on a toy model.
+params/batches on a toy model.  Limit tests pin the client algorithms'
+exact reductions: FedProx mu=0 is BIT-identical to FedAvg, FedDyn alpha=0
+matches FedAvg <= 1e-6.
 """
 import dataclasses
 
@@ -83,45 +92,156 @@ MODES = {
                   server_momentum=True),
 }
 
+# ---------------------------------------------------------------------------
+# THE parity table: every (client algorithm, momentum mode, use_masks)
+# combination + dropout rows, each run local-scan vs mesh-placed-scan vs
+# f64 oracle through ONE assertion helper.  A new engine mode gets locked
+# by adding one row here.
+# ---------------------------------------------------------------------------
 
-@pytest.mark.parametrize("mode", list(MODES))
-def test_engine_matches_numpy_oracle(world, mode):
-    model, params, rounds = world
-    cfg = EngineConfig(lr=0.08, lr_decay=0.97, **MODES[mode])
+N_TOTAL = 6          # total clients (sizes the FedDyn per-client state)
+SELS = np.asarray([[4, 1, 3], [0, 2, 5], [5, 0, 2]], np.int32)
+# dropout rows: round 1 drops EVERY client — the aggregation must be an
+# exact no-op (delta form), with client state untouched
+ACTIVES = np.asarray([[1, 0, 1], [0, 0, 0], [1, 1, 1]], np.float32)
 
-    # engine path: ONE compiled lax.scan over the stacked round batches —
-    # the exact execution shape of the simulation driver
-    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *rounds)
-    state0 = engine.init_round_state(jax.tree.map(jnp.asarray, params), cfg)
+ALGOS = {
+    "fedavg": {},
+    "fedprox": dict(algorithm="fedprox",
+                    fedprox=engine.FedProxConfig(mu=0.05)),
+    "feddyn": dict(algorithm="feddyn",
+                   feddyn=engine.FedDynConfig(alpha=0.05)),
+}
+
+PARITY_TABLE = [
+    (algo, mode, use_masks, False)
+    for algo in ALGOS
+    for mode in MODES
+    for use_masks in (False, True)
+] + [
+    ("fedavg", "feddum", False, True),
+    ("fedprox", "feddum", False, True),
+    ("feddyn", "feddum", False, True),
+]
+
+
+def _row_id(row):
+    algo, mode, use_masks, dropout = row
+    return (f"{algo}-{mode}" + ("-masked" if use_masks else "")
+            + ("-dropout" if dropout else ""))
+
+
+def _parity_masks():
+    rng = np.random.default_rng(3)
+    return {"w": (rng.random((DIM, CLASSES)) > 0.4).astype(np.float32),
+            "b": (rng.random((CLASSES,)) > 0.4).astype(np.float32)}
+
+
+def _parity_rounds(rounds, dropout):
+    out = []
+    for r, b in enumerate(rounds):
+        b = dict(b)
+        b["sel"] = SELS[r]
+        if dropout:
+            b["active"] = ACTIVES[r]
+        out.append(b)
+    return out
+
+
+def _engine_history(cfg, state0, rounds, *, mesh=False):
+    """Run the scan-compiled engine and return per-round
+    (params, server_m, tau_eff) histories.  ``mesh=True`` places the round
+    state through ``fl_state_specs`` NamedShardings on a host mesh first —
+    the MeshBackend's state placement, client_state included."""
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs),
+                           *[jax.tree.map(jnp.asarray, b) for b in rounds])
+    state0 = jax.tree.map(jnp.asarray, state0)
+    if mesh:
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        from repro.launch.mesh import make_host_mesh
+        from repro.sharding.fl_specs import fl_state_specs
+        from repro.sharding.specs import MeshPlan
+
+        m = make_host_mesh(model=1)
+        plan = MeshPlan(mesh=m, multi_pod=False, client_axes=("data",),
+                        fsdp_axes=(), tp_axes=(), batch_axes=(),
+                        num_clients=m.shape["data"])
+        specs = fl_state_specs(state0, None, plan,
+                               client_axes=plan.client_axes)
+        state0 = jax.device_put(state0, jax.tree.map(
+            lambda s: NamedSharding(m, s), specs,
+            is_leaf=lambda x: isinstance(x, P)))
+        stacked = jax.device_put(stacked, NamedSharding(m, P()))
 
     @jax.jit
     def run(state, batches):
         def body(st, b):
             st, metrics = engine.round_core(cfg, jnp_grad, jnp_loss_and_acc,
                                             st, b)
-            return st, metrics["tau_eff"]
+            return st, (metrics["tau_eff"], st["params"], st["server_m"])
         return jax.lax.scan(body, state, batches)
 
-    state, taus = run(state0, stacked)
+    _, (taus, phist, mhist) = run(state0, stacked)
+    return phist, mhist, taus
 
-    # oracle path: naive float64 NumPy loops
-    ref_state = ref_engine.ref_init_state(params, cfg)
-    ref_taus = []
-    for b in rounds:
-        ref_state, metrics = ref_engine.ref_round(
-            cfg, model.np_grad, model.np_loss_and_acc, ref_state, b)
-        ref_taus.append(metrics["tau_eff"])
 
-    for leaf, ref_leaf in zip(jax.tree.leaves(state["params"]),
-                              jax.tree.leaves(ref_state["params"])):
-        np.testing.assert_allclose(np.asarray(leaf), ref_leaf, atol=1e-5,
-                                   err_msg=f"params diverged in mode={mode}")
+def _assert_leg_matches_oracle(leg, phist, mhist, taus, ref_params, ref_ms,
+                               ref_taus, row_id, masks=None):
+    """THE shared assertion: each leg agrees with the f64 oracle <= 1e-5
+    on params, server momentum and tau_eff — PER ROUND."""
+    for r in range(ROUNDS):
+        for leaf, ref_leaf in zip(jax.tree.leaves(phist),
+                                  jax.tree.leaves(ref_params[r])):
+            np.testing.assert_allclose(
+                np.asarray(leaf[r]), ref_leaf, atol=1e-5,
+                err_msg=f"[{row_id}] {leg} params diverged at round {r}")
+        for leaf, ref_leaf in zip(jax.tree.leaves(mhist),
+                                  jax.tree.leaves(ref_ms[r])):
+            np.testing.assert_allclose(
+                np.asarray(leaf[r]), ref_leaf, atol=1e-5,
+                err_msg=f"[{row_id}] {leg} server_m diverged at round {r}")
     np.testing.assert_allclose(np.asarray(taus), np.asarray(ref_taus),
-                               atol=1e-5, err_msg=f"tau_eff in mode={mode}")
-    # momentum state must track too, not just the params
-    for leaf, ref_leaf in zip(jax.tree.leaves(state["server_m"]),
-                              jax.tree.leaves(ref_state["server_m"])):
-        np.testing.assert_allclose(np.asarray(leaf), ref_leaf, atol=1e-5)
+                               atol=1e-5,
+                               err_msg=f"[{row_id}] {leg} tau_eff")
+    if masks is not None:
+        # pruned coordinates stay exactly zero on every leg
+        for leaf, m in zip(jax.tree.leaves(phist), jax.tree.leaves(masks)):
+            np.testing.assert_array_equal(np.asarray(leaf[-1])[m == 0], 0.0)
+
+
+@pytest.mark.parametrize("algo,mode,use_masks,dropout", PARITY_TABLE,
+                         ids=[_row_id(r) for r in PARITY_TABLE])
+def test_parity_table_local_mesh_oracle(world, algo, mode, use_masks,
+                                        dropout):
+    model, params, rounds = world
+    cfg = EngineConfig(lr=0.08, lr_decay=0.97, use_masks=use_masks,
+                       **ALGOS[algo], **MODES[mode])
+    rounds = _parity_rounds(rounds, dropout)
+    masks = _parity_masks() if use_masks else None
+
+    state0 = engine.init_round_state(jax.tree.map(jnp.asarray, params), cfg,
+                                     num_clients=N_TOTAL)
+    if masks is not None:
+        state0["masks"] = jax.tree.map(jnp.asarray, masks)
+
+    # oracle leg: naive float64 NumPy loops, per-round history
+    ref = ref_engine.ref_init_state(params, cfg, masks=masks,
+                                    num_clients=N_TOTAL)
+    ref_params, ref_ms, ref_taus = [], [], []
+    for b in rounds:
+        ref, met = ref_engine.ref_round(cfg, model.np_grad,
+                                        model.np_loss_and_acc, ref, b)
+        ref_params.append(ref["params"])
+        ref_ms.append(ref["server_m"])
+        ref_taus.append(met["tau_eff"])
+
+    row_id = _row_id((algo, mode, use_masks, dropout))
+    for leg, on_mesh in (("local", False), ("mesh", True)):
+        phist, mhist, taus = _engine_history(cfg, state0, rounds,
+                                             mesh=on_mesh)
+        _assert_leg_matches_oracle(leg, phist, mhist, taus, ref_params,
+                                   ref_ms, ref_taus, row_id, masks=masks)
 
 
 def _scan_engine(cfg, state0, rounds):
@@ -138,40 +258,48 @@ def _scan_engine(cfg, state0, rounds):
     return run(state0, stacked)
 
 
-def test_engine_matches_numpy_oracle_masked(world):
-    """The static-shape masked mode (use_masks): params/grads/momentum are
-    multiplied by the carry masks every round — engine and oracle must
-    agree on arbitrary 0/1 masks."""
-    model, params, rounds = world
-    cfg = EngineConfig(lr=0.08, lr_decay=0.97, use_server_update=True,
-                       local_momentum="restart", server_momentum=True,
-                       use_masks=True)
-    rng = np.random.default_rng(3)
-    masks = {"w": (rng.random((DIM, CLASSES)) > 0.4).astype(np.float32),
-             "b": (rng.random((CLASSES,)) > 0.4).astype(np.float32)}
+def test_fedprox_mu0_bit_identical_to_fedavg(world):
+    """mu = 0 multiplies the proximal term to EXACT zero: the FedProx
+    engine must be bit-identical to FedAvg on the same batches."""
+    _, params, rounds = world
+    base = dict(lr=0.08, lr_decay=0.97, **MODES["feddum"])
+    cfg_avg = EngineConfig(**base)
+    cfg_px = EngineConfig(algorithm="fedprox",
+                          fedprox=engine.FedProxConfig(mu=0.0), **base)
+    rounds = _parity_rounds(rounds, False)
+    s_avg, t_avg = _scan_engine(
+        cfg_avg, engine.init_round_state(jax.tree.map(jnp.asarray, params),
+                                         cfg_avg), rounds)
+    s_px, t_px = _scan_engine(
+        cfg_px, engine.init_round_state(jax.tree.map(jnp.asarray, params),
+                                        cfg_px, num_clients=N_TOTAL), rounds)
+    for a, b in zip(jax.tree.leaves(s_avg["params"]),
+                    jax.tree.leaves(s_px["params"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(t_avg), np.asarray(t_px))
 
-    state0 = engine.init_round_state(jax.tree.map(jnp.asarray, params), cfg)
-    state0["masks"] = jax.tree.map(jnp.asarray, masks)
-    state, taus = _scan_engine(cfg, state0, rounds)
 
-    ref_state = ref_engine.ref_init_state(params, cfg, masks=masks)
-    ref_taus = []
-    for b in rounds:
-        ref_state, metrics = ref_engine.ref_round(
-            cfg, model.np_grad, model.np_loss_and_acc, ref_state, b)
-        ref_taus.append(metrics["tau_eff"])
-
-    for leaf, ref_leaf, m in zip(jax.tree.leaves(state["params"]),
-                                 jax.tree.leaves(ref_state["params"]),
-                                 jax.tree.leaves(masks)):
-        np.testing.assert_allclose(np.asarray(leaf), ref_leaf, atol=1e-5,
-                                   err_msg="masked params diverged")
-        np.testing.assert_array_equal(np.asarray(leaf)[m == 0], 0.0)
-    np.testing.assert_allclose(np.asarray(taus), np.asarray(ref_taus),
-                               atol=1e-5)
-    for leaf, ref_leaf in zip(jax.tree.leaves(state["server_m"]),
-                              jax.tree.leaves(ref_state["server_m"])):
-        np.testing.assert_allclose(np.asarray(leaf), ref_leaf, atol=1e-5)
+def test_feddyn_alpha0_reduces_to_fedavg(world):
+    """alpha = 0: the correction state stays exactly zero and the server
+    division never enters the graph — FedDyn must match FedAvg <= 1e-6."""
+    _, params, rounds = world
+    base = dict(lr=0.08, lr_decay=0.97, **MODES["feddum"])
+    cfg_avg = EngineConfig(**base)
+    cfg_dy = EngineConfig(algorithm="feddyn",
+                          feddyn=engine.FedDynConfig(alpha=0.0), **base)
+    rounds = _parity_rounds(rounds, False)
+    s_avg, _ = _scan_engine(
+        cfg_avg, engine.init_round_state(jax.tree.map(jnp.asarray, params),
+                                         cfg_avg), rounds)
+    s_dy, _ = _scan_engine(
+        cfg_dy, engine.init_round_state(jax.tree.map(jnp.asarray, params),
+                                        cfg_dy, num_clients=N_TOTAL), rounds)
+    for a, b in zip(jax.tree.leaves(s_avg["params"]),
+                    jax.tree.leaves(s_dy["params"])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+    # the correction state itself never moved off zero
+    for leaf in jax.tree.leaves(s_dy["client_state"]):
+        np.testing.assert_array_equal(np.asarray(leaf), 0.0)
 
 
 @pytest.mark.parametrize("mode", list(MODES))

@@ -123,7 +123,8 @@ def oracle_run(data, model, cfg, rounds):
     data_dev = data.device_arrays()
     kw = sim_sample_kw(cfg, data)
     key = jax.random.key(cfg.seed)
-    state = ref_engine.ref_init_state(model.np_init(), eng)
+    state = ref_engine.ref_init_state(model.np_init(), eng,
+                                      num_clients=data.client_x.shape[0])
     hist = {"loss": [], "acc": [], "tau_eff": []}
     for _ in range(rounds):
         key, sub = jax.random.split(key)
@@ -205,6 +206,64 @@ class TestMeshOracleParity:
             for a, b in zip(jax.tree.leaves(res_m.state["global_m"]),
                             jax.tree.leaves(ref_state["global_m"])):
                 np.testing.assert_allclose(np.asarray(a), b, atol=1e-5)
+
+    @pytest.mark.parametrize("algo,overrides", [
+        ("fedprox", dict(algorithm="fedprox",
+                         fedprox=engine.FedProxConfig(mu=0.05))),
+        ("feddyn", dict(algorithm="feddyn",
+                        feddyn=engine.FedDynConfig(alpha=0.05))),
+    ])
+    def test_client_state_algorithms_mesh_equals_oracle(self, softmax_world,
+                                                        algo, overrides):
+        """FedProx/FedDyn through the FULL trainer path: the client_state
+        slot rides the mesh carry (per-client FedDyn corrections sharded
+        over the 8-way client axis in CI) and both backends must track the
+        f64 oracle per round."""
+        data, model, cfg = softmax_world
+        cfg = dataclasses.replace(cfg, **overrides)
+        rounds = 3
+        plan = per_round_plan(rounds)
+        res_l = FederatedTrainer(model, data, cfg).run(plan)
+        res_m = FederatedTrainer(model, data, cfg, backend="mesh").run(plan)
+        ref_state, ref_hist = oracle_run(data, model, cfg, rounds)
+        for res, tag in ((res_l, "local"), (res_m, "mesh")):
+            np.testing.assert_allclose(res.history["loss"], ref_hist["loss"],
+                                       atol=1e-5, err_msg=f"{algo} {tag}")
+            for a, b in zip(jax.tree.leaves(res.params),
+                            jax.tree.leaves(ref_state["params"])):
+                np.testing.assert_allclose(np.asarray(a), b, atol=1e-5,
+                                           err_msg=f"{algo} {tag}")
+        if algo == "feddyn":
+            # the [N, ...] correction state itself must track the oracle —
+            # on the mesh it lived sharded over the client axis all run
+            for a, b in zip(jax.tree.leaves(res_m.state["client_state"]),
+                            jax.tree.leaves(ref_state["client_state"])):
+                np.testing.assert_allclose(np.asarray(a), b, atol=1e-5,
+                                           err_msg="feddyn client_state")
+
+    def test_straggler_dropout_mesh_equals_local_equals_oracle(
+            self, softmax_world):
+        """dropout_rate > 0: dropped clients contribute ZERO aggregation
+        weight (delta form) on every backend, and the shared key chain
+        keeps local == mesh == oracle sampling identical."""
+        data, model, cfg = softmax_world
+        cfg = dataclasses.replace(cfg, dropout_rate=0.4)
+        rounds = 3
+        plan = per_round_plan(rounds)
+        res_l = FederatedTrainer(model, data, cfg).run(plan)
+        res_m = FederatedTrainer(model, data, cfg, backend="mesh").run(plan)
+        ref_state, ref_hist = oracle_run(data, model, cfg, rounds)
+        for res, tag in ((res_l, "local"), (res_m, "mesh")):
+            np.testing.assert_allclose(res.history["loss"], ref_hist["loss"],
+                                       atol=1e-5, err_msg=tag)
+            for a, b in zip(jax.tree.leaves(res.params),
+                            jax.tree.leaves(ref_state["params"])):
+                np.testing.assert_allclose(np.asarray(a), b, atol=1e-5,
+                                           err_msg=tag)
+        for a, b in zip(jax.tree.leaves(res_m.params),
+                        jax.tree.leaves(res_l.params)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=1e-6)
 
 
 # ---------------------------------------------------------------------------

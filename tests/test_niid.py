@@ -1,10 +1,18 @@
-"""Non-IID degree (Formulas 2-3): unit + hypothesis property tests."""
+"""Non-IID degree (Formulas 2-3): unit + hypothesis property tests.
+
+The property classes at the bottom lock the scenario-matrix axes: a
+Dirichlet(alpha) partition is an EXACT partition for any (alpha, clients,
+seed); ``label_distribution`` always lands on the simplex; and the mean
+non-IID degree of a Dirichlet partition is bounded by ln 2 and vanishes
+as alpha -> infinity (the heterogeneity knob the benchmark grid sweeps).
+"""
 import jax.numpy as jnp
 import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core import niid
+from repro.data.partition import dirichlet_partition
 
 
 def _dist(vals):
@@ -73,3 +81,59 @@ class TestDegrees:
         sizes = jnp.asarray([1.0, 1.0, 2.0])
         out = niid.round_distribution(dists, sizes, jnp.asarray([0, 1]))
         np.testing.assert_allclose(out, [0.5, 0.5], atol=1e-6)
+
+
+class TestLabelDistributionSimplex:
+    @given(st.integers(0, 10_000), st.integers(1, 6), st.integers(1, 80))
+    @settings(max_examples=30, deadline=None)
+    def test_rows_on_simplex(self, seed, num_classes, n):
+        rng = np.random.default_rng(seed)
+        labels = jnp.asarray(rng.integers(0, num_classes, n))
+        d = np.asarray(niid.label_distribution(labels, num_classes))
+        assert d.shape == (num_classes,)
+        assert (d >= 0.0).all()
+        assert d.sum() == pytest.approx(1.0, abs=1e-5)
+
+
+class TestDirichletPartitionProperties:
+    @given(st.integers(2, 8), st.integers(0, 10_000),
+           st.sampled_from([0.1, 0.5, 5.0]))
+    @settings(max_examples=15, deadline=None)
+    def test_exact_partition(self, num_clients, seed, alpha):
+        """The index lists are a TRUE partition: disjoint, covering, and
+        their sizes sum to the dataset size — the invariant the per-client
+        ``sizes`` aggregation weights rely on."""
+        rng = np.random.default_rng(seed)
+        labels = rng.integers(0, 5, 400)
+        parts = dirichlet_partition(labels, num_clients, alpha=alpha,
+                                    seed=seed, min_size=1)
+        assert len(parts) == num_clients
+        assert sum(len(p) for p in parts) == len(labels)
+        allidx = np.concatenate(parts)
+        assert len(np.unique(allidx)) == len(labels)   # disjoint + covering
+
+
+class TestDirichletDegreeLimit:
+    @given(st.integers(0, 1000))
+    @settings(max_examples=5, deadline=None)
+    def test_degree_bounded_and_vanishes_with_alpha(self, seed):
+        """Mean non-IID degree over a Dirichlet partition stays in
+        [0, ln 2] for every alpha and -> 0 as alpha -> infinity (the
+        partitions converge to the global label distribution)."""
+        rng = np.random.default_rng(seed)
+        labels = rng.integers(0, 5, 1000)
+        mean_deg = []
+        for alpha in (0.1, 1.0, 1000.0):
+            parts = dirichlet_partition(labels, 5, alpha=alpha, seed=seed,
+                                        min_size=1)
+            dists = jnp.stack([niid.label_distribution(jnp.asarray(labels[p]),
+                                                       5) for p in parts])
+            sizes = jnp.asarray([len(p) for p in parts], jnp.float32)
+            p_bar = niid.global_distribution(dists, sizes)
+            degs = np.asarray(niid.non_iid_degree(dists, p_bar))
+            assert (degs >= -1e-6).all()
+            assert (degs <= np.log(2) + 1e-6).all()
+            mean_deg.append(float(degs.mean()))
+        # the sweep's endpoints order: heavy skew >> near-IID
+        assert mean_deg[-1] < 0.02
+        assert mean_deg[-1] <= mean_deg[0] + 1e-3
