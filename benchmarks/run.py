@@ -78,6 +78,11 @@ def bench_round_step():
     model = SimpleCNN(num_classes=10, image_shape=(10, 10, 3))
     from repro.core import engine
 
+    # One base key; init/sampling streams derived by fold_in so every
+    # algorithm variant sees identical params and batches.
+    base_key = jax.random.key(0)
+    k_init = jax.random.fold_in(base_key, 0)
+    k_sample = jax.random.fold_in(base_key, 1)
     for name, cfg in [
         ("fedavg", baselines.fedavg_config(num_clients=10, clients_per_round=5,
                                            local_epochs=1, batch_size=10)),
@@ -87,13 +92,13 @@ def bench_round_step():
                                    local_epochs=1, batch_size=10)),
     ]:
         tr = FederatedTrainer(model, data, cfg)
-        params = model.init(jax.random.key(0))
+        params = model.init(k_init)
         state = engine.init_round_state(params, tr.engine_config)
         data_dev = tr._device_data()
         n_k = data.client_x.shape[1]
         n0 = data.server_x.shape[0]
         batch = engine.sample_round_batches(
-            jax.random.key(1), data_dev,
+            k_sample, data_dev,
             clients_per_round=cfg.clients_per_round,
             batch_size=cfg.batch_size,
             local_steps=max(1, n_k // cfg.batch_size) * cfg.local_epochs,

@@ -1,0 +1,19 @@
+"""Static trace-safety analysis for the repro engine.
+
+Three coordinated checkers guard the invariants the paper's efficiency
+claims hang on (one compiled program per shape, no host syncs in the scan,
+disciplined PRNG key chains):
+
+  * :mod:`repro.analysis.lint` — stdlib-``ast`` lint (rules R1-R5) over
+    ``src/``, ``examples/`` and ``benchmarks/``;
+  * :mod:`repro.analysis.compile_budget` — runs the canonical TrainPlans
+    under a jit-cache counter and diffs lowered-program counts against the
+    checked-in ``compile_budget.json`` baseline;
+  * :mod:`repro.analysis.hlo_lint` — lowers the engine chunk and asserts
+    HLO-level invariants (no f64 leaks, no collectives in the local
+    program, no host callbacks in scan bodies, mesh all-reduce budget).
+
+Run all three with ``python -m repro.analysis`` (exit 0 == clean).
+"""
+
+from repro.analysis.lint import Violation, lint_paths, lint_source  # noqa: F401

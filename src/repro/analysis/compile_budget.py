@@ -1,0 +1,291 @@
+"""Compile-budget sentinel: the zero-re-lowering contract, enforced.
+
+The engine's efficiency story requires that a TrainPlan compiles exactly
+one scan-chunk program per distinct (chunk length x parameter shape)
+combination — prune-mask events, snapshots, callbacks and evals must add
+ZERO chunk traces, and a shrink event exactly ONE (the post-shrink
+shapes).  This module runs the canonical plans (Scan / Eval / Prune-mask /
+Prune-shrink / Snapshot, on both the local scan backend and the
+client-sharded mesh backend) under a jit-cache counter and diffs the
+lowered-program counts against the checked-in ``compile_budget.json``
+baseline.  Any unexpected re-trace fails naming the scenario and the plan
+event after which the count jumped.
+
+``compile_budget.json`` is the single source of truth for expected program
+counts: ``tests/test_plan.py`` and ``tests/test_mesh_backend.py`` assert
+against :func:`expected_programs` instead of inline magic numbers.
+
+Regenerate the baseline after an *intentional* budget change with::
+
+    PYTHONPATH=src python -m repro.analysis.compile_budget --update
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+from typing import Any, Callable
+
+BUDGET_PATH = pathlib.Path(__file__).with_name("compile_budget.json")
+
+
+def load_budget(path: pathlib.Path | str | None = None) -> dict:
+    with open(path or BUDGET_PATH) as f:
+        return json.load(f)
+
+
+def expected_programs(scenario: str,
+                      path: pathlib.Path | str | None = None) -> int:
+    """Expected chunk-program count for a named scenario (test entry
+    point — replaces the former inline ``_cache_size() == N`` numbers)."""
+    return int(load_budget(path)["scenarios"][scenario]["programs"])
+
+
+# ---------------------------------------------------------------------------
+# Canonical worlds and plans
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    name: str
+    backend: str                       # "local" | "mesh"
+    plan_factory: Callable[[], Any]    # () -> TrainPlan
+    masked_compute: str = "params"
+    note: str = ""
+
+
+def _plans():
+    from repro.core import Eval, Prune, Scan, Snapshot, TrainPlan
+
+    return {
+        # one chunk length, no prune: exactly one program
+        "scan_eval": lambda: TrainPlan(
+            Eval(), Scan(2), Eval(), Scan(2), Eval()),
+        # mask-mode prune swaps carry contents only: still one program
+        "prune_mask": lambda: TrainPlan(
+            Eval(), Scan(2), Eval(), Prune(mode="mask"), Snapshot(),
+            Scan(2), Eval()),
+        # shrink re-materializes shapes: exactly one extra program
+        "prune_shrink": lambda: TrainPlan(
+            Scan(2), Prune(mode="shrink"), Scan(2), Eval()),
+        # mask now, compact later (momentum-preserving): pre- + post-shrink
+        "mask_then_shrink": lambda: TrainPlan(
+            Scan(2), Prune(mode="mask"), Scan(2),
+            Prune(mode="shrink", reuse="prune", name="shrink"),
+            Scan(2), Eval()),
+        # snapshots/callback-free plan with a second distinct chunk length
+        "two_chunk_lengths": lambda: TrainPlan(
+            Scan(2), Snapshot(), Scan(1), Eval()),
+    }
+
+
+def scenarios() -> list[Scenario]:
+    out = []
+    for backend in ("local", "mesh"):
+        for pname, factory in _plans().items():
+            out.append(Scenario(f"{backend}/{pname}", backend, factory))
+        out.append(Scenario(f"{backend}/prune_mask_kernel", backend,
+                            _plans()["prune_mask"],
+                            masked_compute="kernel",
+                            note="masked_compute=kernel routes matmuls "
+                                 "through the Pallas masked kernel"))
+    return out
+
+
+def make_world():
+    """The canonical tiny CNN world (mirrors the tier-1 fixtures: 8
+    clients, 8x8x3 synthetic data, a (4,8,8)-channel SimpleCNN)."""
+    from repro.core import FedAPConfig, feddumap_config
+    from repro.data import build_federated_data
+    from repro.data.synthetic import SyntheticSpec
+
+    spec = SyntheticSpec(num_classes=10, image_shape=(8, 8, 3),
+                         train_size=1700, test_size=100, noise_scale=0.5)
+    data = build_federated_data(num_clients=8, server_fraction=0.1,
+                                device_pool=640, spec=spec)
+    apcfg = FedAPConfig(prune_round=2, probe_size=8, participants=7,
+                        min_rate=0.5)
+    cfg = feddumap_config(num_clients=8, clients_per_round=8, local_epochs=1,
+                          batch_size=10, lr=0.05, fedap=apcfg)
+    return data, cfg
+
+
+def _fresh_model():
+    """A NEW model instance per scenario: the session compile cache is
+    keyed on the model object, so each scenario gets a zeroed jit-cache
+    counter."""
+    from repro.models import SimpleCNN
+
+    return SimpleCNN(num_classes=10, image_shape=(8, 8, 3),
+                     channels=(4, 8, 8), fc_width=16)
+
+
+# ---------------------------------------------------------------------------
+# Recording execution
+
+
+class _RecordingBackend:
+    """Delegating ExecutionBackend wrapper that samples the chunk
+    jit-cache size after every plan event."""
+
+    def __init__(self, inner):
+        self._inner = inner
+        self.timeline: list[tuple[str, int]] = []
+        self._n = 0
+
+    def __getattr__(self, name):
+        return getattr(self._inner, name)
+
+    def _record(self, label: str):
+        self._n += 1
+        self.timeline.append(
+            (f"event#{self._n}:{label}",
+             int(self._inner.chunk._cache_size())))
+
+    def run_chunk(self, state, key, length):
+        out = self._inner.run_chunk(state, key, length)
+        self._record(f"Scan(rounds={length})")
+        return out
+
+    def apply_prune(self, state, mode, kept, **kw):
+        out = self._inner.apply_prune(state, mode, kept, **kw)
+        self._record(f"Prune(mode={mode!r})")
+        return out
+
+    def evaluate(self, state):
+        out = self._inner.evaluate(state)
+        self._record("Eval")
+        return out
+
+    def snapshot(self, state):
+        out = self._inner.snapshot(state)
+        if self.timeline:    # snapshot also runs inside Callback plumbing
+            self._record("Snapshot")
+        return out
+
+
+@dataclasses.dataclass
+class ScenarioResult:
+    name: str
+    programs: int
+    timeline: list[tuple[str, int]]
+
+
+def run_scenario(sc: Scenario, world=None) -> ScenarioResult:
+    import dataclasses as _dc
+
+    import jax
+
+    from repro.core import FederatedTrainer
+    from repro.core.backend import PlanExecutor
+
+    data, cfg = world if world is not None else make_world()
+    if sc.masked_compute != "params":
+        cfg = _dc.replace(cfg, masked_compute=sc.masked_compute)
+    model = _fresh_model()
+    plan = sc.plan_factory()
+    tr = FederatedTrainer(model, data, cfg, backend=sc.backend)
+    be = tr.backend(use_masks=plan.uses_masks)
+    rec = _RecordingBackend(be)
+    executor = PlanExecutor(rec, trainer=tr)
+    params0 = model.init(jax.random.key(cfg.seed))
+    executor.run(plan, params=params0, key=jax.random.key(cfg.seed + 1))
+    return ScenarioResult(sc.name, int(be.chunk._cache_size()),
+                          rec.timeline)
+
+
+# ---------------------------------------------------------------------------
+# Check / update
+
+
+def check(budget: dict | None = None,
+          scenario_list: list[Scenario] | None = None,
+          world=None) -> list[str]:
+    """Run every scenario and diff against the baseline.  Returns a list
+    of failure messages (empty == within budget)."""
+    budget = budget if budget is not None else load_budget()
+    expected_map = budget["scenarios"]
+    errors = []
+    results = []
+    if world is None:
+        world = make_world()
+    for sc in (scenario_list if scenario_list is not None else scenarios()):
+        if sc.name not in expected_map:
+            errors.append(
+                f"{sc.name}: scenario missing from compile_budget.json — "
+                f"regenerate with --update if this is intentional")
+            continue
+        res = run_scenario(sc, world=world)
+        results.append(res)
+        want = int(expected_map[sc.name]["programs"])
+        if res.programs != want:
+            culprit = next(
+                (ev for ev, count in res.timeline if count > want), None)
+            detail = (f" first exceeded after {culprit}" if culprit
+                      else " (fewer programs than budgeted — update the "
+                           "baseline if the plan changed)")
+            errors.append(
+                f"{sc.name}: {res.programs} chunk program(s) lowered, "
+                f"budget says {want};{detail}. timeline="
+                f"{res.timeline}")
+    return errors
+
+
+def update(path: pathlib.Path | str | None = None) -> dict:
+    world = make_world()
+    budget = {
+        "_comment": [
+            "Expected lowered chunk-program counts per canonical plan",
+            "scenario — the zero-re-lowering contract.  Checked by",
+            "`python -m repro.analysis.compile_budget` and asserted by",
+            "tests/test_plan.py + tests/test_mesh_backend.py via",
+            "repro.analysis.compile_budget.expected_programs().",
+            "Regenerate ONLY for intentional plan/engine changes:",
+            "PYTHONPATH=src python -m repro.analysis.compile_budget --update",
+        ],
+        "scenarios": {},
+    }
+    old = load_budget(path) if pathlib.Path(path or BUDGET_PATH).exists() \
+        else {}
+    if "hlo" in old:
+        budget["hlo"] = old["hlo"]
+    for sc in scenarios():
+        res = run_scenario(sc, world=world)
+        budget["scenarios"][res.name] = {
+            "programs": res.programs,
+            "timeline": [f"{ev}={count}" for ev, count in res.timeline],
+        }
+        if sc.note:
+            budget["scenarios"][res.name]["note"] = sc.note
+    with open(path or BUDGET_PATH, "w") as f:
+        json.dump(budget, f, indent=2)
+        f.write("\n")
+    return budget
+
+
+def main(argv: list[str] | None = None) -> int:
+    import argparse
+
+    ap = argparse.ArgumentParser(prog="repro.analysis.compile_budget",
+                                 description=__doc__.splitlines()[0])
+    ap.add_argument("--update", action="store_true",
+                    help="re-measure and overwrite compile_budget.json")
+    args = ap.parse_args(argv)
+
+    if args.update:
+        budget = update()
+        for name, entry in budget["scenarios"].items():
+            print(f"  {name}: {entry['programs']} program(s)")
+        print(f"wrote {BUDGET_PATH}")
+        return 0
+
+    errors = check()
+    for e in errors:
+        print(f"FAIL {e}")
+    print(f"repro.analysis.compile_budget: "
+          f"{len(errors)} violation(s) across {len(scenarios())} scenarios")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,292 @@
+"""HLO invariant checker — lowers the engine chunk and inspects the
+optimized program text (via :class:`repro.launch.hlo_cost.HloCostModel`).
+
+Checked invariants:
+
+* **No f64 ops** anywhere in the f32 training graph (an accidental
+  float64 promotion silently doubles bandwidth and falls off the fast
+  unit paths);
+* **No collectives** in the :class:`LocalScanBackend` program — the
+  single-device scan must be communication-free;
+* **No host callbacks / infeed / outfeed** inside any lowered program —
+  a `io_callback`/`debug.print` smuggled into the scan body would stall
+  every round on the host;
+* **Mesh all-reduce budget** (needs >= 2 devices): the per-round
+  all-reduce count matches the PR 5 design — one *logical* all-reduce
+  per tau server step (physically one per parameter leaf, inside the
+  trip-``tau`` while loop) plus one *logical* FedAvg aggregation
+  (physically per-leaf, direct in the round body) plus the fixed metric
+  reductions.  The measured physical counts are recorded in
+  ``compile_budget.json`` under ``"hlo"`` (the same single source of
+  truth the compile-budget sentinel uses); any NEW collective in the
+  round body fails the diff naming the loop it appeared in.
+
+Regenerate the recorded counts after an intentional engine change with::
+
+    PYTHONPATH=src python -m repro.analysis.hlo_lint --update
+"""
+from __future__ import annotations
+
+import re
+from typing import Any
+
+from repro.analysis.compile_budget import (
+    BUDGET_PATH,
+    load_budget,
+    make_world,
+    _fresh_model,
+)
+
+_F64 = re.compile(r"\bf64\[")
+_HOST_OPS = re.compile(r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*[\w\[\],{}()\s/]*"
+                       r"(infeed|outfeed|send|recv)\(", re.M)
+_HOST_CUSTOM = re.compile(r'custom_call_target="([^"]*'
+                          r'(?:callback|host|outside_compilation)[^"]*)"',
+                          re.I)
+_TRIP = re.compile(r'known_trip_count[":{\\]+n[":\\]+(\d+)')
+
+# Round length used when lowering: distinct from the canonical world's
+# server_tau (2) and local step count (8) so the round loop is the unique
+# entry-level while with this trip count.
+CHUNK_LEN = 3
+
+
+def f64_ops(hlo_text: str) -> int:
+    """Number of f64-typed tensor references in the program text."""
+    return len(_F64.findall(hlo_text))
+
+
+def host_callbacks(hlo_text: str) -> list[str]:
+    """Infeed/outfeed/send/recv ops and host-callback custom-calls."""
+    out = [m.group(1) for m in _HOST_OPS.finditer(hlo_text)]
+    out += [f"custom-call:{t}" for t in _HOST_CUSTOM.findall(hlo_text)]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Structural all-reduce accounting over HloCostModel's computation table
+
+
+def _direct_counts(cm, comp: str, opcode: str) -> int:
+    return sum(1 for i in cm.comps.get(comp, [])
+               if i.opcode.startswith(opcode))
+
+
+def _whiles(cm, comp: str) -> list[tuple[str, int]]:
+    out = []
+    for i in cm.comps.get(comp, []):
+        if i.opcode != "while":
+            continue
+        body = re.search(r"body=%?([\w.\-]+)", i.line)
+        tm = _TRIP.search(i.line)
+        if body:
+            out.append((body.group(1), int(tm.group(1)) if tm else 1))
+    return out
+
+
+def _weighted_count(cm, comp: str, opcode: str) -> int:
+    """Trip-count-weighted op count over the computation subtree."""
+    total = _direct_counts(cm, comp, opcode)
+    for body, trip in _whiles(cm, comp):
+        total += trip * _weighted_count(cm, body, opcode)
+    return total
+
+
+def mesh_all_reduce_profile(cm, *, length: int, server_tau: int) -> dict:
+    """Locate the round loop (the unique entry-level while with trip ==
+    ``length``) and the tau server loop inside it; return the physical
+    all-reduce counts at each level."""
+    entry = cm.entry
+    round_bodies = [(b, t) for b, t in _whiles(cm, entry) if t == length]
+    if len(round_bodies) != 1:
+        raise AssertionError(
+            f"expected exactly one entry-level while with trip={length} "
+            f"(the round scan); found {round_bodies}")
+    round_body = round_bodies[0][0]
+    tau_loops = [(b, t) for b, t in _whiles(cm, round_body)
+                 if t == server_tau and _weighted_count(cm, b, "all-reduce")]
+    return {
+        "entry_all_reduce": _direct_counts(cm, entry, "all-reduce"),
+        "round_body_all_reduce": _direct_counts(cm, round_body,
+                                                "all-reduce"),
+        "tau_body_all_reduce": (
+            _weighted_count(cm, tau_loops[0][0], "all-reduce")
+            if tau_loops else 0),
+        "tau_loops_with_all_reduce": len(tau_loops),
+        "per_round_all_reduce": _weighted_count(cm, round_body,
+                                                "all-reduce"),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Lowering the canonical chunks
+
+
+def _lower_chunk(backend_name: str, world=None) -> tuple[str, dict]:
+    """Optimized HLO text of the canonical chunk + the world's sample_kw."""
+    import jax
+
+    from repro.core import FederatedTrainer
+
+    data, cfg = world if world is not None else make_world()
+    model = _fresh_model()
+    tr = FederatedTrainer(model, data, cfg, backend=backend_name)
+    be = tr.backend()
+    state = be.init_state(model.init(jax.random.key(cfg.seed)))
+    d = be.device_data()
+    key = jax.random.key(cfg.seed + 1)
+    if backend_name == "mesh":
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        key = jax.device_put(key, NamedSharding(be.mesh, P()))
+    txt = be.chunk.lower(state, key, d, length=CHUNK_LEN).compile().as_text()
+    return txt, dict(be.sample_kw)
+
+
+def check(budget: dict | None = None, world=None) -> list[str]:
+    """Run every HLO invariant; returns failure messages (empty == ok)."""
+    import jax
+
+    from repro.launch import hlo_cost
+
+    budget = budget if budget is not None else load_budget()
+    recorded = budget.get("hlo", {})
+    errors: list[str] = []
+    if world is None:
+        world = make_world()
+
+    # ---- local program: f64 / collectives / host callbacks ----------------
+    txt, _ = _lower_chunk("local", world)
+    if f64_ops(txt):
+        errors.append(f"local chunk: {f64_ops(txt)} f64 tensor reference(s) "
+                      f"leaked into the f32 training graph")
+    cbs = host_callbacks(txt)
+    if cbs:
+        errors.append(f"local chunk: host callback ops in lowered program: "
+                      f"{cbs}")
+    cm = hlo_cost.HloCostModel(txt)
+    coll = dict(cm.entry_cost().collective_counts)
+    if coll:
+        errors.append(f"local chunk: collectives in the single-device scan "
+                      f"program: {coll}")
+
+    # ---- mesh program: all-reduce budget (needs a real mesh) --------------
+    if len(jax.devices()) < 2:
+        # On one device GSPMD elides every collective; the CI job supplies
+        # 8 virtual devices.  Not a failure — the local checks above ran.
+        print("repro.analysis.hlo_lint: mesh all-reduce budget skipped "
+              "(single device; set "
+              "XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+        return errors
+
+    txt, sample_kw = _lower_chunk("mesh", world)
+    if f64_ops(txt):
+        errors.append(f"mesh chunk: {f64_ops(txt)} f64 tensor reference(s)")
+    cbs = host_callbacks(txt)
+    if cbs:
+        errors.append(f"mesh chunk: host callback ops: {cbs}")
+
+    cm = hlo_cost.HloCostModel(txt)
+    try:
+        prof = mesh_all_reduce_profile(cm, length=CHUNK_LEN,
+                                       server_tau=sample_kw["server_tau"])
+    except AssertionError as e:
+        return errors + [f"mesh chunk: {e}"]
+
+    # PR 5 design: >= one all-reduce per tau step (the sharded server
+    # scan's partial-grad reduction) and >= one aggregation all-reduce
+    # direct in the round body (FedAvg), regardless of recorded numbers.
+    if prof["tau_loops_with_all_reduce"] != 1:
+        errors.append(
+            f"mesh chunk: expected exactly one trip-{sample_kw['server_tau']}"
+            f" server loop carrying all-reduces inside the round body, "
+            f"found {prof['tau_loops_with_all_reduce']} "
+            f"(the sharded FedDU server scan lost its per-step reduction?)")
+    if prof["round_body_all_reduce"] < 1:
+        errors.append("mesh chunk: no FedAvg aggregation all-reduce in the "
+                      "round body")
+
+    want = recorded.get("mesh")
+    if want is None:
+        errors.append("mesh all-reduce counts missing from "
+                      "compile_budget.json ['hlo']['mesh'] — run "
+                      "python -m repro.analysis.hlo_lint --update")
+        return errors
+    for field in ("entry_all_reduce", "round_body_all_reduce",
+                  "tau_body_all_reduce", "per_round_all_reduce"):
+        if prof[field] != want[field]:
+            where = {"entry_all_reduce": "outside the round loop",
+                     "round_body_all_reduce":
+                         "direct in the round body (FedAvg aggregation + "
+                         "metric reductions)",
+                     "tau_body_all_reduce":
+                         "inside the tau server loop (per-step partial-grad "
+                         "reduction)",
+                     "per_round_all_reduce": "per round (total)"}[field]
+            errors.append(
+                f"mesh chunk: {prof[field]} all-reduce(s) {where}, "
+                f"recorded budget says {want[field]} — an unbudgeted "
+                f"collective changes every round's critical path "
+                f"(profile={prof})")
+    return errors
+
+
+def update(world=None) -> dict:
+    """Measure the mesh all-reduce profile and record it in
+    compile_budget.json under ['hlo']."""
+    import json
+
+    import jax
+
+    from repro.launch import hlo_cost
+
+    if len(jax.devices()) < 2:
+        raise SystemExit("--update needs >= 2 devices "
+                         "(XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+    txt, sample_kw = _lower_chunk("mesh", world)
+    cm = hlo_cost.HloCostModel(txt)
+    prof = mesh_all_reduce_profile(cm, length=CHUNK_LEN,
+                                   server_tau=sample_kw["server_tau"])
+    budget = load_budget()
+    budget["hlo"] = {
+        "_comment": [
+            "Physical all-reduce counts in the mesh chunk, lowered at",
+            f"length={CHUNK_LEN} on {len(jax.devices())} devices.",
+            "Design (PR 5): one LOGICAL all-reduce per tau server step",
+            "(tau_body, physically one per param leaf + the loss/acc",
+            "reduction) + one LOGICAL FedAvg aggregation (round_body,",
+            "per leaf + metric reductions).",
+        ],
+        "mesh": {k: v for k, v in prof.items()},
+        "local": {"collectives": 0},
+    }
+    with open(BUDGET_PATH, "w") as f:
+        json.dump(budget, f, indent=2)
+        f.write("\n")
+    return budget
+
+
+def main(argv: list[str] | None = None) -> int:
+    import argparse
+
+    ap = argparse.ArgumentParser(prog="repro.analysis.hlo_lint",
+                                 description=__doc__.splitlines()[0])
+    ap.add_argument("--update", action="store_true",
+                    help="re-measure the mesh all-reduce profile into "
+                         "compile_budget.json")
+    args = ap.parse_args(argv)
+
+    if args.update:
+        budget = update()
+        print(f"recorded: {budget['hlo']['mesh']}")
+        return 0
+
+    errors = check()
+    for e in errors:
+        print(f"FAIL {e}")
+    print(f"repro.analysis.hlo_lint: {len(errors)} violation(s)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

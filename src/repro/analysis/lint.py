@@ -1,0 +1,821 @@
+"""Repo-specific trace-safety lint (stdlib ``ast`` only, no new deps).
+
+The rules encode the contracts the engine's efficiency story depends on
+(see README "Invariants & static analysis"):
+
+R1  **No PRNG key reuse.**  Every ``jax.random.*`` consumer must receive a
+    key produced by ``split``/``fold_in`` in the same scope; a key name may
+    be passed to a consumer at most once before being re-bound.  Two
+    ``fold_in(key, <const>)`` calls with the *same* constant count as
+    reuse; ``fold_in(key, i)`` with a varying operand is the blessed
+    derivation pattern.  Additionally, constructing two literal root keys
+    (``jax.random.key(0)`` + ``jax.random.key(1)``) in one function is a
+    "seed ladder" — derive streams with ``fold_in`` from one base instead.
+    Escape: ``# lint: key-reuse-ok``.
+
+R2  **No host syncs in traced code.**  Functions reachable from
+    ``engine.round_core``, ``backend.build_chunk`` or any
+    ``@jax.jit``-decorated function must not call ``.item()``,
+    ``jax.device_get``, ``np.asarray``/``np.array``, or ``float()`` /
+    ``int()`` / ``bool()`` on a non-static expression — each forces a
+    device->host transfer that stalls the scan.  Reachability is a
+    conservative module-level call graph (bare names, ``from m import f``
+    and ``module.attr`` calls; attribute/method dispatch is not followed).
+    Escape: ``# lint: host-sync-ok``.
+
+R3  **No Python branching on traced values** in the engine/kernels modules
+    (``core/engine.py``, ``core/momentum.py``, ``core/server_update.py``,
+    ``kernels/*.py``).  A condition is *static* when it is built from
+    constants, attribute access (config fields / ``.shape`` / ``.ndim`` /
+    ``.dtype``), ``is None`` / ``in`` tests, scalar-annotated or
+    constant-defaulted parameters, and locals assigned from such
+    expressions.  Anything touching a bare array name (``if x:``,
+    ``if jnp.sum(x) > 0:``) re-traces or crashes under ``jit``.
+    Escape: ``# lint: static-branch``.
+
+R4  **No bare ``assert`` in ``kernels/``.**  Shape preconditions must raise
+    ``ValueError`` naming the offending shapes/blocks (the PR 3
+    ``masked_matmul`` precedent); asserts vanish under ``python -O`` and
+    carry no shape context.  No escape pragma.
+
+R5  **No mutable default arguments** anywhere, and **no ``jnp.`` calls at
+    module import time** (module-level array constants force device
+    placement and platform init at import).  Escape: ``# lint:
+    import-time-ok`` (import-time half only).
+
+Pragmas are same-line comments: ``... # lint: static-branch``.  Several
+tags may share one comment (``# lint: static-branch host-sync-ok``).
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import pathlib
+import re
+from typing import Iterable
+
+RULES = ("R1", "R2", "R3", "R4", "R5")
+
+_PRAGMA_TAGS = {
+    "key-reuse-ok": "R1",
+    "host-sync-ok": "R2",
+    "static-branch": "R3",
+    "import-time-ok": "R5",
+}
+
+# jax.random constructors/derivers that *produce* keys.
+_KEY_MAKERS = {"key", "PRNGKey", "split", "fold_in", "clone", "wrap_key_data"}
+# jax.random calls that do NOT consume a key as arg 0.
+_NON_CONSUMERS = {"key", "PRNGKey", "key_data", "wrap_key_data", "key_impl"}
+
+# Builtins whose result is host-static regardless of arguments.
+_STATIC_CALLS = {"len", "isinstance", "hasattr", "callable", "getattr"}
+# Builtins that are static iff every argument is static.
+_STATIC_IF_ARGS = {"min", "max", "abs", "bool", "int", "float", "str", "tuple",
+                   "sorted", "any", "all", "sum", "range"}
+# Dotted calls that read host state at trace time (static by construction).
+_STATIC_DOTTED = {"os.environ.get", "os.getenv", "math.sqrt", "math.ceil",
+                  "math.floor", "math.log", "math.prod"}
+
+# R3 scope: modules whose bodies run under trace.
+_R3_MODULE_RE = re.compile(
+    r"(^|/)(kernels/[^/]+\.py|core/engine\.py|core/momentum\.py|"
+    r"core/server_update\.py)$")
+_R4_MODULE_RE = re.compile(r"(^|/)kernels/[^/]+\.py$")
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    rule: str
+    path: str
+    line: int
+    message: str
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}"
+
+
+def _dotted(node: ast.AST) -> str | None:
+    """'jax.random.split' for an Attribute/Name chain, else None."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _pragmas(source: str) -> dict[int, set[str]]:
+    out: dict[int, set[str]] = {}
+    for i, line in enumerate(source.splitlines(), 1):
+        if "lint:" not in line:
+            continue
+        _, _, tail = line.partition("lint:")
+        tags = {t for t in re.findall(r"[a-z][a-z0-9-]*", tail)
+                if t in _PRAGMA_TAGS}
+        if tags:
+            out[i] = tags
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Per-module model
+
+
+@dataclasses.dataclass
+class _Func:
+    """One analysis unit: a def (top-level, method, or nested)."""
+    qualname: str
+    node: ast.FunctionDef
+    children: list["_Func"] = dataclasses.field(default_factory=list)
+
+    def own_body_nodes(self) -> Iterable[ast.AST]:
+        """Walk the unit's body, stopping at nested defs (own units)."""
+        stack: list[ast.AST] = list(self.node.body)
+        while stack:
+            n = stack.pop()
+            yield n
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            stack.extend(ast.iter_child_nodes(n))
+
+
+@dataclasses.dataclass
+class _Module:
+    path: str                   # display path
+    modname: str | None         # dotted module name (src/ files), else None
+    tree: ast.Module
+    source: str
+    pragmas: dict[int, set[str]]
+    funcs: list[_Func] = dataclasses.field(default_factory=list)
+    # name -> dotted module for `import x as y` / `from pkg import mod`
+    mod_aliases: dict[str, str] = dataclasses.field(default_factory=dict)
+    # name -> (dotted module, func name) for `from m import f`
+    func_imports: dict[str, tuple[str, str]] = dataclasses.field(
+        default_factory=dict)
+    top_funcs: dict[str, _Func] = dataclasses.field(default_factory=dict)
+
+    def allowed(self, line: int, rule: str) -> bool:
+        return any(_PRAGMA_TAGS.get(t) == rule
+                   for t in self.pragmas.get(line, ()))
+
+
+def _collect_funcs(mod: _Module) -> None:
+    def visit(node: ast.AST, prefix: str, into: list[_Func]) -> None:
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                f = _Func(qualname=prefix + child.name, node=child)
+                into.append(f)
+                visit(child, f.qualname + ".", f.children)
+            elif isinstance(child, ast.ClassDef):
+                visit(child, prefix + child.name + ".", into)
+            elif not isinstance(child, (ast.Lambda,)):
+                visit(child, prefix, into)
+
+    visit(mod.tree, "", mod.funcs)
+    for f in mod.funcs:
+        mod.top_funcs.setdefault(f.node.name, f)
+
+
+def _collect_imports(mod: _Module) -> None:
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                mod.mod_aliases[alias.asname or alias.name.split(".")[0]] = (
+                    alias.name)
+        elif isinstance(node, ast.ImportFrom) and node.module and not node.level:
+            for alias in node.names:
+                bound = alias.asname or alias.name
+                # `from pkg import mod` and `from mod import func` are
+                # indistinguishable without the file set; record both and
+                # let resolution pick whichever exists.
+                mod.mod_aliases.setdefault(bound, f"{node.module}.{alias.name}")
+                mod.func_imports[bound] = (node.module, alias.name)
+
+
+def _parse_module(source: str, path: str, modname: str | None) -> _Module:
+    mod = _Module(path=path, modname=modname, tree=ast.parse(source),
+                  source=source, pragmas=_pragmas(source))
+    _collect_funcs(mod)
+    _collect_imports(mod)
+    return mod
+
+
+# ---------------------------------------------------------------------------
+# Static-expression classifier (shared by R2 and R3)
+
+
+def _is_static(node: ast.AST, static_names: set[str]) -> bool:
+    if isinstance(node, ast.Constant):
+        return True
+    if isinstance(node, ast.Name):
+        return node.id in static_names
+    if isinstance(node, ast.Attribute):
+        # Attribute access in a branch condition is config fields or array
+        # metadata (.shape/.ndim/.dtype) — both trace-static in this repo.
+        return True
+    if isinstance(node, ast.Subscript):
+        return _is_static(node.value, static_names)
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return all(_is_static(e, static_names) for e in node.elts)
+    if isinstance(node, ast.UnaryOp):
+        return _is_static(node.operand, static_names)
+    if isinstance(node, ast.BinOp):
+        return (_is_static(node.left, static_names)
+                and _is_static(node.right, static_names))
+    if isinstance(node, ast.BoolOp):
+        return all(_is_static(v, static_names) for v in node.values)
+    if isinstance(node, ast.Compare):
+        if all(isinstance(op, (ast.Is, ast.IsNot, ast.In, ast.NotIn))
+               for op in node.ops):
+            return True
+        return (_is_static(node.left, static_names)
+                and all(_is_static(c, static_names) for c in node.comparators))
+    if isinstance(node, ast.Call):
+        fn = node.func
+        if isinstance(fn, ast.Name):
+            if fn.id in _STATIC_CALLS:
+                return True
+            if fn.id in _STATIC_IF_ARGS:
+                return all(_is_static(a, static_names) for a in node.args)
+            return False
+        return _dotted(fn) in _STATIC_DOTTED
+    return False
+
+
+_SCALAR_ANNOTATIONS = ("int", "float", "bool", "str")
+
+
+def _static_params(fn: ast.FunctionDef) -> set[str]:
+    """Parameters known host-static: scalar-annotated or constant-defaulted."""
+    a = fn.args
+    params = list(a.posonlyargs) + list(a.args) + list(a.kwonlyargs)
+    defaults: dict[str, ast.AST] = {}
+    pos = list(a.posonlyargs) + list(a.args)
+    for arg, d in zip(reversed(pos), reversed(a.defaults)):
+        defaults[arg.arg] = d
+    for arg, d in zip(a.kwonlyargs, a.kw_defaults):
+        if d is not None:
+            defaults[arg.arg] = d
+    out = set()
+    for arg in params:
+        if arg.annotation is not None:
+            ann = ast.unparse(arg.annotation)
+            if any(s in ann for s in _SCALAR_ANNOTATIONS):
+                out.add(arg.arg)
+                continue
+        if isinstance(defaults.get(arg.arg), ast.Constant):
+            out.add(arg.arg)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# R1 — PRNG key discipline
+
+
+def _is_key_maker(call: ast.Call) -> bool:
+    d = _dotted(call.func)
+    if d is None:
+        return False
+    parts = d.split(".")
+    return parts[-1] in _KEY_MAKERS and (
+        "random" in parts[:-1] or parts[-1] == "PRNGKey")
+
+
+def _is_key_consumer(call: ast.Call) -> bool:
+    d = _dotted(call.func)
+    if d is None:
+        return False
+    parts = d.split(".")
+    return (len(parts) >= 2 and "random" in parts[:-1]
+            and parts[-1] not in _NON_CONSUMERS)
+
+
+_KEY_PARAM_RE = re.compile(r"(^(key|rng|prng)$)|(^(key|k|rng)_)|(_(key|rng)$)")
+
+
+def _check_keys(mod: _Module, fn: _Func, out: list[Violation]) -> None:
+    keys = {a.arg for a in (list(fn.node.args.posonlyargs)
+                            + list(fn.node.args.args)
+                            + list(fn.node.args.kwonlyargs))
+            if _KEY_PARAM_RE.search(a.arg)}
+    consumed: dict[str, int] = {}
+    literal_roots: list[int] = []
+    reported: set[tuple[str, int]] = set()
+
+    def consume_token(tok: str, line: int) -> None:
+        base = tok.split("@")[0]
+        if base not in keys:
+            return
+        if tok in consumed and (tok, line) not in reported:
+            reported.add((tok, line))
+            if not mod.allowed(line, "R1"):
+                out.append(Violation(
+                    "R1", mod.path, line,
+                    f"key `{base}` already consumed at line {consumed[tok]}; "
+                    f"split/fold_in a fresh key instead of reusing it"))
+        consumed.setdefault(tok, line)
+
+    def bind(target: ast.AST, is_key: bool) -> None:
+        if isinstance(target, ast.Name):
+            for tok in [t for t in consumed if t.split("@")[0] == target.id]:
+                del consumed[tok]
+            if is_key:
+                keys.add(target.id)
+            else:
+                keys.discard(target.id)
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for e in target.elts:
+                bind(e, is_key)
+
+    def handle_call(call: ast.Call) -> None:
+        if _is_key_maker(call):
+            d = _dotted(call.func) or ""
+            leaf = d.split(".")[-1]
+            if leaf in ("key", "PRNGKey") and call.args and isinstance(
+                    call.args[0], ast.Constant) \
+                    and call.lineno not in literal_roots:
+                literal_roots.append(call.lineno)
+        if not _is_key_consumer(call) or not call.args:
+            return
+        arg0 = call.args[0]
+        leaf = (_dotted(call.func) or "").split(".")[-1]
+        if isinstance(arg0, ast.Name):
+            if leaf == "fold_in":
+                data = call.args[1] if len(call.args) > 1 else None
+                if isinstance(data, ast.Constant):
+                    consume_token(f"{arg0.id}@{data.value!r}", call.lineno)
+                # fold_in(key, i) with a varying operand derives a fresh
+                # stream per i — the blessed pattern, not a reuse.
+                return
+            consume_token(arg0.id, call.lineno)
+
+    def calls_in(expr: ast.AST) -> None:
+        for n in ast.walk(expr):
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            if isinstance(n, ast.Call):
+                handle_call(n)
+
+    def run_branch(stmts: list[ast.stmt]) -> tuple[dict, set]:
+        """Run an exclusive branch on a copy of the state; return it."""
+        snap_c, snap_k = dict(consumed), set(keys)
+        run_stmts(stmts)
+        result = dict(consumed), set(keys)
+        consumed.clear(); consumed.update(snap_c)
+        keys.clear(); keys.update(snap_k)
+        return result
+
+    def run_stmts(stmts: list[ast.stmt]) -> None:
+        for st in stmts:
+            if isinstance(st, (ast.FunctionDef, ast.AsyncFunctionDef,
+                               ast.ClassDef)):
+                continue
+            if isinstance(st, ast.If):
+                # exclusive branches must not see each other's consumes
+                c_body, k_body = run_branch(st.body)
+                c_else, k_else = run_branch(st.orelse)
+                for branch_c in (c_body, c_else):
+                    for tok, line in branch_c.items():
+                        consumed.setdefault(tok, line)
+                keys.update(k_body & k_else)
+                calls_in(st.test)
+                continue
+            if isinstance(st, (ast.For, ast.AsyncFor, ast.While)):
+                calls_in(st.iter if isinstance(st, (ast.For, ast.AsyncFor))
+                         else st.test)
+                # Two passes: a consume not re-bound within the loop body is
+                # a reuse on the second iteration.
+                run_stmts(st.body)
+                run_stmts(st.body)
+                run_stmts(st.orelse)
+                continue
+            if isinstance(st, (ast.With, ast.AsyncWith)):
+                for item in st.items:
+                    calls_in(item.context_expr)
+                run_stmts(st.body)
+                continue
+            if isinstance(st, ast.Try):
+                run_stmts(st.body)
+                for h in st.handlers:
+                    run_stmts(h.body)
+                run_stmts(st.orelse)
+                run_stmts(st.finalbody)
+                continue
+            # simple statement: calls in evaluation order, then bindings
+            calls_in(st)
+            if isinstance(st, ast.Assign):
+                is_key = isinstance(st.value, ast.Call) and _is_key_maker(
+                    st.value)
+                for t in st.targets:
+                    bind(t, is_key)
+            elif isinstance(st, ast.AnnAssign) and st.value is not None:
+                bind(st.target, isinstance(st.value, ast.Call)
+                     and _is_key_maker(st.value))
+
+    run_stmts(fn.node.body)
+
+    if len(literal_roots) > 1:
+        line = literal_roots[1]
+        if not mod.allowed(line, "R1") and not mod.allowed(
+                literal_roots[0], "R1"):
+            out.append(Violation(
+                "R1", mod.path, line,
+                f"{len(literal_roots)} literal root keys in one scope "
+                f"(first at line {literal_roots[0]}); derive streams with "
+                f"jax.random.fold_in(base, index) from one base seed"))
+
+
+# ---------------------------------------------------------------------------
+# R2 — host syncs in traced code
+
+
+def _jit_decorated(fn: ast.FunctionDef) -> bool:
+    for dec in fn.decorator_list:
+        d = _dotted(dec)
+        if d in ("jax.jit", "jit"):
+            return True
+        if isinstance(dec, ast.Call):
+            d = _dotted(dec.func)
+            if d in ("jax.jit", "jit"):
+                return True
+            if d in ("functools.partial", "partial") and dec.args:
+                if _dotted(dec.args[0]) in ("jax.jit", "jit"):
+                    return True
+    return False
+
+
+def _reachable_units(mods: list[_Module]) -> set[tuple[str, str]]:
+    """(path, qualname) of every unit reachable from the trace roots."""
+    by_modname = {m.modname: m for m in mods if m.modname}
+    units: dict[tuple[str, str], _Func] = {}
+    for m in mods:
+        def add(f: _Func) -> None:
+            units[(m.path, f.qualname)] = f
+            for c in f.children:
+                add(c)
+        for f in m.funcs:
+            add(f)
+
+    edges: dict[tuple[str, str], set[tuple[str, str]]] = {
+        k: set() for k in units}
+    roots: set[tuple[str, str]] = set()
+
+    def resolve_call(m: _Module, owner: _Func, fnode: ast.AST
+                     ) -> tuple[str, str] | None:
+        if isinstance(fnode, ast.Name):
+            name = fnode.id
+            for c in owner.children:
+                if c.node.name == name:
+                    return (m.path, c.qualname)
+            if name in m.top_funcs:
+                return (m.path, m.top_funcs[name].qualname)
+            if name in m.func_imports:
+                src_mod, src_name = m.func_imports[name]
+                target = by_modname.get(src_mod)
+                if target and src_name in target.top_funcs:
+                    return (target.path, target.top_funcs[src_name].qualname)
+            return None
+        if isinstance(fnode, ast.Attribute) and isinstance(
+                fnode.value, ast.Name):
+            alias = m.mod_aliases.get(fnode.value.id)
+            target = by_modname.get(alias) if alias else None
+            if target and fnode.attr in target.top_funcs:
+                return (target.path, target.top_funcs[fnode.attr].qualname)
+        return None
+
+    for m in mods:
+        for key, f in list(units.items()):
+            if key[0] != m.path:
+                continue
+            if _jit_decorated(f.node):
+                roots.add(key)
+            if f.qualname in ("round_core", "build_chunk") and (
+                    m.modname or "").endswith((".engine", ".backend")):
+                roots.add(key)
+            for c in f.children:
+                edges[key].add((m.path, c.qualname))
+            for n in f.own_body_nodes():
+                if not isinstance(n, ast.Call):
+                    continue
+                if _dotted(n.func) in ("jax.jit", "jit") and n.args:
+                    tgt = resolve_call(m, f, n.args[0])
+                    if tgt:
+                        roots.add(tgt)
+                tgt = resolve_call(m, f, n.func)
+                if tgt:
+                    edges[key].add(tgt)
+
+    seen = set(roots)
+    stack = list(roots)
+    while stack:
+        cur = stack.pop()
+        for nxt in edges.get(cur, ()):
+            if nxt not in seen:
+                seen.add(nxt)
+                stack.append(nxt)
+    return seen
+
+
+def _collect_statics(fn: ast.FunctionDef, inherited: set[str]) -> set[str]:
+    """Params + locals assigned from static expressions (single forward
+    pass; nested defs excluded — they inherit the result)."""
+    static = set(inherited) | _static_params(fn)
+
+    def mark(target: ast.AST) -> None:
+        if isinstance(target, ast.Name):
+            static.add(target.id)
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for e in target.elts:
+                mark(e)
+
+    def scan(stmts: list[ast.stmt]) -> None:
+        for st in stmts:
+            if isinstance(st, (ast.FunctionDef, ast.AsyncFunctionDef,
+                               ast.ClassDef)):
+                continue
+            if isinstance(st, ast.Assign) and _is_static(st.value, static):
+                for t in st.targets:
+                    mark(t)
+            elif isinstance(st, ast.AnnAssign) and st.value is not None \
+                    and _is_static(st.value, static):
+                mark(st.target)
+            for field in ("body", "orelse", "finalbody"):
+                b = getattr(st, field, None)
+                if b:
+                    scan(b)
+            for h in getattr(st, "handlers", []):
+                scan(h.body)
+
+    scan(fn.body)
+    return static
+
+
+def _check_host_sync(mod: _Module, fn: _Func, inherited: set[str],
+                     out: list[Violation]) -> None:
+    numpy_aliases = {a for a, target in mod.mod_aliases.items()
+                     if target == "numpy"} | {"numpy"}
+    static = _collect_statics(fn.node, inherited)
+    for n in fn.own_body_nodes():
+        if not isinstance(n, ast.Call):
+            continue
+        line = n.lineno
+        if mod.allowed(line, "R2"):
+            continue
+        msg = None
+        d = _dotted(n.func)
+        if isinstance(n.func, ast.Attribute) and n.func.attr == "item" \
+                and not n.args:
+            msg = "`.item()` forces a device->host sync inside traced code"
+        elif d in ("jax.device_get", "device_get"):
+            msg = "`jax.device_get` blocks on device results in traced code"
+        elif d is not None and "." in d and d.split(".")[0] in numpy_aliases \
+                and d.split(".")[-1] in ("asarray", "array", "copy"):
+            msg = (f"`{d}` materializes a device array on host; use jnp or "
+                   f"move this out of the traced path")
+        elif isinstance(n.func, ast.Name) and n.func.id in ("float", "int",
+                                                            "bool") \
+                and n.args and not _is_static(n.args[0], static):
+            msg = (f"`{n.func.id}()` on a traced value concretizes it "
+                   f"(host sync / ConcretizationError)")
+        if msg:
+            out.append(Violation(
+                "R2", mod.path, line,
+                f"{msg} [in `{fn.qualname}`, reachable from a jit root]"))
+
+
+# ---------------------------------------------------------------------------
+# R3 — traced-value branching
+
+
+def _check_branches(mod: _Module, fn: _Func,
+                    inherited: set[str], out: list[Violation]) -> None:
+    static = set(inherited) | _static_params(fn.node)
+
+    def scan_body(stmts: list[ast.stmt]) -> None:
+        for st in stmts:
+            if isinstance(st, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue   # nested defs checked as their own units
+            if isinstance(st, ast.Assign):
+                if _is_static(st.value, static):
+                    for t in st.targets:
+                        _mark(t)
+            elif isinstance(st, ast.AnnAssign) and st.value is not None:
+                if _is_static(st.value, static):
+                    _mark(st.target)
+            if isinstance(st, ast.If):
+                check_test(st.test)
+                scan_body(st.body)
+                scan_body(st.orelse)
+                continue
+            for n in ast.iter_child_nodes(st):
+                scan_expr(n)
+            if isinstance(st, (ast.For, ast.AsyncFor, ast.While,
+                               ast.With, ast.AsyncWith, ast.Try)):
+                for body in _sub_bodies(st):
+                    scan_body(body)
+
+    def _sub_bodies(st: ast.stmt) -> list[list[ast.stmt]]:
+        bodies = []
+        for field in ("body", "orelse", "finalbody"):
+            b = getattr(st, field, None)
+            if b:
+                bodies.append(b)
+        for h in getattr(st, "handlers", []):
+            bodies.append(h.body)
+        return bodies
+
+    def _mark(target: ast.AST) -> None:
+        if isinstance(target, ast.Name):
+            static.add(target.id)
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for e in target.elts:
+                _mark(e)
+
+    def check_test(test: ast.expr) -> None:
+        if not _is_static(test, static) and not mod.allowed(test.lineno, "R3"):
+            out.append(Violation(
+                "R3", mod.path, test.lineno,
+                f"`if {ast.unparse(test)}` branches on a value not provably "
+                f"static under trace; use lax.cond/jnp.where, or mark with "
+                f"`# lint: static-branch` if it is config-static"))
+
+    def scan_expr(node: ast.AST) -> None:
+        for n in ast.walk(node):
+            if isinstance(n, ast.IfExp) and not _is_static(n.test, static) \
+                    and not mod.allowed(n.lineno, "R3"):
+                out.append(Violation(
+                    "R3", mod.path, n.lineno,
+                    f"conditional expression on non-static "
+                    f"`{ast.unparse(n.test)}`"))
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                return
+
+    scan_body(fn.node.body)
+    for child in fn.children:
+        _check_branches(mod, child, static, out)
+
+
+# ---------------------------------------------------------------------------
+# R4 / R5
+
+
+def _check_asserts(mod: _Module, out: list[Violation]) -> None:
+    for n in ast.walk(mod.tree):
+        if isinstance(n, ast.Assert):
+            out.append(Violation(
+                "R4", mod.path, n.lineno,
+                "bare `assert` in kernels/ — raise ValueError naming the "
+                "offending shapes/blocks (vanishes under python -O)"))
+
+
+def _check_defaults_and_import_time(mod: _Module,
+                                    out: list[Violation]) -> None:
+    for n in ast.walk(mod.tree):
+        if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+            defaults = list(n.args.defaults) + [
+                d for d in n.args.kw_defaults if d is not None]
+            for d in defaults:
+                if isinstance(d, (ast.List, ast.Dict, ast.Set)):
+                    out.append(Violation(
+                        "R5", mod.path, d.lineno,
+                        "mutable default argument (shared across calls); "
+                        "default to None and construct inside"))
+
+    def module_level(stmts: list[ast.stmt]) -> None:
+        for st in stmts:
+            if isinstance(st, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            if isinstance(st, ast.ClassDef):
+                module_level(st.body)
+                continue
+            for n in ast.walk(st):
+                if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                  ast.Lambda)):
+                    break
+                if isinstance(n, ast.Call):
+                    d = _dotted(n.func) or ""
+                    if (d.startswith(("jnp.", "jax.numpy."))
+                            and not mod.allowed(n.lineno, "R5")):
+                        out.append(Violation(
+                            "R5", mod.path, n.lineno,
+                            f"`{d}` at module import time places an array "
+                            f"(and initializes the platform) on import; "
+                            f"build it lazily"))
+
+    module_level(mod.tree.body)
+
+
+# ---------------------------------------------------------------------------
+# Drivers
+
+
+def _lint_modules(mods: list[_Module],
+                  rules: Iterable[str] | None = None) -> list[Violation]:
+    rules = set(rules or RULES)
+    out: list[Violation] = []
+    reachable = _reachable_units(mods) if "R2" in rules else set()
+
+    for m in mods:
+        all_units: list[_Func] = []
+
+        def flatten(f: _Func) -> None:
+            all_units.append(f)
+            for c in f.children:
+                flatten(c)
+        for f in m.funcs:
+            flatten(f)
+
+        module_static = {n.id for st in m.tree.body
+                         if isinstance(st, ast.Assign)
+                         for n in st.targets if isinstance(n, ast.Name)}
+        module_static |= set(m.mod_aliases) | set(m.func_imports)
+
+        if "R1" in rules:
+            for f in all_units:
+                _check_keys(m, f, out)
+        if "R2" in rules:
+            def sync_walk(f: _Func, inherited: set[str]) -> None:
+                if (m.path, f.qualname) in reachable:
+                    _check_host_sync(m, f, inherited, out)
+                statics = _collect_statics(f.node, inherited)
+                for c in f.children:
+                    sync_walk(c, statics)
+            for f in m.funcs:
+                sync_walk(f, module_static)
+        if "R3" in rules and _R3_MODULE_RE.search(m.path.replace("\\", "/")):
+            for f in m.funcs:
+                _check_branches(m, f, module_static, out)
+        if "R4" in rules and _R4_MODULE_RE.search(m.path.replace("\\", "/")):
+            _check_asserts(m, out)
+        if "R5" in rules:
+            _check_defaults_and_import_time(m, out)
+
+    return sorted(out, key=lambda v: (v.path, v.line, v.rule))
+
+
+def _modname_for(path: pathlib.Path) -> str | None:
+    parts = path.with_suffix("").parts
+    if "src" in parts:
+        parts = parts[parts.index("src") + 1:]
+    elif "repro" in parts:
+        parts = parts[parts.index("repro"):]
+    else:
+        return None
+    if parts and parts[-1] == "__init__":
+        parts = parts[:-1]
+    return ".".join(parts) if parts else None
+
+
+def lint_paths(paths: Iterable[str | pathlib.Path],
+               rules: Iterable[str] | None = None) -> list[Violation]:
+    """Lint every .py file under the given paths with cross-file R2
+    reachability. Returns violations sorted by (path, line)."""
+    files: list[pathlib.Path] = []
+    for p in paths:
+        p = pathlib.Path(p)
+        if p.is_dir():
+            files.extend(sorted(p.rglob("*.py")))
+        elif p.suffix == ".py":
+            files.append(p)
+    mods = []
+    for f in files:
+        src = f.read_text()
+        mods.append(_parse_module(src, str(f), _modname_for(f)))
+    return _lint_modules(mods, rules)
+
+
+def lint_source(source: str, path: str = "<memory>",
+                rules: Iterable[str] | None = None) -> list[Violation]:
+    """Lint a single in-memory module (fixture/test entry point).
+
+    R2 reachability is computed within the snippet alone; R3/R4 scoping by
+    module path applies, so pass e.g. ``path="kernels/foo.py"`` to put the
+    snippet in kernel scope.
+    """
+    return _lint_modules([_parse_module(source, path, None)], rules)
+
+
+def main(argv: list[str] | None = None) -> int:
+    import argparse
+
+    ap = argparse.ArgumentParser(prog="repro.analysis.lint",
+                                 description=__doc__.splitlines()[0])
+    ap.add_argument("paths", nargs="*",
+                    default=["src/repro", "examples", "benchmarks"])
+    ap.add_argument("--rules", default=",".join(RULES),
+                    help="comma-separated subset of R1..R5")
+    args = ap.parse_args(argv)
+
+    violations = lint_paths(args.paths, rules=args.rules.split(","))
+    for v in violations:
+        print(v)
+    print(f"repro.analysis.lint: {len(violations)} violation(s) "
+          f"in {len(args.paths)} root(s)")
+    return 1 if violations else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -406,7 +406,7 @@ def round_core(cfg: EngineConfig, grad_fn: Callable, loss_and_acc_fn: Callable,
             lambda hs, d: hs - (alpha / n_total)
             * jnp.einsum("c,c...->...", act, d),
             _m(state["client_state"]["shared"]["h"]), drift)
-        if alpha > 0:  # static branch: at alpha == 0, h is identically zero
+        if alpha > 0:  # lint: static-branch (at alpha == 0, h is identically zero)
             w_half = jax.tree.map(
                 lambda wh, hs: (wh.astype(jnp.float32) - hs / alpha
                                 ).astype(wh.dtype), w_half, h_shared_new)

@@ -341,7 +341,10 @@ def filter_masks(params: Any, spec: PruneSpec, kept: Mapping[str, np.ndarray]) -
     for l in spec.layers:
         d = get_path(params, l.weight).shape[l.filter_axis]
         m = np.zeros((d,), np.float32)
-        m[np.asarray(kept.get(l.name, np.arange(d)))] = 1.0
+        # `kept` is a host-resident index mapping (never traced), so this
+        # numpy work constant-folds at trace time.
+        idx = np.asarray(kept.get(l.name, np.arange(d)))  # lint: host-sync-ok
+        m[idx] = 1.0
         masks[l.name] = jnp.asarray(m)
     return masks
 

@@ -60,7 +60,18 @@ def decode_attention(q, k, v, *, block_k: int = 512, interpret: bool = False):
     """
     b, one, h, hd = q.shape
     s_len, kvh = k.shape[1], k.shape[2]
-    assert one == 1 and h % kvh == 0 and s_len % block_k == 0
+    if one != 1:
+        raise ValueError(
+            f"decode_attention: q must carry a single decode step, got "
+            f"q {q.shape} (expected [B, 1, H, hd])")
+    if h % kvh != 0:
+        raise ValueError(
+            f"decode_attention: query heads H={h} must be a multiple of "
+            f"kv heads KV={kvh} (q {q.shape}, k {k.shape})")
+    if s_len % block_k != 0:
+        raise ValueError(
+            f"decode_attention: cache length S={s_len} must be a multiple "
+            f"of block_k={block_k} (k {k.shape})")
     g = h // kvh
     sm_scale = 1.0 / math.sqrt(hd)
     nk = s_len // block_k

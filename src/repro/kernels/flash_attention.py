@@ -78,7 +78,16 @@ def flash_attention(q, k, v, *, causal: bool = True, window=None,
     """
     b, sq, h, hd = q.shape
     skv, kvh = k.shape[1], k.shape[2]
-    assert h % kvh == 0 and sq % block_q == 0 and skv % block_k == 0
+    if h % kvh != 0:
+        raise ValueError(
+            f"flash_attention: query heads H={h} must be a multiple of "
+            f"kv heads KV={kvh} (q {q.shape}, k {k.shape})")
+    if sq % block_q != 0 or skv % block_k != 0:
+        raise ValueError(
+            f"flash_attention: Sq={sq} must be a multiple of "
+            f"block_q={block_q} and Skv={skv} a multiple of "
+            f"block_k={block_k}; callers pad "
+            f"(q {q.shape}, k {k.shape})")
     sm_scale = 1.0 / math.sqrt(hd)
     nq, nk = sq // block_q, skv // block_k
 

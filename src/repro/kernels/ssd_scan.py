@@ -74,7 +74,10 @@ def ssd_scan(x, bmat, cmat, dt, a_log, d, dt_bias, *, chunk: int = 128,
     """x [B,S,nh,p], bmat/cmat [B,S,N], dt [B,S,nh] -> y [B,S,nh,p]."""
     bsz, s, nh, p = x.shape
     n = bmat.shape[-1]
-    assert s % chunk == 0
+    if s % chunk != 0:
+        raise ValueError(
+            f"ssd_scan: sequence length S={s} must be a multiple of "
+            f"chunk={chunk} (x {x.shape})")
     nchunk = s // chunk
 
     kernel = functools.partial(_ssd_kernel, chunk=chunk)

@@ -34,6 +34,7 @@ from repro.core import (
     ref_engine,
     feddumap_config,
 )
+from repro.analysis.compile_budget import expected_programs
 from repro.core.backend import sim_sample_kw
 from repro.core.fedap import fedap_decision, fedap_decision_sharded
 from repro.core.ref_engine import SoftmaxRegression
@@ -331,7 +332,11 @@ class TestMeshFullPlan:
         injection (steps.with_masks) must not re-lower the mesh program."""
         tr_m, res_m, _ = runs
         be = tr_m.backend(use_masks=True)
-        assert be.chunk._cache_size() == len(FULL_PLAN.chunk_lengths())
+        # budgeted in repro/analysis/compile_budget.json: the mask-mode
+        # prune adds ZERO mesh programs
+        assert be.chunk._cache_size() == expected_programs("mesh/prune_mask")
+        assert expected_programs("mesh/prune_mask") \
+            == len(FULL_PLAN.chunk_lengths())
 
     def test_state_and_data_shardings(self, runs):
         tr_m, res_m, _ = runs
@@ -576,7 +581,9 @@ class TestShardedShrink:
             np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                        atol=1e-5)
         be = tr_m.backend(use_masks=True)
-        assert be.chunk._cache_size() == 2      # pre-shrink + post-shrink
+        # pre-shrink + post-shrink, budgeted in compile_budget.json
+        assert be.chunk._cache_size() \
+            == expected_programs("mesh/mask_then_shrink")
 
 
 # ---------------------------------------------------------------------------

@@ -28,6 +28,7 @@ from repro.core import (
     feddumap_config,
     pruning,
 )
+from repro.analysis.compile_budget import expected_programs
 from repro.core.fedap import fedap_decision
 from repro.data import build_federated_data
 from repro.data.synthetic import SyntheticSpec
@@ -259,10 +260,14 @@ class TestFedAPPlan:
     def test_masked_plan_never_rejits(self, tiny_world, pruned_runs):
         """Every round of the masked plan runs inside compiled scan chunks:
         the chunk program traces once per distinct chunk length and the
-        prune event adds NO new trace (static shapes, masks in the carry)."""
+        prune event adds NO new trace (static shapes, masks in the carry).
+        The expected count comes from the audited compile budget
+        (repro/analysis/compile_budget.json), not an inline number."""
         (tr, plan, _), _ = pruned_runs
         ce = tr._compiled(use_masks=True)
-        assert ce.chunk._cache_size() == len(plan.chunk_lengths())
+        assert ce.chunk._cache_size() == expected_programs("local/prune_mask")
+        assert expected_programs("local/prune_mask") \
+            == len(plan.chunk_lengths())
 
     def test_masked_artifacts_and_zeroed_params(self, pruned_runs):
         (_, _, res_m), _ = pruned_runs
@@ -529,8 +534,10 @@ class TestMaskedComputeKernel:
                 np.asarray(fm),
                 np.asarray(res_k.artifacts["prune"]["filter_masks"][name]))
         # the prune event swapped carry contents only — one chunk program
+        # (budgeted in repro/analysis/compile_budget.json)
         ce = tr._compiled(use_masks=True)
-        assert ce.chunk._cache_size() == len(plan.chunk_lengths())
+        assert ce.chunk._cache_size() \
+            == expected_programs("local/prune_mask_kernel")
 
     def test_shrink_after_mask_in_kernel_mode(self, tiny_world):
         """The ROADMAP's mask-now-shrink-later pattern must run in kernel
