@@ -73,6 +73,15 @@ half its filter blocks pruned: the Pallas masked_matmul path
 CPU container the kernel runs in INTERPRET mode, so wall times measure
 dispatch overhead, not MXU work — the hardware claim is the analytic
 FLOP reduction, which the record carries alongside the timings.
+
+Masked-LM-training benchmark (emits BENCH_masked_lm_train.json):
+
+  PYTHONPATH=src python -m benchmarks.perf_iter --masked-lm-train
+
+the same kernel-vs-dense-masked split on the 128-aligned tiny
+transformer at FedAP prune rate 0.5: the FFN wi/wg matmuls route
+through the block-skipping masked_dense with the keep-masks riding the
+layer scan.  Same CPU-interpret timing caveat.
 """
 import argparse
 import dataclasses
@@ -756,6 +765,116 @@ def bench_masked_train(out_dir: str, *, steps: int = 5,
     return rec
 
 
+def bench_masked_lm_train(out_dir: str, *, steps: int = 3,
+                          prune_rate: float = 0.5) -> dict:
+    """One masked LM TRAINING step on the 128-aligned tiny transformer:
+    the Pallas masked-FFN path (``masked_compute="kernel"``: wi/wg routed
+    through ``masked_dense`` with the FedAP keep-masks riding the layer
+    scan) vs the dense-masked path (``masked_compute="params"``:
+    full-density matmuls on elementwise-masked params).
+
+    Same claim split as BENCH_masked_train.json: on this CPU container
+    the kernel executes in Pallas INTERPRET mode, so wall times measure
+    dispatch overhead — the hardware claim is the analytic FFN-matmul
+    FLOP reduction the block-skip kernel realizes on the MXU.
+    """
+    import time
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs.base import ModelConfig
+    from repro.models.lm import LM
+
+    layers, d_model, d_ff, vocab = 2, 128, 512, 2048
+    batch, seq = 4, 16
+    model = LM(ModelConfig(name="dense-tiny", family="dense", rope="1d",
+                           norm="rmsnorm", act="silu",
+                           param_dtype="float32", remat="none",
+                           num_layers=layers, d_model=d_model, num_heads=4,
+                           num_kv_heads=2, d_ff=d_ff, vocab_size=vocab))
+    params = model.init(jax.random.key(0))
+    kept = model.decide_kept(params, prune_rate)     # 128-lane-aligned
+    fmasks = model.filter_masks(params, kept)
+    pmasks = model.param_masks(params, kept)
+    kept_frac = int(np.asarray(kept["mlp"]).shape[-1]) / d_ff
+
+    rng = np.random.default_rng(1)
+    toks = rng.integers(0, vocab, (batch, seq + 1))
+    bdict = {"tokens": jnp.asarray(toks[:, :-1], jnp.int32),
+             "labels": jnp.asarray(toks[:, 1:], jnp.int32)}
+
+    def loss_kernel(p):
+        return model.loss(p, bdict, masks=fmasks)
+
+    def loss_dense(p):
+        return model.loss(jax.tree.map(jnp.multiply, p, pmasks), bdict)
+
+    def sgd(loss_fn):
+        @jax.jit
+        def step(p):
+            g = jax.grad(loss_fn)(p)
+            return jax.tree.map(lambda pi, gi: pi - 0.01 * gi, p, g)
+        return step
+
+    def timed(step):
+        p = jax.tree.map(jnp.copy, params)
+        p = step(p)                                   # compile
+        jax.block_until_ready(p)
+        t0 = time.perf_counter()
+        for _ in range(steps):
+            p = step(p)
+        jax.block_until_ready(p)
+        return (time.perf_counter() - t0) / steps
+
+    kernel_s = timed(sgd(loss_kernel))
+    dense_s = timed(sgd(loss_dense))
+
+    # analytic FFN training-matmul FLOPs per step (fwd + dx + dw are each
+    # 2*T*K*N MACs): the kernel skips the pruned 128-column blocks of
+    # wi/wg; wo stays dense in mask mode (its K-dim rows are zero, not
+    # absent).  Attention/embedding matmuls are identical on both paths
+    # and excluded from the comparison.
+    tokens = batch * seq
+    per_matmul = 3 * 2 * tokens * d_model * d_ff
+    flops_dense = layers * 3 * per_matmul                # wi + wg + wo
+    flops_masked = layers * (2 * kept_frac + 1) * per_matmul
+
+    rec = {
+        "bench": "masked_lm_train",
+        "model": {"num_layers": layers, "d_model": d_model, "d_ff": d_ff,
+                  "vocab_size": vocab, "batch": batch, "seq": seq,
+                  "align": 128},
+        "prune_rate": prune_rate,
+        "kept_unit_fraction": kept_frac,
+        "steps": steps,
+        "kernel_step_s": kernel_s,
+        "dense_masked_step_s": dense_s,
+        "timing_note": "kernel path runs in Pallas INTERPRET mode on this "
+                       "CPU container; wall times measure dispatch/python "
+                       "overhead, not MXU block-skipping",
+        "ffn_train_matmul_flops_dense": flops_dense,
+        "ffn_train_matmul_flops_masked_kernel": flops_masked,
+        "flop_reduction": 1.0 - flops_masked / flops_dense,
+        "flop_note": "FFN matmuls only (wi/wg block-skipped, wo dense); "
+                     "attention and embedding matmuls are identical on "
+                     "both paths",
+    }
+    out = Path(out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+    path = out / "BENCH_masked_lm_train.json"
+    path.write_text(json.dumps(rec, indent=2))
+    print(f"masked_lm_train: kernel(step, interpret) {kernel_s * 1e3:.1f} ms"
+          f"  dense-masked(step) {dense_s * 1e3:.1f} ms")
+    print(f"masked_lm_train: analytic FFN train-matmul FLOPs "
+          f"{flops_dense / 1e6:.1f}M -> {flops_masked / 1e6:.1f}M "
+          f"({rec['flop_reduction'] * 100:.1f}% reduction at prune rate "
+          f"{prune_rate})")
+    print(f"-> {path}")
+    return rec
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch")
@@ -777,6 +896,10 @@ def main():
     ap.add_argument("--masked-train", action="store_true",
                     help="training step: Pallas masked-matmul kernel vs. "
                          "dense-masked, + analytic FLOP reduction")
+    ap.add_argument("--masked-lm-train", action="store_true",
+                    help="LM training step on the 128-aligned tiny "
+                         "transformer: masked-FFN kernel path vs. "
+                         "dense-masked params, + analytic FLOP reduction")
     ap.add_argument("--rounds", type=int, default=None,
                     help="override the per-benchmark default round count")
     ap.add_argument("--out", default="benchmarks/results/perf")
@@ -804,10 +927,14 @@ def main():
     if args.masked_train:
         bench_masked_train(args.out)
         return
+    if args.masked_lm_train:
+        bench_masked_lm_train(args.out)
+        return
     if not (args.arch and args.shape and args.variant):
         ap.error("--arch/--shape/--variant are required unless one of "
                  "--fl-engine/--fedap-plan/--mesh-backend/"
-                 "--mesh-server-eval/--masked-train is given")
+                 "--mesh-server-eval/--masked-train/--masked-lm-train "
+                 "is given")
 
     spec = VARIANTS[args.variant]
     for k, v in spec.get("env", {}).items():

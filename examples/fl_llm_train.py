@@ -1,28 +1,47 @@
-"""End-to-end driver: federated training of a transformer LM with FedDUMAP.
+"""Federated LM fine-tuning on the unified executor: TrainPlan in, RunResult out.
 
-This runs the SAME pod-scale FL train step that the multi-pod dry-run
-lowers (repro.launch.steps.make_fl_train_step) on this host's devices, with
-a small dense LM over synthetic topic-skewed token streams: 4 clients with
-non-IID topic mixtures + IID server data, restart-SGDM locally, FedDU
-dynamic server update + FedDUM server momentum every round.
+The transformer LM runs the SAME TrainPlan/PlanExecutor stack as the CNN
+repro — one driver for both model families:
 
-  PYTHONPATH=src python examples/fl_llm_train.py --rounds 50 --scale 25m
+  * :func:`repro.data.pipeline.build_lm_federated_data` transplants the
+    paper's Section-4.1 protocol to a next-token corpus (sequences
+    label-shard partitioned by TOPIC over the clients, IID-controllable
+    server pool, held-out test split);
+  * :class:`repro.models.lm.LM` plugs into the executor through the
+    simulation-model contract (``loss_and_acc(params, x, y, masks=)``),
+    so ``FederatedTrainer`` drives it over the local scan backend or —
+    ``--backend mesh`` — client-sharded over a device mesh, unchanged;
+  * ``--prune-round K`` schedules FedAP as a first-class ``Prune`` event
+    (:func:`repro.core.plan.fedap_plan`): the layer-adaptive decision
+    (Fisher eigen-gap rates -> Formula 15 -> uniform 128-lane-aligned
+    FFN-unit selection, ``core.pruning_lm``) is injected as keep-masks
+    carried in the scan — structure fixed from round 0, zero re-jit —
+    or re-materializes the smaller stack with ``--prune-mode shrink``;
+  * ``--masked-compute kernel`` additionally routes the masked FFN
+    matmuls through the differentiable Pallas ``masked_matmul`` kernel
+    (pruned 128-column blocks skipped on the MXU; set
+    ``REPRO_PALLAS_INTERPRET=1`` on CPU).
 
---scale 100m trains a ~100M-parameter model (slow on CPU; the default 25m
-finishes in minutes).
+Examples::
+
+  PYTHONPATH=src python examples/fl_llm_train.py --rounds 20 --scale tiny
+  PYTHONPATH=src python examples/fl_llm_train.py --rounds 10 \
+      --prune-round 5 --prune-mode mask
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
+      python examples/fl_llm_train.py --rounds 4 --backend mesh
+
+--scale 25m/100m train larger models (slow on CPU; tiny finishes in
+seconds per round).
 """
 import argparse
-import dataclasses
-import time
-
-import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core import niid
-from repro.data.synthetic import TokenSpec, synthetic_tokens
-from repro.launch.steps import FLRunConfig, make_fl_train_step
+from repro.core.plan import TrainPlan, fedap_plan
+from repro.core.pruning import FedAPConfig
+from repro.core.rounds import FederatedTrainer, feddumap_config
+from repro.data.pipeline import build_lm_federated_data
+from repro.data.synthetic import TokenSpec
+from repro.models.lm import LM
 
 SCALES = {
     "tiny": dict(num_layers=2, d_model=128, num_heads=4, num_kv_heads=2,
@@ -36,77 +55,71 @@ SCALES = {
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--rounds", type=int, default=50)
-    ap.add_argument("--scale", default="25m", choices=list(SCALES))
-    ap.add_argument("--clients", type=int, default=4)
-    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--rounds", type=int, default=20)
+    ap.add_argument("--scale", default="tiny", choices=list(SCALES))
+    ap.add_argument("--backend", default="local", choices=("local", "mesh"))
+    ap.add_argument("--clients", type=int, default=8)
+    ap.add_argument("--clients-per-round", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--sequences", type=int, default=512)
     ap.add_argument("--batch", type=int, default=4, help="per-client batch")
-    ap.add_argument("--local-steps", type=int, default=2)
+    ap.add_argument("--local-epochs", type=int, default=1)
+    ap.add_argument("--eval-every", type=int, default=5)
+    ap.add_argument("--prune-round", type=int, default=0,
+                    help="0 = no FedAP event")
+    ap.add_argument("--prune-mode", default="mask",
+                    choices=("mask", "shrink"))
+    ap.add_argument("--masked-compute", default="params",
+                    choices=("params", "kernel"))
+    ap.add_argument("--prune-floor", type=float, default=0.5,
+                    help="FedAPConfig.min_rate compression-budget floor")
     args = ap.parse_args()
 
-    cfg = ModelConfig(name=f"dense-{args.scale}", family="dense",
-                      rope="1d", norm="rmsnorm", act="silu",
-                      param_dtype="float32", remat="none",
-                      **SCALES[args.scale])
-    run = FLRunConfig(lr=3e-3, local_steps=args.local_steps, server_tau=1,
-                      server_batch=args.batch)
-    init_state, train_step = make_fl_train_step(cfg, run, args.clients)
-    train_step = jax.jit(train_step)
+    mcfg = ModelConfig(name=f"dense-{args.scale}", family="dense",
+                       rope="1d", norm="rmsnorm", act="silu",
+                       param_dtype="float32", remat="none",
+                       **SCALES[args.scale])
+    model = LM(mcfg)
+    data = build_lm_federated_data(
+        num_clients=args.clients,
+        spec=TokenSpec(vocab_size=mcfg.vocab_size,
+                       num_topics=2 * args.clients,
+                       seq_len=args.seq + 1,
+                       num_sequences=args.sequences))
 
-    # topic-skewed client corpora: client k sees mostly topics {k, k+1}
-    tokens, topics = synthetic_tokens(TokenSpec(
-        vocab_size=cfg.vocab_size, num_topics=args.clients * 2,
-        seq_len=args.seq + 1, num_sequences=4096))
-    per_client = []
-    dists = []
-    for k in range(args.clients):
-        mask = np.isin(topics, [2 * k, 2 * k + 1])
-        per_client.append(tokens[mask])
-        dists.append(np.bincount(topics[mask], minlength=args.clients * 2))
-    dists = np.stack(dists).astype(np.float32)
-    dists /= dists.sum(1, keepdims=True)
-    sizes = np.asarray([len(c) for c in per_client], np.float32)
-    p_bar = niid.global_distribution(jnp.asarray(dists), jnp.asarray(sizes))
-    d_server = float(niid.non_iid_degree(
-        jnp.asarray(np.bincount(topics, minlength=args.clients * 2)
-                    / len(topics), jnp.float32), p_bar))
-    d_round = float(jnp.mean(jnp.stack(
-        [niid.non_iid_degree(jnp.asarray(d), p_bar) for d in dists])))
+    cfg = feddumap_config(
+        num_clients=args.clients,
+        clients_per_round=args.clients_per_round,
+        local_epochs=args.local_epochs,
+        batch_size=args.batch,
+        server_batch_size=2 * args.batch,
+        lr=3e-3, lr_decay=1.0,
+        masked_compute=args.masked_compute,
+        # the FFN stack prunes at the 128-lane boundary (core.pruning_lm's
+        # uniform kept count); the floor guarantees a visible compression
+        fedap=FedAPConfig(align=128, min_rate=args.prune_floor,
+                          probe_size=8,
+                          participants=min(4, args.clients)))
+    trainer = FederatedTrainer(model, data, cfg, backend=args.backend)
 
-    rng = np.random.default_rng(0)
-    state = init_state(jax.random.key(0))
+    if args.prune_round:
+        plan = fedap_plan(args.rounds, prune_round=args.prune_round,
+                          mode=args.prune_mode, eval_every=args.eval_every)
+    else:
+        plan = TrainPlan.standard(args.rounds, eval_every=args.eval_every)
 
-    def sample_round():
-        def batch_from(pool, lead):
-            idx = rng.integers(0, len(pool), lead + (args.batch,))
-            seqs = pool[idx]
-            return {"tokens": jnp.asarray(seqs[..., :-1]),
-                    "labels": jnp.asarray(seqs[..., 1:])}
-
-        client = jax.tree.map(
-            lambda *xs: jnp.stack(xs),
-            *[batch_from(per_client[k], (args.local_steps,))
-              for k in range(args.clients)])
-        server = batch_from(tokens, (run.server_tau,))
-        return {"client": client, "server": server,
-                "sizes": jnp.asarray(sizes),
-                "d_round": jnp.float32(d_round),
-                "d_server": jnp.float32(d_server),
-                "n0": jnp.float32(len(tokens))}
-
-    t0 = time.time()
-    for r in range(args.rounds):
-        state, t_eff = train_step(state, sample_round())
-        if r % 5 == 0 or r == args.rounds - 1:
-            # eval loss on held-out server batch
-            from repro.models.api import build_model
-            model = build_model(cfg)
-            b = sample_round()["server"]
-            loss = model.loss(state["params"],
-                              jax.tree.map(lambda x: x[0], b))
-            print(f"round {r:>3}  loss {float(loss):.4f}  "
-                  f"tau_eff {float(t_eff):.3f}  ({time.time() - t0:.0f}s)",
-                  flush=True)
+    res = trainer.run(plan)
+    for r, loss, acc, tau, dt in zip(res.history["round"],
+                                     res.history["loss"],
+                                     res.history["acc"],
+                                     res.history["tau_eff"],
+                                     res.history["time"]):
+        print(f"round {r:>3}  loss {loss:.4f}  token-acc {acc:.4f}  "
+              f"tau_eff {tau:.3f}  ({dt:.0f}s)", flush=True)
+    if args.prune_round:
+        art = res.artifacts["prune"]
+        print(f"FedAP: p*={art['p_star']:.3f}  "
+              f"kept={art['kept_counts']}  mode={art['mode']}")
 
 
 if __name__ == "__main__":

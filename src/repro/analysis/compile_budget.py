@@ -6,7 +6,8 @@ combination — prune-mask events, snapshots, callbacks and evals must add
 ZERO chunk traces, and a shrink event exactly ONE (the post-shrink
 shapes).  This module runs the canonical plans (Scan / Eval / Prune-mask /
 Prune-shrink / Snapshot, on both the local scan backend and the
-client-sharded mesh backend) under a jit-cache counter and diffs the
+client-sharded mesh backend, for the CNN *and* the transformer-LM
+worlds) under a jit-cache counter and diffs the
 lowered-program counts against the checked-in ``compile_budget.json``
 baseline.  Any unexpected re-trace fails naming the scenario and the plan
 event after which the count jumped.
@@ -51,6 +52,7 @@ class Scenario:
     backend: str                       # "local" | "mesh"
     plan_factory: Callable[[], Any]    # () -> TrainPlan
     masked_compute: str = "params"
+    world: str = "cnn"                 # "cnn" | "lm" (make_world kind)
     note: str = ""
 
 
@@ -89,13 +91,51 @@ def scenarios() -> list[Scenario]:
                             masked_compute="kernel",
                             note="masked_compute=kernel routes matmuls "
                                  "through the Pallas masked kernel"))
+        # The LM leg of the zero-re-lowering contract: the FedAP FFN-unit
+        # keep-masks ride the layer scan as zipped xs, so a mask-mode
+        # Prune event on the transformer must add ZERO chunk programs —
+        # same budget as the CNN, same plan, different model family.
+        out.append(Scenario(f"{backend}/lm_prune_mask", backend,
+                            _plans()["prune_mask"], world="lm",
+                            note="transformer LM; FFN keep-masks carried "
+                                 "in the layer scan"))
+        out.append(Scenario(f"{backend}/lm_prune_mask_kernel", backend,
+                            _plans()["prune_mask"],
+                            masked_compute="kernel", world="lm",
+                            note="transformer LM with the masked FFN "
+                                 "matmuls routed through the Pallas "
+                                 "masked kernel"))
     return out
 
 
-def make_world():
-    """The canonical tiny CNN world (mirrors the tier-1 fixtures: 8
-    clients, 8x8x3 synthetic data, a (4,8,8)-channel SimpleCNN)."""
+def make_world(kind: str = "cnn"):
+    """The canonical tiny world for ``kind``:
+
+    * ``"cnn"`` — mirrors the tier-1 fixtures: 8 clients, 8x8x3
+      synthetic data (drives a (4,8,8)-channel SimpleCNN);
+    * ``"lm"`` — the tiny next-token corpus: 8 clients, topic
+      label-shard partitioned 16-token sequences (drives a 2-layer
+      d_model=128 transformer with a 128-lane-aligned d_ff=512 FFN).
+    """
     from repro.core import FedAPConfig, feddumap_config
+
+    if kind == "lm":
+        from repro.data.pipeline import build_lm_federated_data
+        from repro.data.synthetic import TokenSpec
+
+        data = build_lm_federated_data(
+            num_clients=8,
+            spec=TokenSpec(vocab_size=2048, num_topics=16, seq_len=17,
+                           num_sequences=256))
+        apcfg = FedAPConfig(prune_round=2, align=128, probe_size=4,
+                            participants=2, min_rate=0.5)
+        cfg = feddumap_config(num_clients=8, clients_per_round=4,
+                              local_epochs=1, batch_size=4,
+                              server_batch_size=8, lr=3e-3, lr_decay=1.0,
+                              fedap=apcfg)
+        return data, cfg
+    if kind != "cnn":
+        raise ValueError(f"unknown world kind {kind!r}")
     from repro.data import build_federated_data
     from repro.data.synthetic import SyntheticSpec
 
@@ -110,10 +150,19 @@ def make_world():
     return data, cfg
 
 
-def _fresh_model():
+def _fresh_model(kind: str = "cnn"):
     """A NEW model instance per scenario: the session compile cache is
     keyed on the model object, so each scenario gets a zeroed jit-cache
     counter."""
+    if kind == "lm":
+        from repro.configs.base import ModelConfig
+        from repro.models.lm import LM
+
+        return LM(ModelConfig(name="dense-tiny", family="dense", rope="1d",
+                              norm="rmsnorm", act="silu",
+                              param_dtype="float32", remat="none",
+                              num_layers=2, d_model=128, num_heads=4,
+                              num_kv_heads=2, d_ff=512, vocab_size=2048))
     from repro.models import SimpleCNN
 
     return SimpleCNN(num_classes=10, image_shape=(8, 8, 3),
@@ -163,6 +212,13 @@ class _RecordingBackend:
             self._record("Snapshot")
         return out
 
+    def snapshot_artifact(self, state, t):
+        # Snapshot plan events go through the donation-aware artifact
+        # path, not snapshot(); record them under the same label.
+        out = self._inner.snapshot_artifact(state, t)
+        self._record("Snapshot")
+        return out
+
 
 @dataclasses.dataclass
 class ScenarioResult:
@@ -179,10 +235,10 @@ def run_scenario(sc: Scenario, world=None) -> ScenarioResult:
     from repro.core import FederatedTrainer
     from repro.core.backend import PlanExecutor
 
-    data, cfg = world if world is not None else make_world()
+    data, cfg = world if world is not None else make_world(sc.world)
     if sc.masked_compute != "params":
         cfg = _dc.replace(cfg, masked_compute=sc.masked_compute)
-    model = _fresh_model()
+    model = _fresh_model(sc.world)
     plan = sc.plan_factory()
     tr = FederatedTrainer(model, data, cfg, backend=sc.backend)
     be = tr.backend(use_masks=plan.uses_masks)
@@ -202,20 +258,22 @@ def check(budget: dict | None = None,
           scenario_list: list[Scenario] | None = None,
           world=None) -> list[str]:
     """Run every scenario and diff against the baseline.  Returns a list
-    of failure messages (empty == within budget)."""
+    of failure messages (empty == within budget).  ``world``, when given,
+    is the shared CNN world; other world kinds are built on first use."""
     budget = budget if budget is not None else load_budget()
     expected_map = budget["scenarios"]
     errors = []
     results = []
-    if world is None:
-        world = make_world()
+    worlds = {} if world is None else {"cnn": world}
     for sc in (scenario_list if scenario_list is not None else scenarios()):
         if sc.name not in expected_map:
             errors.append(
                 f"{sc.name}: scenario missing from compile_budget.json — "
                 f"regenerate with --update if this is intentional")
             continue
-        res = run_scenario(sc, world=world)
+        if sc.world not in worlds:
+            worlds[sc.world] = make_world(sc.world)
+        res = run_scenario(sc, world=worlds[sc.world])
         results.append(res)
         want = int(expected_map[sc.name]["programs"])
         if res.programs != want:
@@ -232,7 +290,7 @@ def check(budget: dict | None = None,
 
 
 def update(path: pathlib.Path | str | None = None) -> dict:
-    world = make_world()
+    worlds = {}
     budget = {
         "_comment": [
             "Expected lowered chunk-program counts per canonical plan",
@@ -250,7 +308,9 @@ def update(path: pathlib.Path | str | None = None) -> dict:
     if "hlo" in old:
         budget["hlo"] = old["hlo"]
     for sc in scenarios():
-        res = run_scenario(sc, world=world)
+        if sc.world not in worlds:
+            worlds[sc.world] = make_world(sc.world)
+        res = run_scenario(sc, world=worlds[sc.world])
         budget["scenarios"][res.name] = {
             "programs": res.programs,
             "timeline": [f"{ev}={count}" for ev, count in res.timeline],

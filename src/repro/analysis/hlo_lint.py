@@ -7,7 +7,9 @@ Checked invariants:
   float64 promotion silently doubles bandwidth and falls off the fast
   unit paths);
 * **No collectives** in the :class:`LocalScanBackend` program — the
-  single-device scan must be communication-free;
+  single-device scan must be communication-free (checked for BOTH
+  canonical worlds: the CNN chunk and the transformer-LM chunk, whose
+  layer scan carries the FFN keep-masks as zipped xs);
 * **No host callbacks / infeed / outfeed** inside any lowered program —
   a `io_callback`/`debug.print` smuggled into the scan body would stall
   every round on the host;
@@ -122,16 +124,17 @@ def mesh_all_reduce_profile(cm, *, length: int, server_tau: int) -> dict:
 # Lowering the canonical chunks
 
 
-def _lower_chunk(backend_name: str, world=None) -> tuple[str, dict]:
+def _lower_chunk(backend_name: str, world=None, *, kind: str = "cnn",
+                 use_masks: bool = False) -> tuple[str, dict]:
     """Optimized HLO text of the canonical chunk + the world's sample_kw."""
     import jax
 
     from repro.core import FederatedTrainer
 
-    data, cfg = world if world is not None else make_world()
-    model = _fresh_model()
+    data, cfg = world if world is not None else make_world(kind)
+    model = _fresh_model(kind)
     tr = FederatedTrainer(model, data, cfg, backend=backend_name)
-    be = tr.backend()
+    be = tr.backend(use_masks=use_masks)
     state = be.init_state(model.init(jax.random.key(cfg.seed)))
     d = be.device_data()
     key = jax.random.key(cfg.seed + 1)
@@ -169,6 +172,22 @@ def check(budget: dict | None = None, world=None) -> list[str]:
     if coll:
         errors.append(f"local chunk: collectives in the single-device scan "
                       f"program: {coll}")
+
+    # ---- LM local program: the transformer chunk (layer scan carrying
+    # the FFN keep-masks) must stay collective-free and clean too --------
+    txt_lm, _ = _lower_chunk("local", kind="lm", use_masks=True)
+    if f64_ops(txt_lm):
+        errors.append(f"LM local chunk: {f64_ops(txt_lm)} f64 tensor "
+                      f"reference(s) leaked into the f32 training graph")
+    cbs = host_callbacks(txt_lm)
+    if cbs:
+        errors.append(f"LM local chunk: host callback ops in lowered "
+                      f"program: {cbs}")
+    coll_lm = dict(
+        hlo_cost.HloCostModel(txt_lm).entry_cost().collective_counts)
+    if coll_lm:
+        errors.append(f"LM local chunk: collectives in the single-device "
+                      f"scan program: {coll_lm}")
 
     # ---- mesh program: all-reduce budget (needs a real mesh) --------------
     if len(jax.devices()) < 2:
@@ -247,6 +266,9 @@ def update(world=None) -> dict:
     cm = hlo_cost.HloCostModel(txt)
     prof = mesh_all_reduce_profile(cm, length=CHUNK_LEN,
                                    server_tau=sample_kw["server_tau"])
+    txt_lm, _ = _lower_chunk("local", kind="lm", use_masks=True)
+    lm_coll = dict(
+        hlo_cost.HloCostModel(txt_lm).entry_cost().collective_counts)
     budget = load_budget()
     budget["hlo"] = {
         "_comment": [
@@ -259,6 +281,7 @@ def update(world=None) -> dict:
         ],
         "mesh": {k: v for k, v in prof.items()},
         "local": {"collectives": 0},
+        "lm_local": {"collectives": sum(lm_coll.values())},
     }
     with open(BUDGET_PATH, "w") as f:
         json.dump(budget, f, indent=2)

@@ -50,6 +50,7 @@ tests/test_plan.py), so prefetching is purely a scheduling change.
 from __future__ import annotations
 
 import dataclasses
+import inspect
 import time
 from typing import Any, Protocol, runtime_checkable
 
@@ -76,22 +77,34 @@ from repro.core.plan import (
 
 def model_fns(model, eng: EngineConfig):
     """(grad_fn, loss_and_acc_fn) for `engine.round_core` from a simulation
-    model (``loss_and_acc(params, x, y[, masks=])``).  Kernel-mode masked
-    compute threads the carry's filter masks as a third argument."""
-    if eng.use_masks and eng.masked_compute == "kernel":
-        def grad_fn(p, b, fm):
-            return jax.grad(
-                lambda q: model.loss_and_acc(q, b[0], b[1], masks=fm)[0])(p)
+    model (``loss_and_acc(params, x, y[, masks=])``).  The kernel/non-kernel
+    arity split lives in ``engine.build_model_fns``, shared with the pod
+    path (`launch.steps.make_fl_train_step`) — only the batch adaptation
+    ((x, y) tuples here, token dicts there) differs per caller.
+
+    Models without the ``masks=`` keyword (e.g. ad-hoc test models) are
+    still valid outside kernel mode — the filter masks are only threaded
+    through when the model declares the seam."""
+    accepts_masks = "masks" in inspect.signature(model.loss_and_acc).parameters
+    if eng.use_masks and eng.masked_compute == "kernel" and not accepts_masks:
+        raise TypeError(
+            f"masked_compute='kernel' needs the model's loss_and_acc to "
+            f"accept masks=, but {type(model).__name__}.loss_and_acc does not")
+
+    if accepts_masks:
+        def loss_fn(p, b, fm):
+            return model.loss_and_acc(p, b[0], b[1], masks=fm)[0]
 
         def la_fn(p, b, fm):
             return model.loss_and_acc(p, b[0], b[1], masks=fm)
     else:
-        def grad_fn(p, b):
-            return jax.grad(lambda q: model.loss_and_acc(q, b[0], b[1])[0])(p)
+        def loss_fn(p, b, fm):
+            return model.loss_and_acc(p, b[0], b[1])[0]
 
-        def la_fn(p, b):
+        def la_fn(p, b, fm):
             return model.loss_and_acc(p, b[0], b[1])
-    return grad_fn, la_fn
+
+    return engine.build_model_fns(eng, loss_fn, la_fn)
 
 
 def sim_sample_kw(cfg, data) -> dict:
@@ -113,10 +126,43 @@ def init_filter_masks(model, params):
     """All-ones per-layer filter masks (``masked_compute="kernel"``): the
     carry structure must be final from round 0 so a prune event only swaps
     contents, never re-traces."""
+    return filter_masks_for(model, params, {})
+
+
+# The Prune apply goes through a small model seam: models that publish
+# their own mask/shrink builders (the scanned-stack LM, whose layer params
+# are stacked [L, ...] and pruned with per-layer index rows) dispatch
+# there; PruneSpec models (the CNN) fall back to the generic spec-driven
+# builders in `repro.core.pruning`.  ``kept`` is the decision's host-side
+# kept-index map in either case ([d] per layer for spec models, [L, keep]
+# rows for scanned stacks).
+
+def param_masks_for(model, params, kept):
+    """Param-structured 0/1 masks for the carry (``state["masks"]``)."""
+    if hasattr(model, "param_masks"):
+        return model.param_masks(params, kept)
     from repro.core import pruning
 
-    spec = model.prune_spec(params)
-    return pruning.filter_masks(params, spec, {})
+    return pruning.param_masks(params, model.prune_spec(params), kept)
+
+
+def filter_masks_for(model, params, kept):
+    """Filter-level keep-masks for kernel-mode masked compute."""
+    if hasattr(model, "filter_masks"):
+        return model.filter_masks(params, kept)
+    from repro.core import pruning
+
+    return pruning.filter_masks(params, model.prune_spec(params), kept)
+
+
+def shrink_params_for(model, params, kept):
+    """Re-materialize a params-structured tree at the kept indices (also
+    applied to momentum buffers, which share the params structure)."""
+    if hasattr(model, "shrink_params"):
+        return model.shrink_params(params, kept)
+    from repro.core import pruning
+
+    return pruning.shrink_params(params, model.prune_spec(params), kept)
 
 
 def build_chunk(eng: EngineConfig, grad_fn, la_fn, sample_kw: dict, *,
@@ -300,6 +346,7 @@ class ExecutionBackend(Protocol):
     def apply_prune(self, state: dict, mode: str, kept, *,
                     compact_existing: bool = False): ...
     def snapshot(self, state: dict): ...
+    def snapshot_artifact(self, state: dict, t: int) -> dict: ...
     def replace_params(self, state: dict, params) -> dict: ...
 
 
@@ -338,6 +385,35 @@ class _EngineBackend:
         # invalidate retained params
         return jax.tree.map(jnp.copy, state["params"])
 
+    def snapshot_artifact(self, state: dict, t: int) -> dict:
+        """A `Snapshot` artifact whose params copy is DEFERRED: the live
+        param tree is loaned out and only copied right before the next
+        donating chunk launch (``_secure_loans``).  A plan's trailing
+        snapshot therefore costs zero copies, and mid-plan snapshots copy
+        exactly once, off the per-event path — without ever aliasing a
+        donated buffer."""
+        art = {"round": t, "params": state["params"]}
+        self._loans().append(art)
+        return art
+
+    def _loans(self) -> list:
+        loans = getattr(self, "_loaned_artifacts", None)
+        if loans is None:
+            loans = self._loaned_artifacts = []
+        return loans
+
+    def _secure_loans(self) -> None:
+        """Copy every pending loaned artifact in place.  Called before any
+        donating call: the loaned trees may alias the state about to be
+        donated (and we deliberately do not track which prune/replace
+        events rebuilt the state in between — copying a still-valid loan
+        is merely the eager behavior this buffer avoids on the fast
+        path)."""
+        loans = self._loans()
+        for art in loans:
+            art["params"] = jax.tree.map(jnp.copy, art["params"])
+        loans.clear()
+
     def replace_params(self, state: dict, params) -> dict:
         """The legacy hook contract: replacement params re-initialize the
         round state (momentum restart) with the round counter preserved; an
@@ -365,21 +441,18 @@ class _EngineBackend:
         already-decided kept indices instead of restarting momentum, so
         masked-then-shrunk training continues exactly like
         shrink-from-the-start on normalization-free models."""
-        from repro.core import pruning
-
         params = jax.tree.map(jnp.copy, state["params"])
-        spec = self.model.prune_spec(params)
         round_ = state["round"]
 
         if mode == "mask":
-            masks = pruning.param_masks(params, spec, kept)
-            fmasks = pruning.filter_masks(params, spec, kept)
+            masks = param_masks_for(self.model, params, kept)
+            fmasks = filter_masks_for(self.model, params, kept)
             new_state = masked_round_state(
                 state, masks,
                 filter_masks=fmasks if self._kernel_masks else None)
             return self._place_state(new_state), {"filter_masks": fmasks}
 
-        new_params = pruning.shrink_params(params, spec, kept)
+        new_params = shrink_params_for(self.model, params, kept)
         # kernel mode: all-ones filter masks at the SHRUNK shapes — the
         # compacted model has nothing left to skip
         fm = (init_filter_masks(self.model, new_params)
@@ -391,11 +464,12 @@ class _EngineBackend:
                                             filter_masks=fm,
                                             num_clients=self._num_clients)
         if compact_existing:
-            new_state["server_m"] = pruning.shrink_params(
-                jax.tree.map(jnp.copy, state["server_m"]), spec, kept)
+            new_state["server_m"] = shrink_params_for(
+                self.model, jax.tree.map(jnp.copy, state["server_m"]), kept)
             if "global_m" in state:
-                new_state["global_m"] = pruning.shrink_params(
-                    jax.tree.map(jnp.copy, state["global_m"]), spec, kept)
+                new_state["global_m"] = shrink_params_for(
+                    self.model, jax.tree.map(jnp.copy, state["global_m"]),
+                    kept)
         new_state["round"] = round_
         # the shrink discards the pre-prune params — record them
         return self._place_state(new_state), {"params_before": params}
@@ -439,6 +513,7 @@ class LocalScanBackend(_EngineBackend):
         return d
 
     def run_chunk(self, state, key, length):
+        self._secure_loans()   # the jitted chunk donates `state`
         return self._compiled().chunk(state, key, self.device_data(),
                                       length=length)
 
@@ -614,6 +689,7 @@ class MeshBackend(_EngineBackend):
     def run_chunk(self, state, key, length):
         from jax.sharding import NamedSharding, PartitionSpec as P
 
+        self._secure_loans()   # the jitted chunk donates `state`
         # pin the key to the mesh (replicated): a fresh host key is
         # uncommitted while the chunk's output key is mesh-committed, and
         # that sharding difference alone would re-trace the chunk program
@@ -643,13 +719,11 @@ class MeshBackend(_EngineBackend):
                                         compact_existing=compact_existing)
         # mask mode: the pod-path injection helper — shapes, shardings and
         # the lowered chunk program are untouched
-        from repro.core import pruning
         from repro.launch.steps import with_masks
 
         params = state["params"]
-        spec = self.model.prune_spec(params)
-        masks = pruning.param_masks(params, spec, kept)
-        fmasks = pruning.filter_masks(params, spec, kept)
+        masks = param_masks_for(self.model, params, kept)
+        fmasks = filter_masks_for(self.model, params, kept)
         new_state = with_masks(
             state, masks,
             filter_masks=fmasks if self._kernel_masks else None)
@@ -670,10 +744,8 @@ class MeshBackend(_EngineBackend):
         compacted state is born mesh-committed, shard-locally, and the
         next chunk re-traces only because the shapes genuinely changed.
         """
-        from repro.core import pruning
         from repro.sharding.fl_specs import fl_state_specs
 
-        spec = self.model.prune_spec(state["params"])
         # the shrink discards the pre-prune params — record a device copy
         # (never materialized on the host)
         params_before = jax.tree.map(jnp.copy, state["params"])
@@ -681,14 +753,17 @@ class MeshBackend(_EngineBackend):
         # the jitted compaction is cached per (decision, momentum mode,
         # state structure), so re-applying the same decision — the
         # benchmark's warm timing, or repeated reuse-shrinks — runs the
-        # already-compiled program
-        cache_key = (tuple((k, tuple(int(i) for i in np.asarray(v)))
+        # already-compiled program.  Kept-index arrays may be [d] (spec
+        # models) or [L, keep] (scanned stacks) — key on shape + raveled
+        # values.
+        cache_key = (tuple((k, np.asarray(v).shape,
+                            tuple(int(i) for i in np.asarray(v).ravel()))
                            for k, v in sorted(kept.items())),
                      bool(compact_existing), tuple(sorted(state)))
         compacted = self._shrink_cache.get(cache_key)
         if compacted is None:
             def compact(st):
-                params = pruning.shrink_params(st["params"], spec, kept)
+                params = shrink_params_for(self.model, st["params"], kept)
                 # kernel mode: all-ones filter masks at the SHRUNK shapes —
                 # the compacted model has nothing left to skip
                 fm = (init_filter_masks(self.model, params)
@@ -697,11 +772,11 @@ class MeshBackend(_EngineBackend):
                                               filter_masks=fm,
                                               num_clients=self._num_clients)
                 if compact_existing:
-                    new["server_m"] = pruning.shrink_params(st["server_m"],
-                                                            spec, kept)
+                    new["server_m"] = shrink_params_for(
+                        self.model, st["server_m"], kept)
                     if "global_m" in st:
-                        new["global_m"] = pruning.shrink_params(
-                            st["global_m"], spec, kept)
+                        new["global_m"] = shrink_params_for(
+                            self.model, st["global_m"], kept)
                 new["round"] = st["round"]
                 return new
 
@@ -770,7 +845,9 @@ class PlanExecutor:
                 history["tau_eff"].append(last_tau)
                 history["time"].append(time.time() - t0)
             elif isinstance(ev, Snapshot):
-                record(ev.name, {"round": t, "params": backend.snapshot(state)})
+                # donation-aware: the copy is deferred until the next
+                # donating chunk launch (see _EngineBackend.snapshot_artifact)
+                record(ev.name, backend.snapshot_artifact(state, t))
             elif isinstance(ev, Prune):
                 state, art = self._prune(ev, state, init_params, artifacts)
                 record(ev.name, art)
@@ -809,7 +886,10 @@ class PlanExecutor:
             new_state, extra = backend.apply_prune(state, ev.mode, kept,
                                                    compact_existing=True)
             art = {"mode": ev.mode, "reused": ev.reuse, "kept": kept,
-                   "kept_counts": {k: int(len(v)) for k, v in kept.items()},
+                   # last axis: [d] kept vectors (spec models) and
+                   # [L, keep] rows (scanned stacks) both count per layer
+                   "kept_counts": {k: int(np.asarray(v).shape[-1])
+                                   for k, v in kept.items()},
                    "p_star": src.get("p_star"),
                    "layer_rates": src.get("layer_rates")}
         else:

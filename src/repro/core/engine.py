@@ -232,6 +232,39 @@ def apply_masks(tree: Any, masks: Any) -> Any:
     return jax.tree.map(lambda x, m: (x * m).astype(x.dtype), tree, masks)
 
 
+def build_model_fns(cfg: EngineConfig, loss_fn: Callable,
+                    la_fn: Callable) -> tuple[Callable, Callable]:
+    """The ONE place the kernel-mode model-fn arity is decided — shared by
+    the executor backends (``core.backend.model_fns``) and the pod path
+    (``launch.steps.make_fl_train_step``) so the 3-arg kernel signature
+    cannot drift between them.
+
+    Callers adapt their model to two mask-aware callables over an opaque
+    batch:
+
+      loss_fn(params, batch, filter_masks) -> scalar loss
+      la_fn(params, batch, filter_masks)   -> (loss, acc)
+
+    (``filter_masks`` is ``None`` outside kernel mode.)  Returns
+    ``(grad_fn, loss_and_acc_fn)`` in the arity ``round_core`` expects:
+    3-arg ``(params, batch, filter_masks)`` when ``cfg.masked_compute ==
+    "kernel"``, else the plain 2-arg ``(params, batch)`` signature.
+    """
+    if cfg.use_masks and cfg.masked_compute == "kernel":
+        def grad_fn(p, b, fm):
+            return jax.grad(lambda q: loss_fn(q, b, fm))(p)
+
+        def loss_and_acc_fn(p, b, fm):
+            return la_fn(p, b, fm)
+    else:
+        def grad_fn(p, b):
+            return jax.grad(lambda q: loss_fn(q, b, None))(p)
+
+        def loss_and_acc_fn(p, b):
+            return la_fn(p, b, None)
+    return grad_fn, loss_and_acc_fn
+
+
 def local_train(cfg: EngineConfig, grad_fn: Callable, params: Any, m0: Any,
                 batches: Any, lr, anchor: Any = None,
                 h: Any = None) -> tuple[Any, Any]:
@@ -504,7 +537,7 @@ def sample_round_batches(key: jax.Array, data: dict, *, clients_per_round: int,
         k_sel, k_cl, k_srv, k_drop = jax.random.split(key, 4)
     else:
         k_sel, k_cl, k_srv = jax.random.split(key, 3)
-    num_clients, n_k = data["client_y"].shape
+    num_clients, n_k = data["client_y"].shape[:2]
     n0 = data["server_y"].shape[0]
 
     sel = sample_clients(k_sel, num_clients, clients_per_round)
@@ -514,12 +547,13 @@ def sample_round_batches(key: jax.Array, data: dict, *, clients_per_round: int,
     cx = jax.vmap(lambda x, i: x[i])(data["client_x"][sel], idx)
     cy = jax.vmap(lambda y, i: y[i])(data["client_y"][sel], idx)
     cx = cx.reshape(clients_per_round, local_steps, batch_size, *cx.shape[2:])
-    cy = cy.reshape(clients_per_round, local_steps, batch_size)
+    cy = cy.reshape(clients_per_round, local_steps, batch_size, *cy.shape[2:])
 
     sidx = epoch_indices(k_srv, n0, server_tau * server_batch)
     sx = data["server_x"][sidx].reshape(
         server_tau, server_batch, *data["server_x"].shape[1:])
-    sy = data["server_y"][sidx].reshape(server_tau, server_batch)
+    sy = data["server_y"][sidx].reshape(
+        server_tau, server_batch, *data["server_y"].shape[1:])
 
     p_round = niid.round_distribution(data["client_dists"], data["sizes"], sel)
     d_round = niid.non_iid_degree(p_round, data["p_bar"])

@@ -113,9 +113,12 @@ class FedAPDecision:
     layer_rates: dict[str, float]      # per-layer rates (Alg. 3 lines 9-11)
 
     def summary(self) -> dict[str, Any]:
-        """JSON-friendly view (kept reduced to per-layer counts)."""
+        """JSON-friendly view (kept reduced to per-layer counts).  The
+        kept entries are [keep] index vectors (CNN) or [L, keep] index
+        ROWS (scanned LM stacks) — the count is the trailing dim."""
         return {"p_star": self.p_star, "layer_rates": dict(self.layer_rates),
-                "kept_counts": {k: int(len(v)) for k, v in self.kept.items()}}
+                "kept_counts": {k: int(np.asarray(v).shape[-1])
+                                for k, v in self.kept.items()}}
 
 
 def _draw_participants(data, cfg: FedAPConfig, rng: np.random.Generator
@@ -158,6 +161,25 @@ def _finish_decision(model, data, cfg: FedAPConfig, params: Any,
     # optional compression-budget floor (cfg.min_rate=0 keeps Algorithm 3's
     # pure eigen-gap decision, which may legitimately prune nothing)
     p_star = jnp.clip(p_star, cfg.min_rate, cfg.max_rate)
+
+    if hasattr(model, "decide_kept"):
+        # Scanned-stack models (repro.models.lm.LM) select kept units from
+        # the aggregate rate directly: weight-norm product scores stand in
+        # for HRank inside the scan (interior activations are not
+        # observable without unrolling — see core.pruning_lm), with a
+        # uniform lane-aligned kept count per stack.  A pure host function
+        # of (params, p_star), so the host and mesh entry points — which
+        # only differ in how step 1 computed the rates — decide
+        # identically.
+        kept = {k: np.asarray(v) for k, v in
+                model.decide_kept(params, float(p_star),
+                                  align=cfg.align).items()}
+        widths = {k: int(np.asarray(m).shape[-1])
+                  for k, m in model.filter_masks(params, kept).items()}
+        return FedAPDecision(
+            kept=kept, p_star=float(p_star),
+            layer_rates={k: 1.0 - v.shape[-1] / widths[k]
+                         for k, v in kept.items()})
 
     spec: PruneSpec = model.prune_spec(params)
     thr = global_threshold(params, spec, p_star)

@@ -38,11 +38,34 @@ import numpy as np
 from repro.configs.base import ModelConfig
 
 
-def _aligned_keep(d: int, rate: float, align: int | None) -> int:
-    keep = d - int(np.floor(float(rate) * d))
-    keep = max(keep, 1)
+def _aligned_keep(d: int, rate: float, align: int | None,
+                  *, layer: str = "layer") -> int:
+    """Uniform kept count for one scanned stack: ``d - floor(rate * d)``,
+    rounded UP to the alignment boundary (realized rate <= requested rate).
+
+    Construction-time validation (the FedAPConfig.__post_init__ pattern):
+    a rate or alignment that would keep 0 units or overflow the layer
+    width fails HERE, naming the rate, the alignment and the layer —
+    not as an opaque ``take_along_axis`` shape error downstream.
+    """
+    rate = float(rate)
+    if not 0.0 <= rate < 1.0:
+        raise ValueError(
+            f"prune rate for {layer} must be in [0, 1), got {rate} "
+            f"(rate >= 1 would keep 0 of the {d} units)")
+    keep = d - int(np.floor(rate * d))
     if align and d >= align:
-        keep = min(d, int(np.ceil(keep / align) * align))
+        aligned = int(np.ceil(keep / align) * align)
+        if aligned > d:
+            raise ValueError(
+                f"{layer}: the {align}-lane-aligned kept count {aligned} "
+                f"exceeds the layer width {d} (width is not a multiple of "
+                f"the alignment; rate={rate} keeps {keep} unaligned units)")
+        keep = aligned
+    if not 1 <= keep <= d:   # unreachable given the guards above
+        raise ValueError(
+            f"{layer}: kept count {keep} outside [1, {d}] "
+            f"(rate={rate}, align={align})")
     return keep
 
 
@@ -66,19 +89,32 @@ def expert_scores(layers: Any) -> jnp.ndarray:
     return r * wi * wo
 
 
-def prune_lm_ffn(params: Any, cfg: ModelConfig, rate: float,
-                 *, align: int | None = 128) -> tuple[Any, ModelConfig, dict]:
-    """Structurally shrink the FFN hidden dim of a scanned dense/vlm/hybrid
-    stack.  Returns (new params, new config, info)."""
+def ffn_kept_indices(params: Any, cfg: ModelConfig, rate: float,
+                     *, align: int | None = 128) -> np.ndarray:
+    """[L, keep] kept-unit index rows (sorted per layer) for the FFN hidden
+    dim of a scanned dense/vlm/hybrid stack — the FedAP decision in index
+    form, shared by the shrink (:func:`shrink_ffn_at`) and the static-shape
+    mask application (:func:`ffn_param_masks` / :func:`ffn_filter_masks`).
+
+    Host-resident numpy (the decision is static — it drives either a
+    re-materialization or constant-folded masks, never a traced value).
+    """
     if cfg.family not in ("dense", "vlm", "hybrid"):
         raise ValueError(f"prune_lm_ffn does not apply to family {cfg.family}")
-    layers = params["layers"]
-    scores = ffn_unit_scores(layers, cfg.act)                          # [L, ff]
+    scores = ffn_unit_scores(params["layers"], cfg.act)                # [L, ff]
     d_ff = scores.shape[1]
-    keep = _aligned_keep(d_ff, rate, align)
+    keep = _aligned_keep(d_ff, rate, align,
+                         layer=f"mlp stack (d_ff={d_ff})")
     idx = jnp.argsort(scores, axis=1)[:, ::-1][:, :keep]               # [L, keep]
-    idx = jnp.sort(idx, axis=1)
+    return np.asarray(jnp.sort(idx, axis=1))
 
+
+def shrink_ffn_at(params: Any, idx: Any) -> Any:
+    """Gather the kept FFN units at the given [L, keep] index rows — wi/wg
+    columns and wo rows.  Applies to the param tree AND any tree sharing
+    its structure (momentum buffers, FedDyn corrections)."""
+    idx = jnp.asarray(idx)
+    layers = params["layers"]
     mlp = dict(layers["mlp"])
     mlp["wi"] = jnp.take_along_axis(layers["mlp"]["wi"], idx[:, None, :], axis=2)
     if "wg" in mlp:
@@ -88,6 +124,64 @@ def prune_lm_ffn(params: Any, cfg: ModelConfig, rate: float,
     new_layers["mlp"] = mlp
     new_params = dict(params)
     new_params["layers"] = new_layers
+    return new_params
+
+
+def _unit_masks(params: Any, kept: Any) -> np.ndarray | None:
+    """[L, d_ff] 0/1 kept-unit masks from a ``{"mlp": [L, keep]}`` kept
+    map; None when no decision is in force (all-ones)."""
+    idx = kept.get("mlp") if kept else None
+    if idx is None:
+        return None
+    wi = params["layers"]["mlp"]["wi"]
+    m = np.zeros((wi.shape[0], wi.shape[2]), np.float32)
+    np.put_along_axis(m, np.asarray(idx), 1.0, axis=1)
+    return m
+
+
+def ffn_filter_masks(params: Any, kept: Any) -> dict:
+    """``{"mlp": [L, d_ff] 0/1}`` filter keep-masks for kernel-mode masked
+    compute — one mask row per scanned layer, riding into the layer scan
+    alongside that layer's params."""
+    m = _unit_masks(params, kept)
+    if m is None:
+        wi = params["layers"]["mlp"]["wi"]
+        m = np.ones((wi.shape[0], wi.shape[2]), np.float32)
+    return {"mlp": jnp.asarray(m)}
+
+
+def ffn_param_masks(params: Any, kept: Any) -> Any:
+    """Param-structured 0/1 masks with zeros on exactly the coordinates
+    :func:`shrink_ffn_at` would slice away (wi/wg columns AND the coupled
+    wo rows) — the scanned-stack analogue of ``pruning.param_masks``.  The
+    zeroed set is closed under the FFN coupling, so the masked forward
+    equals the shrunk forward exactly: a zero pre-activation unit
+    contributes silu(0) = gelu(0) = 0 through wo."""
+    masks = jax.tree.map(lambda p: jnp.ones(p.shape, jnp.float32), params)
+    m = _unit_masks(params, kept)
+    if m is None:
+        return masks
+    unit = jnp.asarray(m)                                              # [L, ff]
+    mlp = dict(masks["layers"]["mlp"])
+    mlp["wi"] = mlp["wi"] * unit[:, None, :]
+    if "wg" in mlp:
+        mlp["wg"] = mlp["wg"] * unit[:, None, :]
+    mlp["wo"] = mlp["wo"] * unit[:, :, None]
+    new_layers = dict(masks["layers"])
+    new_layers["mlp"] = mlp
+    masks = dict(masks)
+    masks["layers"] = new_layers
+    return masks
+
+
+def prune_lm_ffn(params: Any, cfg: ModelConfig, rate: float,
+                 *, align: int | None = 128) -> tuple[Any, ModelConfig, dict]:
+    """Structurally shrink the FFN hidden dim of a scanned dense/vlm/hybrid
+    stack.  Returns (new params, new config, info)."""
+    idx = ffn_kept_indices(params, cfg, rate, align=align)
+    d_ff = int(params["layers"]["mlp"]["wi"].shape[2])
+    keep = int(idx.shape[1])
+    new_params = shrink_ffn_at(params, idx)
     new_cfg = dataclasses.replace(cfg, d_ff=keep)
     return new_params, new_cfg, {"kept": keep, "of": d_ff,
                                  "realized_rate": 1.0 - keep / d_ff}
@@ -103,7 +197,7 @@ def prune_lm_experts(params: Any, cfg: ModelConfig, rate: float,
     layers = params["layers"]
     scores = expert_scores(layers)                                     # [L, E]
     e = scores.shape[1]
-    keep = _aligned_keep(e, rate, align)
+    keep = _aligned_keep(e, rate, align, layer=f"moe expert stack (E={e})")
     if min_keep:
         keep = max(keep, min_keep)
     keep = min(max(keep, cfg.moe.top_k), e)

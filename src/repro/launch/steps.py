@@ -60,6 +60,7 @@ from repro.core.engine import (
     EngineConfig,
     FedDynConfig,
     FedProxConfig,
+    build_model_fns,
     init_round_state,
     round_core,
 )
@@ -170,19 +171,21 @@ def make_fl_train_step(cfg: ModelConfig, run: FLRunConfig, num_clients: int,
     """
     model = build_model(cfg) if model is None else model
     eng = engine_config(run)
-    if eng.use_masks and eng.masked_compute == "kernel":
-        # masks-aware wiring: round_core passes the carry's filter masks
-        # as the third argument (the model must accept masks=)
-        def grad_fn(p, b, fm):
-            return jax.grad(lambda q: model.loss(q, b, masks=fm))(p)
 
-        def la_fn(p, b, fm):
-            return loss_and_accuracy(model, p, b, masks=fm)
-    else:
-        grad_fn = jax.grad(model.loss)
+    # The kernel-mode arity decision (does round_core hand the carry's
+    # filter masks to the model fns?) lives in ONE place —
+    # engine.build_model_fns, shared with core.backend.model_fns — so the
+    # pod and executor signatures cannot drift.  This module contributes
+    # only the batch-dict adapters.
+    def loss_fn(p, b, fm):
+        if fm is None:
+            return model.loss(p, b)
+        return model.loss(p, b, masks=fm)
 
-        def la_fn(p, b):
-            return loss_and_accuracy(model, p, b)
+    def la_base(p, b, fm):
+        return loss_and_accuracy(model, p, b, masks=fm)
+
+    grad_fn, la_fn = build_model_fns(eng, loss_fn, la_base)
 
     def init_state(rng, filter_masks=None):
         return init_round_state(model.init(rng), eng,

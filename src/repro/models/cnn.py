@@ -92,48 +92,9 @@ def _mask_channels(h, masks, name):
     return h * masks[name]
 
 
-def masked_dense(x, w, mask, b=None, *, block: int = 128):
-    """Dense layer ``x @ w (+ b)`` with an output-filter keep-mask.
-
-    When the feature dimensions K and N are multiples of ``block`` the
-    matmul routes through the Pallas ``masked_matmul`` kernel: column
-    blocks whose mask is entirely zero are SKIPPED on the MXU, so
-    structured pruning's FLOP savings are realized at static shapes
-    (partially-kept blocks are computed and re-masked elementwise — exact
-    for 0/1 masks).  The batch dimension M does NOT gate the kernel: real
-    batch sizes (10, 32) are zero-padded up to the 8-row sublane multiple
-    (a small M block of their own, not a full ``block`` rows) and the
-    result sliced back, so the kernel path is live in training and
-    serving alike.  Unaligned K/N fall back to masking the XLA matmul.
-
-    The kernel carries a ``jax.custom_vjp`` whose backward Pallas kernels
-    skip the same pruned blocks (and write exact-zero ``dw`` blocks), so
-    this routing is differentiable — the training engine uses it via
-    ``EngineConfig.masked_compute="kernel"``.
-    """
-    m, k = x.shape
-    n = w.shape[-1]
-    if k % block == 0 and n % block == 0:
-        from repro.kernels.ops import masked_matmul
-        block_mask = jnp.max(mask.reshape(n // block, block), axis=1)
-        # Only the LANE dims (K, N) need the mask-granularity block; the
-        # sublane dim M pads to the next 8-row multiple (<= 7 wasted rows
-        # for ANY batch size, never a full ``block`` rows) and takes the
-        # largest 8-aligned tile that divides it: gcd(mp, block) is a
-        # multiple of 8 whenever both are, divides mp, and is <= block.
-        m_pad = -m % 8
-        mp = m + m_pad
-        bm = math.gcd(mp, block)
-        xp = jnp.pad(x, ((0, m_pad), (0, 0))) if m_pad else x
-        y = masked_matmul(xp, w, block_mask, block_m=bm, block_n=block,
-                          block_k=block)
-        if m_pad:
-            y = y[:m]
-    else:
-        y = x @ w
-    if b is not None:
-        y = y + b
-    return y * mask
+# masked_dense moved to repro.models.layers (shared with the LM FFN
+# stacks); re-exported here because this module is its historical home.
+from repro.models.layers import masked_dense  # noqa: E402,F401
 
 
 def softmax_xent_acc(logits, y):

@@ -459,13 +459,75 @@ def init_mlp(rng, d_model: int, d_ff: int, act: str, dtype):
     return params, axes
 
 
-def apply_mlp(params, x, act: str):
-    h = x @ params["wi"]
+def apply_mlp(params, x, act: str, mask=None):
+    if mask is None:
+        h = x @ params["wi"]
+        if act == "silu":
+            h = jax.nn.silu(x @ params["wg"]) * h
+        else:
+            h = jax.nn.gelu(h)
+        return h @ params["wo"]
+    # FedAP masked mode: ``mask`` ([d_ff] 0/1) zeroes pruned hidden units
+    # at the PRE-activation, so each pruned unit contributes exactly
+    # silu(0) = gelu(0) = 0 through wo — identical logits to structurally
+    # shrinking the stack.  The up/gate matmuls route through
+    # :func:`masked_dense`: when d_model and d_ff are 128-aligned the
+    # Pallas masked_matmul kernel SKIPS fully-pruned column blocks, so the
+    # FedAP FLOP savings are realized at static shapes; wo stays dense
+    # (its pruned K rows already multiply exact zeros).
+    shape = x.shape
+    x2 = x.reshape(-1, shape[-1])
+    h = masked_dense(x2, params["wi"], mask)
     if act == "silu":
-        h = jax.nn.silu(x @ params["wg"]) * h
+        h = jax.nn.silu(masked_dense(x2, params["wg"], mask)) * h
     else:
         h = jax.nn.gelu(h)
-    return h @ params["wo"]
+    return (h @ params["wo"]).reshape(shape)
+
+
+def masked_dense(x, w, mask, b=None, *, block: int = 128):
+    """Dense layer ``x @ w (+ b)`` with an output-filter keep-mask.
+
+    When the feature dimensions K and N are multiples of ``block`` the
+    matmul routes through the Pallas ``masked_matmul`` kernel: column
+    blocks whose mask is entirely zero are SKIPPED on the MXU, so
+    structured pruning's FLOP savings are realized at static shapes
+    (partially-kept blocks are computed and re-masked elementwise — exact
+    for 0/1 masks).  The batch dimension M does NOT gate the kernel: real
+    batch sizes (10, 32) are zero-padded up to the 8-row sublane multiple
+    (a small M block of their own, not a full ``block`` rows) and the
+    result sliced back, so the kernel path is live in training and
+    serving alike.  Unaligned K/N fall back to masking the XLA matmul.
+
+    The kernel carries a ``jax.custom_vjp`` whose backward Pallas kernels
+    skip the same pruned blocks (and write exact-zero ``dw`` blocks), so
+    this routing is differentiable — the training engine uses it via
+    ``EngineConfig.masked_compute="kernel"``.  Shared by the CNN dense
+    heads (repro.models.cnn) and the LM FFN stacks (:func:`apply_mlp`).
+    """
+    m, k = x.shape
+    n = w.shape[-1]
+    if k % block == 0 and n % block == 0:
+        from repro.kernels.ops import masked_matmul
+        block_mask = jnp.max(mask.reshape(n // block, block), axis=1)
+        # Only the LANE dims (K, N) need the mask-granularity block; the
+        # sublane dim M pads to the next 8-row multiple (<= 7 wasted rows
+        # for ANY batch size, never a full ``block`` rows) and takes the
+        # largest 8-aligned tile that divides it: gcd(mp, block) is a
+        # multiple of 8 whenever both are, divides mp, and is <= block.
+        m_pad = -m % 8
+        mp = m + m_pad
+        bm = math.gcd(mp, block)
+        xp = jnp.pad(x, ((0, m_pad), (0, 0))) if m_pad else x
+        y = masked_matmul(xp, w, block_mask, block_m=bm, block_n=block,
+                          block_k=block)
+        if m_pad:
+            y = y[:m]
+    else:
+        y = x @ w
+    if b is not None:
+        y = y + b
+    return y * mask
 
 
 # ---------------------------------------------------------------------------

@@ -77,15 +77,22 @@ def init_block(rng, cfg: ModelConfig, *, cross: bool = False):
 
 
 def apply_block(params, x, positions, cfg: ModelConfig, meta, *,
-                window=None, attn_impl="xla", cross_kv=None, causal=True):
-    """Pre-norm residual block.  Returns (x, aux_loss_scalar)."""
+                window=None, attn_impl="xla", cross_kv=None, causal=True,
+                masks=None):
+    """Pre-norm residual block.  Returns (x, aux_loss_scalar).
+
+    ``masks`` (optional) carries THIS layer's FedAP filter keep-masks —
+    ``{"mlp": [d_ff] 0/1}`` — threaded through the masked FFN
+    (:func:`repro.models.layers.apply_mlp`); None is the plain dense path.
+    """
     aux = jnp.zeros((), jnp.float32)
+    mlp_mask = None if masks is None else masks["mlp"]
 
     if cfg.family == "hybrid":
         h = L.apply_norm(params["norm_m"], x, cfg.norm)
         x = x + L.apply_mamba2(params["mamba"], h, meta["mamba"], cfg, impl=attn_impl)
         h = L.apply_norm(params["norm_f"], x, cfg.norm)
-        x = x + L.apply_mlp(params["mlp"], h, cfg.act)
+        x = x + L.apply_mlp(params["mlp"], h, cfg.act, mlp_mask)
         return x, aux
 
     h = L.apply_norm(params["norm_a"], x, cfg.norm)
@@ -111,7 +118,7 @@ def apply_block(params, x, positions, cfg: ModelConfig, meta, *,
         aux = aux + moe_aux["load_balance"] + moe_aux["router_z"]
         x = x + y
     else:
-        x = x + L.apply_mlp(params["mlp"], h, cfg.act)
+        x = x + L.apply_mlp(params["mlp"], h, cfg.act, mlp_mask)
     return x, aux
 
 
@@ -283,9 +290,30 @@ class LM:
                                causal=False, attn_impl=self.attn_impl)
         return L.apply_norm(params["norm_enc"], x, cfg.norm)
 
-    def apply(self, params, batch, *, window="auto"):
-        """Full-sequence logits [B,S,V] (+ aux loss)."""
+    def apply(self, params, batch, *, window="auto", masks=None):
+        """Full-sequence logits [B,S,V] (+ aux loss).
+
+        ``masks`` (optional) carries the FedAP filter keep-masks of the
+        static-shape masked mode — ``{"mlp": [L, d_ff] 0/1}``, one row per
+        scanned layer, riding the layer scan as xs alongside that layer's
+        params (structure fixed from round 0, zero re-jit).  Masked units
+        are zeroed at the FFN pre-activation, which equals the shrunk
+        model's logits exactly (silu(0) = gelu(0) = 0 through wo); when
+        d_model/d_ff are 128-aligned the masked matmuls run the Pallas
+        ``masked_matmul`` kernel, skipping fully-pruned column blocks.
+        """
         cfg = self.cfg
+        if masks is not None:
+            if cfg.family == "moe":
+                raise ValueError(
+                    "masks= is unsupported for MoE stacks: a zeroed router "
+                    "logit is not -inf, so masked experts would still "
+                    "receive routed mass — prune experts with "
+                    "Prune(mode='shrink') (core.pruning_lm.prune_lm_experts)")
+            if not self.scanned:
+                raise ValueError(
+                    f"masks= requires a scanned stack, not family "
+                    f"{cfg.family!r}")
         if window == "auto":
             window = None            # training/prefill default: full attention
         x = constrain_batch(self._embed_in(params, batch))
@@ -316,11 +344,15 @@ class LM:
                 x = constrain_batch(x)
             return self._head(params, x), aux
 
-        # scanned stacks
-        def body(carry, layer_params):
+        # scanned stacks (filter masks, when given, ride the scan as extra
+        # xs — each step consumes its layer's params AND its mask row)
+        def body(carry, scanned):
             x, aux = carry
+            layer_params, layer_masks = \
+                scanned if masks is not None else (scanned, None)
             x, a = apply_block(layer_params, x, pos, cfg, self._meta,
-                               window=window, attn_impl=self.attn_impl)
+                               window=window, attn_impl=self.attn_impl,
+                               masks=layer_masks)
             x = constrain_batch(x)
             return (x, aux + a), None
 
@@ -345,15 +377,18 @@ class LM:
                                           attn_impl=self.attn_impl)
                 x = constrain_batch(x)
                 group = jax.tree.map(lambda p: p[a:b], params["layers"])
+                if masks is not None:
+                    group = (group, jax.tree.map(lambda m: m[a:b], masks))
                 (x, aux), _ = jax.lax.scan(body, (x, aux), group)
             return self._head(params, x), aux
 
-        (x, aux), _ = jax.lax.scan(body, (x, aux), params["layers"])
+        xs = params["layers"] if masks is None else (params["layers"], masks)
+        (x, aux), _ = jax.lax.scan(body, (x, aux), xs)
         return self._head(params, x), aux
 
     # -- loss -------------------------------------------------------------------
-    def loss(self, params, batch, *, window="auto"):
-        logits, aux = self.apply(params, batch, window=window)
+    def loss(self, params, batch, *, window="auto", masks=None):
+        logits, aux = self.apply(params, batch, window=window, masks=masks)
         labels = batch["labels"]
         mask = batch.get("loss_mask")
         logp = jax.nn.log_softmax(logits.astype(jnp.float32))
@@ -364,6 +399,54 @@ class LM:
         else:
             denom = nll.size
         return jnp.sum(nll) / denom + aux
+
+    def loss_and_acc(self, params, x, y, *, masks=None):
+        """The simulation-driver model contract (mirrors
+        ``PaperModel.loss_and_acc``): positional ``(x, y)`` = (tokens
+        [B,S], labels [B,S]) int32 arrays -> (loss, token accuracy).
+
+        Implemented via the pod adapter (:func:`launch.steps.
+        loss_and_accuracy`), so the executor backends and the pod step
+        share ONE loss/accuracy definition — the seam that lets
+        ``FederatedTrainer``/``PlanExecutor`` drive transformer
+        fine-tuning with the same code path as the CNN repro."""
+        from repro.launch.steps import loss_and_accuracy
+
+        return loss_and_accuracy(self, params, {"tokens": x, "labels": y},
+                                 masks=masks)
+
+    # -- FedAP seam (executor Prune events; see repro.core.backend) ----------
+    def decide_kept(self, params, p_star, *, align=128):
+        """``{"mlp": [L, keep]}`` kept-unit index rows from the Formula-15
+        aggregate rate — weight-norm product scores inside the scanned
+        stack, uniform ``align``-lane kept count (core.pruning_lm).  A pure
+        host function of (params, p_star): the host and mesh FedAP entry
+        points make the identical selection."""
+        from repro.core import pruning_lm
+
+        return {"mlp": pruning_lm.ffn_kept_indices(
+            params, self.cfg, float(p_star), align=align)}
+
+    def filter_masks(self, params, kept):
+        """``{"mlp": [L, d_ff] 0/1}`` keep-masks for kernel-mode compute."""
+        from repro.core import pruning_lm
+
+        return pruning_lm.ffn_filter_masks(params, kept)
+
+    def param_masks(self, params, kept):
+        """Param-structured 0/1 masks (coupling-closed: wi/wg cols + wo
+        rows) for the static-shape masked round state."""
+        from repro.core import pruning_lm
+
+        return pruning_lm.ffn_param_masks(params, kept)
+
+    def shrink_params(self, params, kept):
+        """Structurally gather the kept FFN units (params or any tree of
+        identical structure — momentum buffers, FedDyn corrections)."""
+        from repro.core import pruning_lm
+
+        idx = kept.get("mlp") if kept else None
+        return params if idx is None else pruning_lm.shrink_ffn_at(params, idx)
 
     # -- decode -------------------------------------------------------------------
     def init_cache(self, batch_size: int, cache_len: int, *, window=None):
