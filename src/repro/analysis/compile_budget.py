@@ -12,6 +12,12 @@ lowered-program counts against the checked-in ``compile_budget.json``
 baseline.  Any unexpected re-trace fails naming the scenario and the plan
 event after which the count jumped.
 
+The ``serving/*`` scenarios extend the contract to inference: a
+continuous-batching ``repro.serving.DecodeEngine`` session compiles
+exactly TWO programs (admit + wave) and re-traces neither across
+admissions, retirements and slot reuse — for dense, masked and shrunk
+checkpoints alike.
+
 ``compile_budget.json`` is the single source of truth for expected program
 counts: ``tests/test_plan.py`` and ``tests/test_mesh_backend.py`` assert
 against :func:`expected_programs` instead of inline magic numbers.
@@ -50,9 +56,11 @@ def expected_programs(scenario: str,
 class Scenario:
     name: str
     backend: str                       # "local" | "mesh"
-    plan_factory: Callable[[], Any]    # () -> TrainPlan
+    plan_factory: Callable[[], Any]    # () -> TrainPlan (kind="plan" only)
     masked_compute: str = "params"
     world: str = "cnn"                 # "cnn" | "lm" (make_world kind)
+    kind: str = "plan"                 # "plan" | "serving"
+    serve_mode: str = "dense"          # serving: dense | masked | shrunk
     note: str = ""
 
 
@@ -105,6 +113,17 @@ def scenarios() -> list[Scenario]:
                             note="transformer LM with the masked FFN "
                                  "matmuls routed through the Pallas "
                                  "masked kernel"))
+    # The serving leg of the contract: the continuous-batching
+    # DecodeEngine compiles exactly TWO programs — _admit (one slot
+    # write) and _wave (the step scan) — and re-traces NEITHER across
+    # admissions, retirements and slot reuse, for dense, masked and
+    # shrunk checkpoints alike.
+    for mode in ("dense", "masked", "shrunk"):
+        out.append(Scenario(
+            f"serving/decode_{mode}", "local", None, world="lm",
+            kind="serving", serve_mode=mode,
+            note=f"DecodeEngine over a {mode} checkpoint: admit + wave "
+                 f"programs, zero re-traces across admission waves"))
     return out
 
 
@@ -227,6 +246,55 @@ class ScenarioResult:
     timeline: list[tuple[str, int]]
 
 
+def _run_serving_scenario(sc: Scenario) -> ScenarioResult:
+    """More requests than slots driven through a DecodeEngine; the
+    program count (admit + wave jit caches) is sampled after every wave —
+    an admission or retirement that re-traced shows up as a count jump at
+    the wave it happened in."""
+    import dataclasses as _dc
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.serving import DecodeEngine, ServeConfig
+
+    model = _fresh_model("lm")
+    params = model.init(jax.random.key(0))
+    masks = None
+    if sc.serve_mode != "dense":
+        kept = model.decide_kept(params, 0.5)
+        if sc.serve_mode == "masked":
+            masks = model.filter_masks(params, kept)
+            params = jax.tree.map(jnp.multiply, params,
+                                  model.param_masks(params, kept))
+        else:
+            from repro.core import pruning_lm
+            from repro.models.lm import LM
+
+            params = pruning_lm.shrink_ffn_at(params, kept["mlp"])
+            model = LM(_dc.replace(
+                model.cfg, d_ff=int(np.asarray(kept["mlp"]).shape[-1])))
+    eng = DecodeEngine(
+        model, params,
+        ServeConfig(slots=2, cache_len=12, max_prompt=4, max_new_tokens=4,
+                    steps_per_wave=4),
+        masks=masks)
+    rng = np.random.default_rng(0)
+    for _ in range(5):     # 5 ragged requests over 2 slots: reuse + ragged
+        eng.submit(rng.integers(                       # admission waves
+            0, model.cfg.vocab_size,
+            size=int(rng.integers(1, 5))).astype(np.int32))
+    timeline, wave = [], 0
+    while eng.pending:
+        eng.step_wave()
+        wave += 1
+        timeline.append((f"wave#{wave}",
+                         sum(eng.program_counts().values())))
+    return ScenarioResult(sc.name, sum(eng.program_counts().values()),
+                          timeline)
+
+
 def run_scenario(sc: Scenario, world=None) -> ScenarioResult:
     import dataclasses as _dc
 
@@ -235,6 +303,8 @@ def run_scenario(sc: Scenario, world=None) -> ScenarioResult:
     from repro.core import FederatedTrainer
     from repro.core.backend import PlanExecutor
 
+    if sc.kind == "serving":
+        return _run_serving_scenario(sc)
     data, cfg = world if world is not None else make_world(sc.world)
     if sc.masked_compute != "params":
         cfg = _dc.replace(cfg, masked_compute=sc.masked_compute)

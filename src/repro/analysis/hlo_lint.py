@@ -12,7 +12,9 @@ Checked invariants:
   layer scan carries the FFN keep-masks as zipped xs);
 * **No host callbacks / infeed / outfeed** inside any lowered program —
   a `io_callback`/`debug.print` smuggled into the scan body would stall
-  every round on the host;
+  every round on the host; checked for the serving wave program too,
+  where it IS the continuous-batching "no per-token host sync" claim
+  (the done-mask is read once per wave, after the launch);
 * **Mesh all-reduce budget** (needs >= 2 devices): the per-round
   all-reduce count matches the PR 5 design — one *logical* all-reduce
   per tau server step (physically one per parameter leaf, inside the
@@ -146,6 +148,30 @@ def _lower_chunk(backend_name: str, world=None, *, kind: str = "cnn",
     return txt, dict(be.sample_kw)
 
 
+def _lower_serving(*, masked: bool = False) -> str:
+    """Optimized HLO text of the serving wave program (the lax.scan of
+    ``steps_per_wave`` continuous-batching decode steps over the
+    flash-decode kernel)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.serving import DecodeEngine, ServeConfig
+
+    model = _fresh_model("lm")
+    params = model.init(jax.random.key(0))
+    masks = None
+    if masked:
+        kept = model.decide_kept(params, 0.5)
+        masks = model.filter_masks(params, kept)
+        params = jax.tree.map(jnp.multiply, params,
+                              model.param_masks(params, kept))
+    eng = DecodeEngine(model, params,
+                       ServeConfig(slots=2, cache_len=12, max_prompt=4,
+                                   max_new_tokens=4, steps_per_wave=2),
+                       masks=masks)
+    return eng.lower_wave().compile().as_text()
+
+
 def check(budget: dict | None = None, world=None) -> list[str]:
     """Run every HLO invariant; returns failure messages (empty == ok)."""
     import jax
@@ -188,6 +214,26 @@ def check(budget: dict | None = None, world=None) -> list[str]:
     if coll_lm:
         errors.append(f"LM local chunk: collectives in the single-device "
                       f"scan program: {coll_lm}")
+
+    # ---- serving wave program: the continuous-batching decode scan is
+    # the "no per-token host sync" claim at the HLO level — no host
+    # callbacks (the done-mask is read AFTER the wave, not inside it),
+    # no f64, no collectives on a mesh-less engine -----------------------
+    for label, masked in (("serving wave", False),
+                          ("serving wave (masked)", True)):
+        txt_sv = _lower_serving(masked=masked)
+        if f64_ops(txt_sv):
+            errors.append(f"{label}: {f64_ops(txt_sv)} f64 tensor "
+                          f"reference(s) leaked into the f32 decode graph")
+        cbs = host_callbacks(txt_sv)
+        if cbs:
+            errors.append(f"{label}: host callback ops inside the wave "
+                          f"program (per-token host syncs): {cbs}")
+        coll_sv = dict(
+            hlo_cost.HloCostModel(txt_sv).entry_cost().collective_counts)
+        if coll_sv:
+            errors.append(f"{label}: collectives in the mesh-less decode "
+                          f"program: {coll_sv}")
 
     # ---- mesh program: all-reduce budget (needs a real mesh) --------------
     if len(jax.devices()) < 2:
@@ -269,6 +315,10 @@ def update(world=None) -> dict:
     txt_lm, _ = _lower_chunk("local", kind="lm", use_masks=True)
     lm_coll = dict(
         hlo_cost.HloCostModel(txt_lm).entry_cost().collective_counts)
+    sv_coll = dict(hlo_cost.HloCostModel(
+        _lower_serving()).entry_cost().collective_counts)
+    svm_coll = dict(hlo_cost.HloCostModel(
+        _lower_serving(masked=True)).entry_cost().collective_counts)
     budget = load_budget()
     budget["hlo"] = {
         "_comment": [
@@ -282,6 +332,8 @@ def update(world=None) -> dict:
         "mesh": {k: v for k, v in prof.items()},
         "local": {"collectives": 0},
         "lm_local": {"collectives": sum(lm_coll.values())},
+        "serving": {"collectives": sum(sv_coll.values())},
+        "serving_masked": {"collectives": sum(svm_coll.values())},
     }
     with open(BUDGET_PATH, "w") as f:
         json.dump(budget, f, indent=2)

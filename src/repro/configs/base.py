@@ -59,6 +59,13 @@ class VLMConfig:
     num_vision_tokens: int = 1024    # of the sequence, for spec realism
 
 
+# Nested sub-config classes by ModelConfig field name (checkpoint metadata
+# round-trips them through plain dicts).
+_SUB_CONFIGS = {"moe": MoEConfig, "ssm": SSMConfig, "xlstm": XLSTMConfig,
+                "encoder": EncoderConfig, "hybrid": HybridConfig,
+                "vlm": VLMConfig}
+
+
 @dataclasses.dataclass(frozen=True)
 class ModelConfig:
     name: str
@@ -123,6 +130,28 @@ class ModelConfig:
         h = self.padded_num_heads
         kv = self.num_kv_heads
         return kv if h % kv == 0 else h
+
+    # -- (de)serialization: the checkpoint metadata format -----------------
+    def to_dict(self) -> dict:
+        """JSON-safe dict (nested sub-configs included) — the inverse of
+        :meth:`from_dict`; used by ``RunResult.save`` checkpoint metadata."""
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ModelConfig":
+        """Rebuild a config from :meth:`to_dict` output (e.g. a checkpoint's
+        ``meta.json``).  Unknown keys fail loudly rather than being dropped."""
+        d = dict(d)
+        for key, sub_cls in _SUB_CONFIGS.items():
+            if d.get(key) is not None:
+                d[key] = sub_cls(**d[key])
+        known = {f.name for f in dataclasses.fields(cls)}
+        unknown = set(d) - known
+        if unknown:
+            raise ValueError(
+                f"ModelConfig.from_dict: unknown field(s) {sorted(unknown)} "
+                f"— checkpoint written by an incompatible version?")
+        return cls(**d)
 
     def reduced(self, **overrides) -> "ModelConfig":
         """The smoke-test variant: 2 layers, d_model<=512, <=4 experts."""

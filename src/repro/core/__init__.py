@@ -49,6 +49,7 @@ from repro.core.plan import (
     Snapshot,
     TrainPlan,
     fedap_plan,
+    load_artifact,
 )
 from repro.core.rounds import FederatedTrainer, FLConfig, feddumap_config
 from repro.core.server_update import FedDUConfig, tau_eff
@@ -63,7 +64,7 @@ __all__ = [
     "init_round_state", "round_core",
     "FederatedTrainer", "FLConfig", "feddumap_config",
     "TrainPlan", "Scan", "Eval", "Prune", "Snapshot", "Callback",
-    "RunResult", "fedap_plan",
+    "RunResult", "fedap_plan", "load_artifact",
     "FedDUConfig", "FedDUMConfig", "FedAPConfig",
     "PruneSpec", "PrunableLayer", "CoupledParam", "tau_eff",
 ]

@@ -295,3 +295,137 @@ class RunResult:
     history: dict[str, list]
     artifacts: dict[str, Any]
     state: dict
+
+    def save(self, path, *, model_config=None, params=None) -> None:
+        """Persist the run as a serving-consumable checkpoint directory:
+        ``arrays.npz`` (params + prune kept-filters/masks, keys are
+        '/'-joined pytree paths) + ``meta.json`` (prune mode / p_star /
+        layer_rates / kept_counts, eval history, and — when given — the
+        :class:`repro.configs.base.ModelConfig` so the loader can rebuild
+        the model without out-of-band knowledge).
+
+        The LAST Prune event's artifact (if any) is exported; ``params``
+        overrides the final params (e.g. to save a mid-run ``Snapshot``
+        artifact's copy instead).  Load back with :func:`load_artifact`.
+        """
+        import json
+        import pathlib
+
+        import numpy as np
+
+        out = pathlib.Path(path)
+        out.mkdir(parents=True, exist_ok=True)
+        prune_name, prune_art = None, None
+        for name, art in self.artifacts.items():
+            if isinstance(art, dict) and "kept" in art:
+                prune_name, prune_art = name, art
+
+        arrays = _flatten_arrays({"params": params if params is not None
+                                  else self.params})
+        meta: dict = {
+            "format": "repro-checkpoint-v1",
+            "history": _json_safe(self.history),
+            "model_config": (model_config.to_dict()
+                             if model_config is not None else None),
+            "prune": None,
+        }
+        if prune_art is not None:
+            kept = prune_art.get("kept") or {}
+            arrays.update(_flatten_arrays({"kept": dict(kept)}))
+            fmasks = prune_art.get("filter_masks")
+            if fmasks:
+                arrays.update(_flatten_arrays({"masks": dict(fmasks)}))
+            meta["prune"] = _json_safe({
+                "event": prune_name,
+                "mode": prune_art.get("mode"),
+                "p_star": prune_art.get("p_star"),
+                "layer_rates": prune_art.get("layer_rates"),
+                "kept_counts": prune_art.get(
+                    "kept_counts",
+                    {k: int(np.asarray(v).shape[-1]) for k, v in kept.items()}),
+            })
+        np.savez(out / "arrays.npz",
+                 **{k: np.asarray(v) for k, v in arrays.items()})
+        with open(out / "meta.json", "w") as f:
+            json.dump(meta, f, indent=2)
+            f.write("\n")
+
+
+def _flatten_arrays(tree, prefix: str = "") -> dict:
+    """Nested dicts of arrays -> flat {'a/b/c': leaf}.  Keys must be
+    '/'-free strings (true for every model param tree in this repo)."""
+    flat: dict = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            k = str(k)
+            if "/" in k:
+                raise ValueError(f"checkpoint keys may not contain '/': {k!r}")
+            flat.update(_flatten_arrays(v, f"{prefix}{k}/"))
+        return flat
+    flat[prefix[:-1]] = tree
+    return flat
+
+
+def _unflatten_arrays(flat: dict) -> dict:
+    tree: dict = {}
+    for key, leaf in flat.items():
+        node = tree
+        parts = key.split("/")
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = leaf
+    return tree
+
+
+def _json_safe(x):
+    """numpy scalars/arrays -> python, recursively (checkpoint metadata)."""
+    import numpy as np
+
+    if isinstance(x, dict):
+        return {str(k): _json_safe(v) for k, v in x.items()}
+    if isinstance(x, (list, tuple)):
+        return [_json_safe(v) for v in x]
+    if isinstance(x, (np.generic,)):
+        return x.item()
+    if hasattr(x, "tolist") and hasattr(x, "ndim"):     # np/jnp arrays
+        return np.asarray(x).tolist()
+    return x
+
+
+def load_artifact(path) -> dict:
+    """Load a :meth:`RunResult.save` checkpoint directory.
+
+    Returns ``{"params", "kept", "filter_masks", "mode", "model_config",
+    "history", "meta"}`` — ``kept``/``filter_masks`` are None for a dense
+    (never-pruned) run, ``model_config`` is a rebuilt
+    :class:`~repro.configs.base.ModelConfig` or None if the save didn't
+    record one.  ``repro.serving`` consumes this to decode the checkpoint
+    dense, masked (block-skipping kernel at dense shapes) or shrunk
+    (compacted shapes).
+    """
+    import json
+    import pathlib
+
+    import numpy as np
+
+    p = pathlib.Path(path)
+    with open(p / "meta.json") as f:
+        meta = json.load(f)
+    if meta.get("format") != "repro-checkpoint-v1":
+        raise ValueError(f"{p}: not a repro checkpoint "
+                         f"(format={meta.get('format')!r})")
+    with np.load(p / "arrays.npz") as z:
+        tree = _unflatten_arrays({k: z[k] for k in z.files})
+    from repro.configs.base import ModelConfig
+
+    prune = meta.get("prune") or {}
+    return {
+        "params": tree.get("params", {}),
+        "kept": tree.get("kept"),
+        "filter_masks": tree.get("masks"),
+        "mode": prune.get("mode"),
+        "model_config": (ModelConfig.from_dict(meta["model_config"])
+                         if meta.get("model_config") else None),
+        "history": meta.get("history", {}),
+        "meta": meta,
+    }

@@ -36,12 +36,12 @@ def flash_attention(q, k, v, *, causal=True, window=None,
                   block_k=bk, interpret=_interpret())
 
 
-def decode_attention(q, k, v, *, block_k=512):
+def decode_attention(q, k, v, lengths=None, *, block_k=512):
     s = k.shape[1]
     bk = min(block_k, s)
     if s % bk:
-        return ref.decode_attention_ref(q, k, v)
-    return _decode(q, k, v, block_k=bk, interpret=_interpret())
+        return ref.decode_attention_ref(q, k, v, lengths)
+    return _decode(q, k, v, lengths, block_k=bk, interpret=_interpret())
 
 
 def ssd_scan(x, bmat, cmat, dt, a_log, d, dt_bias, *, chunk=128):

@@ -28,14 +28,19 @@ def flash_attention_ref(q, k, v, *, causal=True, window=None):
     return out.reshape(b, sq, h, hd).astype(q.dtype)
 
 
-def decode_attention_ref(q, k, v):
-    """q [B,1,H,hd], cache k/v [B,S,KV,hd]; every slot attended."""
+def decode_attention_ref(q, k, v, lengths=None):
+    """q [B,1,H,hd], cache k/v [B,S,KV,hd].  ``lengths`` (int32 [B]),
+    when given, limits attention to each sequence's first ``lengths[b]``
+    cache slots (continuous batching); otherwise every slot is attended."""
     b, _, h, hd = q.shape
-    kvh = k.shape[2]
+    s_len, kvh = k.shape[1], k.shape[2]
     g = h // kvh
     qg = q.reshape(b, 1, g, kvh, hd).astype(jnp.float32)
     scores = jnp.einsum("bqgkd,bskd->bgkqs", qg, k.astype(jnp.float32))
     scores = scores / math.sqrt(hd)
+    if lengths is not None:
+        valid = jnp.arange(s_len)[None, :] < lengths[:, None]       # [B, S]
+        scores = jnp.where(valid[:, None, None, None, :], scores, -jnp.inf)
     w = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bgkqs,bskd->bqgkd", w, v.astype(jnp.float32))
     return out.reshape(b, 1, h, hd).astype(q.dtype)

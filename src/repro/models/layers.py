@@ -386,7 +386,15 @@ def attention_block(params, x, positions, cfg: ModelConfig, *,
 def attention_decode(params, x, cache_k, cache_v, cache_index, positions,
                      cfg: ModelConfig, *, window=None, attn_impl="xla"):
     """One-token decode.  x [B,1,d]; cache [B,S,KV,hd] (ring buffer when
-    ``window`` is set and S == window).  Returns (out, new_k, new_v)."""
+    ``window`` is set and S == window).  Returns (out, new_k, new_v).
+
+    ``cache_index`` is either a scalar (lockstep decode: every sequence at
+    the same depth) or an int32 [B] vector (continuous batching: each
+    decode slot at its own fill level).  In both cases the new K/V land at
+    slot ``index mod S`` and slots ``<= index`` are attended — so a
+    freshly admitted request (index reset to 0) never sees the previous
+    occupant's stale cache rows: they only become "valid" again after
+    being overwritten by the new request."""
     b, _, _ = x.shape
     s_cache = cache_k.shape[1]
     q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
@@ -394,25 +402,45 @@ def attention_decode(params, x, cache_k, cache_v, cache_index, positions,
     v_new = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
     q = apply_rope(q, positions, cfg.rope)
     k_new = apply_rope(k_new, positions, cfg.rope)
-    slot = jnp.mod(cache_index, s_cache)
-    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k_new, slot, axis=1)
-    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v_new, slot, axis=1)
+    if jnp.ndim(cache_index) == 0:  # lint: static-branch (on ndim, not value)
+        slot = jnp.mod(cache_index, s_cache)
+        cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k_new, slot,
+                                                      axis=1)
+        cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v_new, slot,
+                                                      axis=1)
+    else:
+        # Per-slot write: one-hot select along S (k_new [B,1,KV,hd]
+        # broadcasts over it) — exact, and batchable with ragged indices.
+        oh = jnp.arange(s_cache)[None, :] == \
+            jnp.mod(cache_index, s_cache)[:, None]                  # [B, S]
+        cache_k = jnp.where(oh[:, :, None, None], k_new, cache_k)
+        cache_v = jnp.where(oh[:, :, None, None], v_new, cache_v)
 
     h, hd = q.shape[2], q.shape[3]          # shape-driven (head padding)
     kvh = cache_k.shape[2]
     g = h // kvh
     qg = q.reshape(b, 1, g, kvh, hd)
     if attn_impl == "pallas":
-        # serving uses full/ring caches where every slot is valid
         from repro.kernels import ops as kops
-        out = kops.decode_attention(q, cache_k, cache_v)
+        if jnp.ndim(cache_index) == 0:  # lint: static-branch (on ndim)
+            # lockstep full/ring caches: every slot valid
+            out = kops.decode_attention(q, cache_k, cache_v)
+        else:
+            # continuous batching: the kernel masks each slot's invalid
+            # tail (index + 1 valid slots after this step's write)
+            out = kops.decode_attention(q, cache_k, cache_v,
+                                        cache_index.astype(jnp.int32) + 1)
     else:
         scores = jnp.einsum("bqgkd,bskd->bgkqs", qg.astype(jnp.float32),
                             cache_k.astype(jnp.float32)) / math.sqrt(hd)
         # Mask slots not yet written (cache filling up).  Once the index
         # passes the cache length (ring-buffer regime) every slot is valid.
-        valid = jnp.arange(s_cache) <= cache_index
-        scores = jnp.where(valid[None, None, None, None, :], scores, -jnp.inf)
+        if jnp.ndim(cache_index) == 0:  # lint: static-branch (on ndim)
+            valid = jnp.arange(s_cache) <= cache_index
+            valid = valid[None, :]
+        else:
+            valid = jnp.arange(s_cache)[None, :] <= cache_index[:, None]
+        scores = jnp.where(valid[:, None, None, None, :], scores, -jnp.inf)
         w = jax.nn.softmax(scores, axis=-1)
         out = jnp.einsum("bgkqs,bskd->bqgkd", w, cache_v.astype(jnp.float32))
         out = out.reshape(b, 1, h, hd).astype(x.dtype)

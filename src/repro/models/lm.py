@@ -511,15 +511,38 @@ class LM:
         cache["cross"]["v"] = jnp.stack(vs)
         return cache
 
-    def decode_step(self, params, cache, batch):
+    def decode_step(self, params, cache, batch, *, masks=None):
         """One-token decode.  batch: tokens [B,1] (or embeds [B,1,d]).
-        Returns (logits [B,1,V], new cache)."""
+        Returns (logits [B,1,V], new cache).
+
+        ``cache["index"]`` may be a scalar (lockstep decode) or an int32
+        [B] vector (continuous batching: per-slot fill levels — rope
+        positions, cache writes and attention validity all follow the
+        per-slot index; see :func:`layers.attention_decode`).
+
+        ``masks`` (optional) carries the FedAP filter keep-masks exactly
+        as in :meth:`apply` — ``{"mlp": [L, d_ff] 0/1}`` riding the layer
+        scan as zipped xs — so a mask-mode pruned checkpoint decodes
+        through the block-skipping masked FFN matmuls at the dense shapes
+        (logits identical to the shrunk model's)."""
         cfg = self.cfg
+        if masks is not None:
+            if cfg.family == "moe":
+                raise ValueError(
+                    "masks= is unsupported for MoE stacks: a zeroed router "
+                    "logit is not -inf, so masked experts would still "
+                    "receive routed mass — prune experts with "
+                    "Prune(mode='shrink') (core.pruning_lm.prune_lm_experts)")
+            if not self.scanned:
+                raise ValueError(
+                    f"masks= requires a scanned stack, not family "
+                    f"{cfg.family!r}")
         x = constrain_batch(self._embed_in(params, batch))
         bsz = x.shape[0]
         idx = cache["index"]
+        step_off = idx if jnp.ndim(idx) == 0 else idx[None, :, None]
         pos = self._positions(batch, 1, bsz) if "positions" in batch else \
-            L.default_positions(bsz, 1, cfg.rope) + idx
+            L.default_positions(bsz, 1, cfg.rope) + step_off
 
         if cfg.family == "encdec":
             new_k, new_v = [], []
@@ -594,10 +617,15 @@ class LM:
                      "index": idx + 1}
             return self._head(params, x), cache
 
-        # scanned dense/moe/vlm decode
+        # scanned dense/moe/vlm decode (filter masks, when given, ride the
+        # layer scan as extra xs — same zip as apply())
         def body(carry, scanned):
             x, li = carry
-            layer_params, ck, cv = scanned
+            if masks is not None:
+                layer_params, ck, cv, layer_masks = scanned
+            else:
+                layer_params, ck, cv = scanned
+                layer_masks = None
             h = L.apply_norm(layer_params["norm_a"], x, cfg.norm)
             y, ck, cv = L.attention_decode(layer_params["attn"], h, ck, cv, idx, pos,
                                            cfg, attn_impl=self.attn_impl)
@@ -607,11 +635,15 @@ class LM:
                 y, _ = L.apply_moe(layer_params["moe"], h, cfg)
                 x = x + y
             else:
-                x = x + L.apply_mlp(layer_params["mlp"], h, cfg.act)
+                x = x + L.apply_mlp(layer_params["mlp"], h, cfg.act,
+                                    None if layer_masks is None
+                                    else layer_masks["mlp"])
             return (x, li + 1), (ck, cv)
 
+        xs = (params["layers"], cache["k"], cache["v"])
+        if masks is not None:
+            xs = xs + (masks,)
         (x, _), (k_new, v_new) = jax.lax.scan(
-            body, (x, jnp.zeros((), jnp.int32)),
-            (params["layers"], cache["k"], cache["v"]))
+            body, (x, jnp.zeros((), jnp.int32)), xs)
         cache = {"k": k_new, "v": v_new, "index": idx + 1}
         return self._head(params, x), cache

@@ -1,0 +1,156 @@
+"""Pure-NumPy float64 forward of the dense LM — the precision oracle.
+
+The jax model (:class:`repro.models.lm.LM`) hard-casts its numerically
+sensitive stages (rmsnorm statistics, rope angles, attention softmax) to
+f32 — correct for training, but it means the model can never serve as its
+own high-precision reference.  This module re-implements the dense-family
+forward end-to-end in float64 NumPy — embedding, rmsnorm, 1d rope, GQA
+causal attention, (masked) SwiGLU/GELU FFN, logits, loss/accuracy — with
+no jax involvement, mirroring the :mod:`repro.core.ref_engine` oracle
+idiom at the model level.
+
+What it buys:
+
+* ``tests/test_ref64.py`` locks the f32 jax forward against the f64
+  truth (the whole-model float error budget, not just op-level allclose);
+* the FedAP mask == shrink identity is PROVABLE here: in f64 with exact
+  0/1 masks, the masked forward and the structurally compacted forward
+  are bit-identical (silu(0) = gelu(0) = 0 through wo) — any deviation in
+  the jax paths is therefore float reassociation, not semantics.
+
+Scope: the scanned dense family (stacked ``params["layers"]``, rmsnorm,
+rope 1d, silu/gelu) — the family the serving and FedAP-LM paths run on.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+EPS = 1e-5   # matches layers.apply_norm
+
+
+def _f64(tree):
+    if isinstance(tree, dict):
+        return {k: _f64(v) for k, v in tree.items()}
+    return np.asarray(tree, np.float64)
+
+
+def _check_cfg(cfg: ModelConfig):
+    if cfg.family != "dense":
+        raise ValueError(f"ref64 covers the dense family, not {cfg.family!r}")
+    if cfg.norm != "rmsnorm" or cfg.rope != "1d":
+        raise ValueError(
+            f"ref64 covers norm='rmsnorm' + rope='1d', got "
+            f"norm={cfg.norm!r} rope={cfg.rope!r}")
+    if cfg.act not in ("silu", "gelu"):
+        raise ValueError(f"ref64 covers act in ('silu','gelu'), {cfg.act!r}")
+
+
+def rmsnorm(x, scale):
+    y = x / np.sqrt(np.mean(np.square(x), -1, keepdims=True) + EPS)
+    return y * scale
+
+
+def rope_1d(x, positions, base: float = 10000.0):
+    """x [B,S,n,hd], positions [S] -> interleaved-pairs rotation in f64."""
+    hd = x.shape[-1]
+    freqs = 1.0 / (base ** (np.arange(0, hd, 2, dtype=np.float64) / hd))
+    ang = np.asarray(positions, np.float64)[:, None] * freqs   # [S, hd//2]
+    sin = np.sin(ang)[None, :, None, :]
+    cos = np.cos(ang)[None, :, None, :]
+    x1, x2 = x[..., ::2], x[..., 1::2]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return np.stack([y1, y2], axis=-1).reshape(x.shape)
+
+
+def _softmax(scores):
+    m = np.max(scores, -1, keepdims=True)
+    e = np.exp(scores - m)
+    return e / np.sum(e, -1, keepdims=True)
+
+
+def gqa_causal_attention(q, k, v):
+    """q [B,S,H,hd], k/v [B,S,KV,hd]; [g, kv] head grouping as in
+    layers.attention_ref."""
+    b, s, h, hd = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, s, g, kvh, hd)
+    scores = np.einsum("bqgkd,bskd->bgkqs", qg, k) / np.sqrt(float(hd))
+    causal = np.tril(np.ones((s, s), bool))
+    scores = np.where(causal[None, None, None], scores, -np.inf)
+    w = _softmax(scores)
+    out = np.einsum("bgkqs,bskd->bqgkd", w, v)
+    return out.reshape(b, s, h, hd)
+
+
+def _silu(x):
+    return x / (1.0 + np.exp(-x))
+
+
+def _gelu(x):
+    # jax.nn.gelu default: tanh approximation
+    return 0.5 * x * (1.0 + np.tanh(
+        np.sqrt(2.0 / np.pi) * (x + 0.044715 * x ** 3)))
+
+
+def mlp(blk, h, act: str, mask=None):
+    hi = h @ blk["wi"]
+    if mask is not None:
+        hi = hi * mask                       # pre-activation zeroing
+    if act == "silu":
+        hg = h @ blk["wg"]
+        if mask is not None:
+            hg = hg * mask
+        hi = _silu(hg) * hi
+    else:
+        hi = _gelu(hi)
+    return hi @ blk["wo"]
+
+
+def forward_f64(cfg: ModelConfig, params, tokens, masks=None):
+    """Full-sequence logits [B,S,V] in float64.
+
+    ``params`` is the jax LM param tree (stacked ``layers``); ``masks``
+    the optional FedAP filter keep-masks ``{"mlp": [L, d_ff]}``.
+    """
+    _check_cfg(cfg)
+    p = _f64(params)
+    tokens = np.asarray(tokens)
+    x = p["embed"][tokens]                                  # [B,S,d]
+    positions = np.arange(tokens.shape[1])
+    for layer in range(cfg.num_layers):
+        blk = {k: (v if not isinstance(v, dict)
+                   else {k2: v2[layer] for k2, v2 in v.items()})
+               for k, v in p["layers"].items()}
+        mask = (None if masks is None
+                else np.asarray(masks["mlp"][layer], np.float64))
+
+        h = rmsnorm(x, blk["norm_a"]["scale"])
+        q = np.einsum("bsd,dhk->bshk", h, blk["attn"]["wq"])
+        k = np.einsum("bsd,dhk->bshk", h, blk["attn"]["wk"])
+        v = np.einsum("bsd,dhk->bshk", h, blk["attn"]["wv"])
+        q = rope_1d(q, positions)
+        k = rope_1d(k, positions)
+        out = gqa_causal_attention(q, k, v)
+        x = x + np.einsum("bshk,hkd->bsd", out, blk["attn"]["wo"])
+
+        h = rmsnorm(x, blk["norm_f"]["scale"])
+        x = x + mlp(blk["mlp"], h, cfg.act, mask)
+
+    x = rmsnorm(x, p["norm_out"]["scale"])
+    w = p["embed"].T if cfg.tie_embeddings else p["unembed"]
+    return x @ w
+
+
+def loss_and_acc_f64(cfg: ModelConfig, params, tokens, labels, masks=None):
+    """Next-token CE + token accuracy in f64 (mirrors LM.loss_and_acc)."""
+    logits = forward_f64(cfg, params, tokens, masks=masks)
+    labels = np.asarray(labels)
+    m = np.max(logits, -1, keepdims=True)
+    logp = logits - m - np.log(np.sum(np.exp(logits - m), -1, keepdims=True))
+    nll = -np.take_along_axis(logp, labels[..., None], -1)[..., 0]
+    acc = np.mean(np.argmax(logits, -1) == labels)
+    return float(np.mean(nll)), float(acc)

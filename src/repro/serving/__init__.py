@@ -1,0 +1,22 @@
+"""Pruned-checkpoint serving: continuous-batching decode over flash-decode.
+
+``repro.serving`` closes the train->deploy loop: a federated run's
+``RunResult`` (or its ``RunResult.save`` checkpoint directory) loads into
+a fixed-slot continuous-batching decode engine that realizes FedAP's
+FLOP cut at inference — masked (block-skipping kernel at dense shapes) or
+shrunk (compacted shapes).
+
+    from repro import serving
+
+    servable = serving.load_servable("ckpt/", "shrunk")
+    eng = serving.DecodeEngine(servable.model, servable.params,
+                               serving.ServeConfig(slots=8, cache_len=64),
+                               masks=servable.masks)
+    for completion in eng.run(prompts):
+        print(completion.uid, completion.tokens)
+"""
+from repro.serving.checkpoint import SERVE_MODES, Servable, load_servable
+from repro.serving.engine import Completion, DecodeEngine, ServeConfig
+
+__all__ = ["Completion", "DecodeEngine", "ServeConfig",
+           "SERVE_MODES", "Servable", "load_servable"]

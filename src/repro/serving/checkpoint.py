@@ -1,0 +1,131 @@
+"""Checkpoint -> servable (model, params, masks) for the decode engine.
+
+Bridges the training side (``RunResult.save`` / ``core.plan.load_artifact``
+checkpoint directories, or an in-memory ``RunResult``) to the three serving
+modes of a FedAP-pruned LM:
+
+* ``dense``   — decode the params as saved (a mask-trained checkpoint's
+                pruned coordinates are exact zeros, so this is correct but
+                does dense-shape FLOPs);
+* ``masked``  — dense shapes, FFN matmuls through the block-skipping
+                ``masked_matmul`` kernel (``decode_step(..., masks=)``):
+                pruned 128-lane blocks are skipped on the MXU;
+* ``shrunk``  — structurally compacted params (``shrink_ffn_at``) decode
+                at the smaller d_ff: the full FLOP and memory cut.
+
+``masked`` and ``shrunk`` produce logits equal to within float
+reassociation (locked <= 1e-5 by tests/test_serving.py); ``masked`` keeps
+the dense parameter layout (cheap to flip back, e.g. for continued
+training), ``shrunk`` is the deployment end-state.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+SERVE_MODES = ("auto", "dense", "masked", "shrunk")
+
+
+@dataclasses.dataclass(frozen=True)
+class Servable:
+    """What :func:`load_servable` hands to ``DecodeEngine``: build the
+    engine as ``DecodeEngine(s.model, s.params, cfg, masks=s.masks)``."""
+
+    model: Any
+    params: Any
+    masks: Optional[dict]
+    mode: str
+
+
+def _infer_d_ff(params) -> int | None:
+    layers = params.get("layers") if isinstance(params, dict) else None
+    if isinstance(layers, dict) and "mlp" in layers:
+        return int(np.asarray(layers["mlp"]["wi"]).shape[-1])
+    return None
+
+
+def load_servable(source, serve_mode: str = "auto", *, model_config=None,
+                  attn_impl: str = "pallas") -> Servable:
+    """Build a servable from ``source`` — a checkpoint directory path, a
+    ``core.plan.load_artifact`` dict, or a ``RunResult``-shaped object
+    (``.params`` + ``.artifacts``).
+
+    ``serve_mode="auto"`` picks ``masked`` when the checkpoint carries a
+    mask-mode prune decision, ``shrunk`` for a shrink-mode one, ``dense``
+    otherwise.  ``model_config`` overrides (or supplies, for in-memory
+    sources) the checkpoint's recorded config; its ``d_ff`` is re-derived
+    from the actual param shapes, so a config recorded before a shrink
+    still loads.
+    """
+    from repro.models.lm import LM
+
+    if serve_mode not in SERVE_MODES:
+        raise ValueError(
+            f"serve_mode must be one of {SERVE_MODES}, got {serve_mode!r}")
+
+    if hasattr(source, "artifacts") and hasattr(source, "params"):
+        art: dict = {"params": source.params, "kept": None,
+                     "filter_masks": None, "mode": None, "model_config": None}
+        for entry in source.artifacts.values():
+            if isinstance(entry, dict) and "kept" in entry:
+                art["kept"] = dict(entry["kept"] or {})
+                art["filter_masks"] = (dict(entry["filter_masks"])
+                                       if entry.get("filter_masks") else None)
+                art["mode"] = entry.get("mode")
+    elif isinstance(source, dict):
+        art = source
+    else:
+        from repro.core.plan import load_artifact
+
+        art = load_artifact(source)
+
+    cfg = model_config or art.get("model_config")
+    if cfg is None:
+        raise ValueError(
+            "no model config: the checkpoint was saved without one — pass "
+            "model_config= (RunResult.save(..., model_config=cfg) records "
+            "it)")
+    params = art["params"]
+    kept = art.get("kept")
+    mode = serve_mode
+    if mode == "auto":
+        mode = ("dense" if kept is None
+                else "shrunk" if art.get("mode") == "shrink" else "masked")
+
+    # trust the param shapes over the recorded d_ff (a shrink-mode run's
+    # params are already compacted relative to its training-time config)
+    d_ff = _infer_d_ff(params)
+    if d_ff is not None and d_ff != cfg.d_ff:
+        cfg = dataclasses.replace(cfg, d_ff=d_ff)
+
+    if mode == "dense":
+        return Servable(LM(cfg, attn_impl=attn_impl), params, None, mode)
+
+    if kept is None:
+        raise ValueError(
+            f"serve_mode={mode!r} needs a pruned checkpoint, but this one "
+            f"carries no kept-filter decision (train with a Prune event, "
+            f"or serve dense)")
+
+    if mode == "masked":
+        masks = art.get("filter_masks")
+        if masks is None:
+            model = LM(cfg, attn_impl=attn_impl)
+            masks = model.filter_masks(
+                params, {k: jnp.asarray(v) for k, v in kept.items()})
+        else:
+            masks = {k: jnp.asarray(v) for k, v in masks.items()}
+        return Servable(LM(cfg, attn_impl=attn_impl), params, masks, mode)
+
+    # shrunk: compact (a no-op if the checkpoint is already shrink-mode —
+    # its kept width equals the param width)
+    from repro.core import pruning_lm
+
+    idx = np.asarray(kept["mlp"])
+    if idx.shape[-1] != d_ff:
+        params = pruning_lm.shrink_ffn_at(params, jnp.asarray(idx))
+        cfg = dataclasses.replace(cfg, d_ff=int(idx.shape[-1]))
+    return Servable(LM(cfg, attn_impl=attn_impl), params, None, mode)

@@ -114,6 +114,48 @@ class TestDecodeAttention:
         dec = decode_attention(q[:, -1:], k, v, block_k=128, interpret=True)
         np.testing.assert_allclose(dec[:, 0], full[:, -1], atol=2e-5, rtol=2e-5)
 
+    @pytest.mark.parametrize("lengths", [[1, 128, 300, 512], [37, 512, 5, 100]])
+    def test_ragged_lengths_match_ref(self, lengths):
+        """Per-batch valid-prefix masking (the continuous-batching slot
+        semantics), including lengths mid-block and whole kv blocks past
+        the valid prefix."""
+        b, s, h, kv, hd = 4, 512, 8, 2, 64
+        q = _rand((b, 1, h, hd), jnp.float32)
+        k = _rand((b, s, kv, hd), jnp.float32)
+        v = _rand((b, s, kv, hd), jnp.float32)
+        lens = jnp.asarray(lengths, jnp.int32)
+        out = decode_attention(q, k, v, lens, block_k=128, interpret=True)
+        want = ref.decode_attention_ref(q, k, v, lens)
+        np.testing.assert_allclose(out, want, atol=2e-5, rtol=2e-5)
+
+    def test_full_lengths_equal_unmasked(self):
+        """lengths == s_len must reproduce the unmasked kernel bit-exactly."""
+        b, s, h, kv, hd = 2, 256, 4, 2, 64
+        q = _rand((b, 1, h, hd), jnp.float32)
+        k = _rand((b, s, kv, hd), jnp.float32)
+        v = _rand((b, s, kv, hd), jnp.float32)
+        full = decode_attention(q, k, v, jnp.full((b,), s, jnp.int32),
+                                block_k=128, interpret=True)
+        plain = decode_attention(q, k, v, block_k=128, interpret=True)
+        assert np.array_equal(np.asarray(full), np.asarray(plain))
+
+    def test_stale_rows_never_attended(self):
+        """Garbage past a slot's valid prefix (a page's previous occupant)
+        must not perturb the output at all."""
+        b, s, h, kv, hd = 2, 256, 4, 2, 64
+        q = _rand((b, 1, h, hd), jnp.float32)
+        k = _rand((b, s, kv, hd), jnp.float32)
+        v = _rand((b, s, kv, hd), jnp.float32)
+        lens = jnp.asarray([100, 17], jnp.int32)
+        clean = decode_attention(q, k, v, lens, block_k=128, interpret=True)
+        pos = np.arange(s)[None, :, None, None] >= np.asarray(lens)[:, None,
+                                                                    None, None]
+        trash_k = jnp.where(pos, 1e4, k)
+        trash_v = jnp.where(pos, -1e4, v)
+        dirty = decode_attention(q, trash_k, trash_v, lens, block_k=128,
+                                 interpret=True)
+        assert np.array_equal(np.asarray(clean), np.asarray(dirty))
+
 
 class TestSSDScan:
     @pytest.mark.parametrize("b,s,nh,p,n,chunk", [

@@ -377,14 +377,20 @@ def test_lm_engine_matches_f64_oracle(oracle_world, row):
 
     _, (taus, phist) = run(state0, stacked)
 
+    # Round-arithmetic budget: both legs share the SAME f32 jax grad, so
+    # the only divergence is the federated arithmetic (aggregation,
+    # momentum, FedDU update) in f64 vs f32 — measured worst drift is
+    # ~2.5e-7 over ROUNDS rounds; 2e-6 gives ~8x headroom.  (The model
+    # forward's own f32 error is locked separately against the NumPy-f64
+    # oracle in tests/test_ref64.py.)
     for r in range(ROUNDS):
         for leaf, ref_leaf in zip(jax.tree.leaves(phist),
                                   jax.tree.leaves(ref_params[r])):
             np.testing.assert_allclose(
-                np.asarray(leaf[r]), ref_leaf, atol=1e-5,
+                np.asarray(leaf[r]), ref_leaf, atol=2e-6,
                 err_msg=f"[{row}] params diverged from oracle at round {r}")
     np.testing.assert_allclose(np.asarray(taus), np.asarray(ref_taus),
-                               atol=1e-5, err_msg=f"[{row}] tau_eff")
+                               atol=2e-6, err_msg=f"[{row}] tau_eff")
     if masks is not None:
         for leaf, m in zip(jax.tree.leaves(phist), jax.tree.leaves(masks)):
             np.testing.assert_array_equal(

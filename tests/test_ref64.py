@@ -1,0 +1,104 @@
+"""f64 model oracle locks: the jax f32 LM forward vs repro.models.ref64.
+
+The NumPy float64 forward is the precision ground truth the f32 jax
+model (which hard-casts rmsnorm/rope/softmax to f32) is measured
+against.  Two claims:
+
+* the WHOLE-MODEL f32 float error is bounded (2e-5 on logits, 1e-6 on
+  the loss scalar — an order of magnitude of headroom over measured);
+* in f64 the FedAP mask-mode and shrink-mode forwards are BIT-IDENTICAL
+  (exact 0/1 masks, silu(0) = 0 through wo), proving any masked-vs-shrunk
+  delta in the jax paths is f32 reassociation, not semantics.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.core import pruning_lm
+from repro.models import ref64
+from repro.models.lm import LM
+
+CFG = ModelConfig(name="dense-tiny", family="dense", rope="1d",
+                  norm="rmsnorm", act="silu", param_dtype="float32",
+                  remat="none", num_layers=2, d_model=64, num_heads=2,
+                  num_kv_heads=1, d_ff=128, vocab_size=256)
+
+
+@pytest.fixture(scope="module")
+def world():
+    model = LM(CFG)
+    params = model.init(jax.random.key(1))
+    rng = np.random.default_rng(7)
+    toks = rng.integers(0, CFG.vocab_size, (4, 16)).astype(np.int32)
+    labels = rng.integers(0, CFG.vocab_size, (4, 16)).astype(np.int32)
+    return model, params, toks, labels
+
+
+class TestForwardLock:
+    def test_dense_forward_within_budget(self, world):
+        model, params, toks, _ = world
+        want = ref64.forward_f64(CFG, params, toks)
+        got, aux = model.apply(params, {"tokens": jnp.asarray(toks)})
+        assert float(aux) == 0.0
+        np.testing.assert_allclose(np.asarray(got, np.float64), want,
+                                   atol=2e-5, rtol=0)
+
+    def test_masked_forward_within_budget(self, world):
+        model, params, toks, _ = world
+        kept = model.decide_kept(params, 0.5, align=64)
+        fmasks = model.filter_masks(params, kept)
+        want = ref64.forward_f64(CFG, params, toks, masks=fmasks)
+        got, _ = model.apply(params, {"tokens": jnp.asarray(toks)},
+                             masks=fmasks)
+        np.testing.assert_allclose(np.asarray(got, np.float64), want,
+                                   atol=2e-5, rtol=0)
+
+    def test_loss_and_acc_lock(self, world):
+        model, params, toks, labels = world
+        want_loss, want_acc = ref64.loss_and_acc_f64(CFG, params, toks,
+                                                     labels)
+        loss, acc = model.loss_and_acc(params, jnp.asarray(toks),
+                                       jnp.asarray(labels))
+        assert abs(float(loss) - want_loss) < 1e-6
+        assert float(acc) == want_acc
+
+    def test_gelu_variant(self, world):
+        """The act='gelu' (no-gate) FFN leg of the oracle."""
+        cfg = dataclasses.replace(CFG, act="gelu")
+        model = LM(cfg)
+        params = model.init(jax.random.key(2))
+        toks = np.arange(32, dtype=np.int32).reshape(2, 16)
+        want = ref64.forward_f64(cfg, params, toks)
+        got, _ = model.apply(params, {"tokens": jnp.asarray(toks)})
+        np.testing.assert_allclose(np.asarray(got, np.float64), want,
+                                   atol=2e-5, rtol=0)
+
+
+class TestMaskShrinkIdentity:
+    def test_bit_identical_in_f64(self, world):
+        """masked forward == structurally shrunk forward, EXACTLY, when
+        both run in f64 — the semantic core of FedAP's mask mode."""
+        model, params, toks, _ = world
+        kept = model.decide_kept(params, 0.5, align=64)
+        fmasks = model.filter_masks(params, kept)
+        masked = ref64.forward_f64(CFG, params, toks, masks=fmasks)
+        shrunk_params = pruning_lm.shrink_ffn_at(params, kept["mlp"])
+        scfg = dataclasses.replace(
+            CFG, d_ff=int(np.asarray(kept["mlp"]).shape[-1]))
+        shrunk = ref64.forward_f64(scfg, shrunk_params, toks)
+        assert np.array_equal(masked, shrunk)      # not allclose: equal
+
+
+class TestScope:
+    def test_unsupported_config_is_loud(self, world):
+        _, params, toks, _ = world
+        with pytest.raises(ValueError, match="dense"):
+            ref64.forward_f64(dataclasses.replace(CFG, family="moe"),
+                              params, toks)
+        with pytest.raises(ValueError, match="rmsnorm"):
+            ref64.forward_f64(dataclasses.replace(CFG, norm="layernorm"),
+                              params, toks)
