@@ -82,6 +82,19 @@ the same kernel-vs-dense-masked split on the 128-aligned tiny
 transformer at FedAP prune rate 0.5: the FFN wi/wg matmuls route
 through the block-skipping masked_dense with the keep-masks riding the
 layer scan.  Same CPU-interpret timing caveat.
+
+Guarded-training benchmark (emits BENCH_guarded_train.json):
+
+  PYTHONPATH=src python -m benchmarks.perf_iter --guarded-train
+
+warm rounds/s of the same FedDUMAP plan with the in-scan health guard
+off vs guard="reject_client" vs guard="skip_round": the cost of the
+per-round finiteness checks, rejected-client scrubbing and discard
+data-flow (all inside the ONE chunk program — zero extra traces, locked
+by the guard_* compile-budget scenarios).  On this CPU container the
+guard's elementwise isfinite reductions compete with the matmuls for the
+same two cores, so the measured overhead is an upper bound — on real
+accelerators the checks are bandwidth-trivial next to the client matmuls.
 """
 import argparse
 import dataclasses
@@ -497,6 +510,84 @@ def bench_mesh_backend(out_dir: str, *, rounds: int = 12) -> dict:
     out = Path(out_dir)
     out.mkdir(parents=True, exist_ok=True)
     path = out / "BENCH_mesh_backend.json"
+    path.write_text(json.dumps(rec, indent=2))
+    print(f"-> {path}")
+    return rec
+
+
+def bench_guarded_train(out_dir: str, *, rounds: int = 12) -> dict:
+    """Rounds/sec of one FedDUMAP plan with the in-scan health guard off
+    vs on (both modes), at two client counts on the local scan backend.
+
+    Timings are WARM (second run of the same trainer).  The guard is pure
+    device data-flow riding the existing chunk program, so the expected
+    cost is a few elementwise isfinite reductions per round; on this CPU
+    container they share two cores with the matmuls, making the measured
+    ratio an upper bound on real-accelerator overhead.
+    """
+    import dataclasses as dc
+    import time
+
+    import jax
+
+    from repro.core import FederatedTrainer, feddumap_config
+    from repro.data import build_federated_data
+    from repro.data.synthetic import SyntheticSpec
+    from repro.models import SimpleCNN
+
+    model = SimpleCNN(num_classes=10, image_shape=(8, 8, 3),
+                      channels=(8, 8, 8), fc_width=16)
+
+    def timed_run(trainer):
+        trainer.run(rounds, eval_every=rounds)          # compile + data
+        t0 = time.perf_counter()
+        trainer.run(rounds, eval_every=rounds)
+        return rounds / (time.perf_counter() - t0)
+
+    scenarios = []
+    for num_clients, cpr in [(16, 8), (32, 16)]:
+        spec = SyntheticSpec(num_classes=10, image_shape=(8, 8, 3),
+                             train_size=num_clients * 100 + 1100,
+                             test_size=200, noise_scale=0.5)
+        data = build_federated_data(num_clients=num_clients,
+                                    server_fraction=0.1,
+                                    device_pool=num_clients * 100, spec=spec)
+        cfg = feddumap_config(num_clients=num_clients, clients_per_round=cpr,
+                              local_epochs=1, batch_size=10, lr=0.05)
+        off = timed_run(FederatedTrainer(model, data, cfg))
+        reject = timed_run(FederatedTrainer(
+            model, data, dc.replace(cfg, guard="reject_client")))
+        skip = timed_run(FederatedTrainer(
+            model, data, dc.replace(cfg, guard="skip_round")))
+        scenarios.append({
+            "num_clients": num_clients,
+            "clients_per_round": cpr,
+            "guard_off_rounds_per_s": off,
+            "guard_reject_rounds_per_s": reject,
+            "guard_skip_rounds_per_s": skip,
+            "reject_vs_off": reject / off,
+            "skip_vs_off": skip / off,
+        })
+        print(f"guarded_train[C={num_clients},cpr={cpr}]: off {off:.2f} "
+              f"rounds/s  reject {reject:.2f} ({reject / off:.2f}x)  "
+              f"skip {skip:.2f} ({skip / off:.2f}x)")
+
+    rec = {
+        "bench": "guarded_train",
+        "rounds": rounds,
+        "devices": len(jax.devices()),
+        "algorithm": "feddumap",
+        "timing_note": "warm rounds/s on the local scan backend; the guard "
+                       "adds zero jitted programs (guard_* compile-budget "
+                       "scenarios) — on this shared-core CPU container the "
+                       "isfinite reductions contend with the matmuls, so "
+                       "the on/off ratio is an upper bound on accelerator "
+                       "overhead",
+        "scenarios": scenarios,
+    }
+    out = Path(out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+    path = out / "BENCH_guarded_train.json"
     path.write_text(json.dumps(rec, indent=2))
     print(f"-> {path}")
     return rec
@@ -1032,6 +1123,9 @@ def main():
                     help="LM training step on the 128-aligned tiny "
                          "transformer: masked-FFN kernel path vs. "
                          "dense-masked params, + analytic FLOP reduction")
+    ap.add_argument("--guarded-train", action="store_true",
+                    help="rounds/sec: in-scan health guard off vs "
+                         "reject_client vs skip_round on the local backend")
     ap.add_argument("--serve-decode", action="store_true",
                     help="continuous-batching decode tokens/s: prune rate "
                          "{0, 0.25, 0.5} x serve mode {dense, masked, "
@@ -1066,6 +1160,9 @@ def main():
     if args.masked_lm_train:
         bench_masked_lm_train(args.out)
         return
+    if args.guarded_train:
+        bench_guarded_train(args.out, rounds=args.rounds or 12)
+        return
     if args.serve_decode:
         bench_serve_decode(args.out)
         return
@@ -1073,7 +1170,7 @@ def main():
         ap.error("--arch/--shape/--variant are required unless one of "
                  "--fl-engine/--fedap-plan/--mesh-backend/"
                  "--mesh-server-eval/--masked-train/--masked-lm-train/"
-                 "--serve-decode is given")
+                 "--guarded-train/--serve-decode is given")
 
     spec = VARIANTS[args.variant]
     for k, v in spec.get("env", {}).items():

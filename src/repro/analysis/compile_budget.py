@@ -61,6 +61,7 @@ class Scenario:
     world: str = "cnn"                 # "cnn" | "lm" (make_world kind)
     kind: str = "plan"                 # "plan" | "serving"
     serve_mode: str = "dense"          # serving: dense | masked | shrunk
+    guard: str = "off"                 # EngineConfig.guard health-guard mode
     note: str = ""
 
 
@@ -113,6 +114,19 @@ def scenarios() -> list[Scenario]:
                             note="transformer LM with the masked FFN "
                                  "matmuls routed through the Pallas "
                                  "masked kernel"))
+    # The reliability leg of the contract: the in-scan health guards
+    # (finiteness checks + rejected-client scrubbing + round discard) are
+    # pure data-flow inside round_core — turning them on must add ZERO
+    # chunk programs over the guard-off scan_eval budget, on both
+    # backends.
+    for backend in ("local", "mesh"):
+        for guard in ("reject_client", "skip_round"):
+            out.append(Scenario(
+                f"{backend}/guard_{guard.split('_')[0]}", backend,
+                _plans()["scan_eval"], guard=guard,
+                note=f"guard={guard!r} health guard on: finiteness "
+                     f"checks and round discard ride the one chunk "
+                     f"program — zero extra traces"))
     # The serving leg of the contract: the continuous-batching
     # DecodeEngine compiles exactly TWO programs — _admit (one slot
     # write) and _wave (the step scan) — and re-traces NEITHER across
@@ -308,6 +322,8 @@ def run_scenario(sc: Scenario, world=None) -> ScenarioResult:
     data, cfg = world if world is not None else make_world(sc.world)
     if sc.masked_compute != "params":
         cfg = _dc.replace(cfg, masked_compute=sc.masked_compute)
+    if sc.guard != "off":
+        cfg = _dc.replace(cfg, guard=sc.guard)
     model = _fresh_model(sc.world)
     plan = sc.plan_factory()
     tr = FederatedTrainer(model, data, cfg, backend=sc.backend)

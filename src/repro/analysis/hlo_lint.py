@@ -10,6 +10,10 @@ Checked invariants:
   single-device scan must be communication-free (checked for BOTH
   canonical worlds: the CNN chunk and the transformer-LM chunk, whose
   layer scan carries the FFN keep-masks as zipped xs);
+* **Guarded chunk stays clean** — with ``EngineConfig.guard`` on, the
+  in-scan health guard (finiteness checks, rejected-client scrubbing,
+  round discard) must be pure device data-flow: no host callbacks, no
+  f64 promotion, no collectives in the local program;
 * **No host callbacks / infeed / outfeed** inside any lowered program —
   a `io_callback`/`debug.print` smuggled into the scan body would stall
   every round on the host; checked for the serving wave program too,
@@ -127,13 +131,18 @@ def mesh_all_reduce_profile(cm, *, length: int, server_tau: int) -> dict:
 
 
 def _lower_chunk(backend_name: str, world=None, *, kind: str = "cnn",
-                 use_masks: bool = False) -> tuple[str, dict]:
+                 use_masks: bool = False,
+                 guard: str = "off") -> tuple[str, dict]:
     """Optimized HLO text of the canonical chunk + the world's sample_kw."""
+    import dataclasses as _dc
+
     import jax
 
     from repro.core import FederatedTrainer
 
     data, cfg = world if world is not None else make_world(kind)
+    if guard != "off":
+        cfg = _dc.replace(cfg, guard=guard)
     model = _fresh_model(kind)
     tr = FederatedTrainer(model, data, cfg, backend=backend_name)
     be = tr.backend(use_masks=use_masks)
@@ -198,6 +207,24 @@ def check(budget: dict | None = None, world=None) -> list[str]:
     if coll:
         errors.append(f"local chunk: collectives in the single-device scan "
                       f"program: {coll}")
+
+    # ---- guarded local program: the in-scan health guard (finiteness
+    # checks + scrubbing + round discard) must be pure device data-flow —
+    # no host callbacks (a host-side NaN check would stall every round),
+    # no f64 (the guard compares in the training dtype), no collectives --
+    txt_g, _ = _lower_chunk("local", world, guard="reject_client")
+    if f64_ops(txt_g):
+        errors.append(f"guarded local chunk: {f64_ops(txt_g)} f64 tensor "
+                      f"reference(s) leaked in by the health guard")
+    cbs = host_callbacks(txt_g)
+    if cbs:
+        errors.append(f"guarded local chunk: host callback ops in lowered "
+                      f"program (the guard must not sync to host): {cbs}")
+    coll_g = dict(
+        hlo_cost.HloCostModel(txt_g).entry_cost().collective_counts)
+    if coll_g:
+        errors.append(f"guarded local chunk: collectives in the "
+                      f"single-device scan program: {coll_g}")
 
     # ---- LM local program: the transformer chunk (layer scan carrying
     # the FFN keep-masks) must stay collective-free and clean too --------
@@ -315,6 +342,9 @@ def update(world=None) -> dict:
     txt_lm, _ = _lower_chunk("local", kind="lm", use_masks=True)
     lm_coll = dict(
         hlo_cost.HloCostModel(txt_lm).entry_cost().collective_counts)
+    txt_g, _ = _lower_chunk("local", world, guard="reject_client")
+    g_coll = dict(
+        hlo_cost.HloCostModel(txt_g).entry_cost().collective_counts)
     sv_coll = dict(hlo_cost.HloCostModel(
         _lower_serving()).entry_cost().collective_counts)
     svm_coll = dict(hlo_cost.HloCostModel(
@@ -331,6 +361,7 @@ def update(world=None) -> dict:
         ],
         "mesh": {k: v for k, v in prof.items()},
         "local": {"collectives": 0},
+        "guarded_local": {"collectives": sum(g_coll.values())},
         "lm_local": {"collectives": sum(lm_coll.values())},
         "serving": {"collectives": sum(sv_coll.values())},
         "serving_masked": {"collectives": sum(svm_coll.values())},

@@ -167,8 +167,12 @@ def shrink_params_for(model, params, kept):
 
 def build_chunk(eng: EngineConfig, grad_fn, la_fn, sample_kw: dict, *,
                 prefetch: bool = True, constrain=None):
-    """``chunk(state, key, data_dev, length) -> (state, key, taus)`` — one
-    scan over `round_core` with device-side sampling.
+    """``chunk(state, key, data_dev, length) -> (state, key, mets)`` — one
+    scan over `round_core` with device-side sampling.  ``mets`` is a dict
+    of per-round stacked metrics: ``{"tau_eff": [length], "health":
+    [length]}`` (``health`` = guard rejection counts; identically zero
+    with the guard off — the metric structure never depends on the guard
+    mode, so guard configs compile zero extra programs).
 
     ``constrain`` (MeshBackend) maps the sampled batch through sharding
     constraints so the client axis partitions over the mesh.
@@ -189,17 +193,20 @@ def build_chunk(eng: EngineConfig, grad_fn, la_fn, sample_kw: dict, *,
         batch = engine.sample_round_batches(sub, data_dev, **sample_kw)
         return constrain(batch) if constrain is not None else batch
 
+    def _mets(metrics):
+        return {"tau_eff": metrics["tau_eff"], "health": metrics["health"]}
+
     def serial_chunk(state, key, data_dev, length):
         def body(carry, _):
             st, k = carry
             k, sub = jax.random.split(k)
             batch = sample(sub, data_dev)
             st, metrics = engine.round_core(eng, grad_fn, la_fn, st, batch)
-            return (st, k), metrics["tau_eff"]
+            return (st, k), _mets(metrics)
 
-        (state, key), taus = jax.lax.scan(body, (state, key), None,
+        (state, key), mets = jax.lax.scan(body, (state, key), None,
                                           length=length)
-        return state, key, taus
+        return state, key, mets
 
     if not prefetch:
         return serial_chunk
@@ -218,11 +225,11 @@ def build_chunk(eng: EngineConfig, grad_fn, la_fn, sample_kw: dict, *,
             k_next, sub = jax.random.split(k)
             nb = sample(sub, data_dev)          # round t+1, drawn during t
             st, metrics = engine.round_core(eng, grad_fn, la_fn, st, batch)
-            return (st, k, k_next, nb), metrics["tau_eff"]
+            return (st, k, k_next, nb), _mets(metrics)
 
-        (state, key, _, _), taus = jax.lax.scan(
+        (state, key, _, _), mets = jax.lax.scan(
             body, (state, key, k1, batch0), None, length=length)
-        return state, key, taus
+        return state, key, mets
 
     return chunk
 
@@ -278,7 +285,7 @@ class CompiledEngine:
 
     model: Any
     eng: EngineConfig
-    chunk: Any        # (state, key, data_dev, *, length) -> (state, key, taus)
+    chunk: Any        # (state, key, data_dev, *, length) -> (state, key, mets)
     round_core: Any   # (state, batch) -> (state, metrics)
     evaluate: Any     # (params, x, y) -> (loss, acc)
 
@@ -340,6 +347,7 @@ class ExecutionBackend(Protocol):
     eng: EngineConfig
 
     def init_state(self, params) -> dict: ...
+    def restore_state(self, state: dict) -> dict: ...
     def run_chunk(self, state: dict, key, length: int): ...
     def evaluate(self, state: dict): ...
     def prune_decision(self, state: dict, init_params): ...
@@ -379,6 +387,14 @@ class _EngineBackend:
                                         self.eng, filter_masks=fmasks,
                                         num_clients=self._num_clients)
         return self._place_state(state)
+
+    def restore_state(self, state: dict) -> dict:
+        """Re-admit a checkpointed (host NumPy) round state: leaves go back
+        on device with dtypes preserved, and the mesh backend re-pins them
+        to their ``fl_state_specs`` shardings — f32 arrays round-trip
+        through npz bit-exactly, which the resume-bit-identity tests
+        lock."""
+        return self._place_state(jax.tree.map(jnp.asarray, state))
 
     def snapshot(self, state: dict):
         # a copy: the next scan chunk donates the round state, which would
@@ -801,26 +817,64 @@ class PlanExecutor:
     earlier event's kept-filter decision instead of re-running Algorithm 3,
     and a Callback returning params restarts the round state through the
     backend (the legacy hook contract).
+
+    Fault tolerance also lives here: a plan with ``checkpoint_dir`` set is
+    durably snapshotted at chunk boundaries (round state + key chain +
+    plan cursor + history/artifacts, atomic write — see
+    :mod:`repro.reliability.checkpoint`), ``run(resume=payload)``
+    continues a killed run bit-identically, and host faults
+    (``reliability.KillAfterChunk``, threaded via ``faults=``) raise
+    :class:`~repro.reliability.faults.SimulatedCrash` at the boundary a
+    real preemption would hit — AFTER the checkpoint write.
     """
 
-    def __init__(self, backend: ExecutionBackend, *, trainer=None):
+    def __init__(self, backend: ExecutionBackend, *, trainer=None,
+                 faults=()):
         self.backend = backend
         self.trainer = trainer
+        self._host_faults = tuple(f for f in faults
+                                  if hasattr(f, "chunks"))
 
-    def run(self, plan: TrainPlan, *, params, key):
-        """Returns (RunResult, advanced key)."""
+    def run(self, plan: TrainPlan, *, params=None, key=None, resume=None):
+        """Returns (RunResult, advanced key).  Exactly one of ``params``/
+        ``key`` or ``resume`` (a ``reliability.load_checkpoint`` payload)
+        selects a fresh or a continued run."""
         backend = self.backend
-        # Prune events estimate the Lipschitz constant against the params
-        # the run started from (the legacy hooks took them explicitly).
-        init_params = jax.tree.map(jnp.copy, params)
-        state = backend.init_state(params)
-
-        history = {"round": [], "acc": [], "loss": [], "tau_eff": [],
-                   "time": []}
-        artifacts: dict[str, Any] = {}
-        t0 = time.time()
-        t = 0
-        last_tau = 0.0
+        ckpt_dir = plan.checkpoint_dir
+        if resume is not None:
+            if params is not None or key is not None:
+                raise ValueError("run(resume=...) restores params and key "
+                                 "from the checkpoint — pass neither")
+            # Everything the loop below mutates comes back from the
+            # snapshot; the scan key chain continues from the EXACT key the
+            # interrupted run held at the boundary.
+            init_params = jax.tree.map(jnp.asarray, resume["init_params"])
+            state = backend.restore_state(resume["state"])
+            key = jax.random.wrap_key_data(jnp.asarray(resume["key_data"]))
+            history = {k: list(v) for k, v in resume["history"].items()}
+            artifacts: dict[str, Any] = dict(resume["artifacts"])
+            t = int(resume["t"])
+            last_tau = float(resume["last_tau"])
+            chunks_done = int(resume["chunks_done"])
+            start = int(resume["cursor"])
+            t0 = time.time() - float(resume.get("elapsed", 0.0))
+        else:
+            if params is None or key is None:
+                raise ValueError("run() needs params= and key= "
+                                 "(or resume=)")
+            # Prune events estimate the Lipschitz constant against the
+            # params the run started from (the legacy hooks took them
+            # explicitly).
+            init_params = jax.tree.map(jnp.copy, params)
+            state = backend.init_state(params)
+            history = {"round": [], "acc": [], "loss": [], "tau_eff": [],
+                       "time": [], "health": []}
+            artifacts = {}
+            t0 = time.time()
+            t = 0
+            last_tau = 0.0
+            chunks_done = 0
+            start = 0
 
         def record(name, value):
             k, i = name, 1
@@ -829,11 +883,50 @@ class PlanExecutor:
                 i += 1
             artifacts[k] = value
 
-        for ev in plan.compiled():
+        def write_checkpoint(cursor):
+            from repro.reliability.checkpoint import (
+                plan_spec,
+                save_checkpoint,
+            )
+
+            backend._secure_loans()   # loaned artifacts may alias state
+            save_checkpoint(ckpt_dir, {
+                "state": state, "key_data": jax.random.key_data(key),
+                "cursor": cursor, "t": t, "chunks_done": chunks_done,
+                "last_tau": last_tau, "history": history,
+                "artifacts": artifacts, "init_params": init_params,
+                "plan": plan_spec(plan),
+                "checkpoint_every": plan.checkpoint_every,
+                "checkpoint_dir": str(ckpt_dir),
+                "backend": backend.name,
+                "elapsed": time.time() - t0,
+            })
+
+        events = plan.compiled()
+        for idx, ev in enumerate(events):
+            if idx < start:     # resumed: this event already completed
+                continue
             if isinstance(ev, Scan):
-                state, key, taus = backend.run_chunk(state, key, ev.rounds)
+                state, key, mets = backend.run_chunk(state, key, ev.rounds)
                 t += ev.rounds
-                last_tau = float(taus[-1])
+                last_tau = float(mets["tau_eff"][-1])
+                history["health"].extend(
+                    float(h) for h in np.asarray(mets["health"]))
+                chunks_done += 1
+                if (ckpt_dir is not None
+                        and chunks_done % plan.checkpoint_every == 0):
+                    write_checkpoint(idx + 1)
+                # Host faults fire AFTER the checkpoint write — exactly
+                # where a real between-chunks preemption lands.  Counted
+                # over the WHOLE run, so a resumed run that restored
+                # chunks_done past the fault does not re-die.
+                for f in self._host_faults:
+                    if f.chunks == chunks_done:
+                        from repro.reliability.faults import SimulatedCrash
+
+                        raise SimulatedCrash(
+                            f"injected kill after chunk {chunks_done} "
+                            f"(round {t})")
             elif isinstance(ev, Eval):
                 loss, acc = backend.evaluate(state)
                 # the TRUE round count: t rounds have completed when this

@@ -133,6 +133,8 @@ class FedDynConfig:
 
 ALGORITHMS = ("fedavg", "fedprox", "feddyn")
 
+GUARD_MODES = ("off", "reject_client", "skip_round")
+
 
 @dataclasses.dataclass(frozen=True)
 class EngineConfig:
@@ -148,6 +150,8 @@ class EngineConfig:
     use_masks: bool = False         # static-shape FedAP: masks in the carry
     masked_compute: str = "params"  # params | kernel (see module docstring)
     algorithm: str = "fedavg"       # fedavg | fedprox | feddyn
+    guard: str = "off"              # off | reject_client | skip_round
+    faults: tuple = ()              # test-only device-fault injection
     feddu: FedDUConfig = dataclasses.field(default_factory=FedDUConfig)
     feddum: FedDUMConfig = dataclasses.field(default_factory=FedDUMConfig)
     fedprox: FedProxConfig = dataclasses.field(default_factory=FedProxConfig)
@@ -163,6 +167,16 @@ class EngineConfig:
         if self.algorithm not in ALGORITHMS:
             raise ValueError(f"unknown algorithm: {self.algorithm!r} "
                              f"(expected one of {ALGORITHMS})")
+        if self.guard not in GUARD_MODES:
+            raise ValueError(f"unknown guard: {self.guard!r} "
+                             f"(expected one of {GUARD_MODES})")
+        for f in self.faults:
+            if not hasattr(f, "apply_client"):
+                raise ValueError(
+                    f"EngineConfig.faults takes DEVICE faults (objects with "
+                    f"an apply_client hook, e.g. reliability.NaNGrad); got "
+                    f"{f!r} — host faults like KillAfterChunk belong to the "
+                    f"executor (pass them via FLConfig.faults)")
 
 
 def init_client_state(params: Any, cfg: EngineConfig,
@@ -331,7 +345,29 @@ def round_core(cfg: EngineConfig, grad_fn: Callable, loss_and_acc_fn: Callable,
                 present the FedAvg reduction runs in delta form and
                 dropped clients contribute zero weight (state untouched)
 
-    Returns (new_state, {"tau_eff", "server_acc"}).
+    ``cfg.guard != "off"`` adds the in-scan health guard: every selected
+    client's uploaded update (and, for FedDA, its communicated momentum)
+    is finiteness-checked on device; non-finite clients are scrubbed back
+    to the broadcast point and get exactly-zero aggregation weight through
+    the delta-form reduction.  The FedDU server proposal is guarded the
+    same way (a non-finite proposed model / tau_eff / acc falls back to
+    the aggregated ``w_half``).  Under ``guard="reject_client"`` the round
+    proceeds on the survivors; under ``guard="skip_round"`` ANY rejection
+    (client or server) discards the whole round — the carry is restored to
+    the round-start state with only the round counter advanced, so a bad
+    round is exactly a no-op.  All guard branches are keyed on static
+    config, and the carry/metrics structure is identical in every mode, so
+    turning guards on compiles ZERO additional programs.
+
+    ``cfg.faults`` (test-only) injects deterministic device faults into
+    the uploaded updates BEFORE the guard sees them — a static unroll over
+    the frozen fault tuple, so the corruption is part of the traced graph
+    and fires identically under jit/scan/mesh.
+
+    Returns (new_state, {"tau_eff", "server_acc", "health"}); ``health``
+    is the number of guard rejections this round (active clients scrubbed,
+    plus 1 if the server step was rejected) — identically 0.0 when the
+    guard is off.
     """
     if cfg.use_masks:
         # Static-shape FedAP: params, gradients and momentum are multiplied
@@ -387,15 +423,54 @@ def round_core(cfg: EngineConfig, grad_fn: Callable, loss_and_acc_fn: Callable,
             lambda b: local_train(cfg, grad_fn, params, m0, b,
                                   lr))(batch["client"])
 
-    # (3-4) upload + FedAvg: ONE weighted reduction over the client axis.
-    # With a dropout mask the reduction runs in DELTA form around the
-    # broadcast point (an all-dropped round is exactly a no-op); without
-    # one, the legacy direct einsum — bit-identical to the pre-dropout
-    # engine.
+    # Deterministic fault injection (test-only): corrupt the uploaded
+    # updates BEFORE aggregation / the guard.  A static python unroll over
+    # the frozen fault tuple — the faults are part of the traced graph.
+    if cfg.faults:  # lint: static-branch (config-keyed)
+        sel_ids = batch.get("sel")
+        if sel_ids is None:
+            sel_ids = jnp.arange(batch["sizes"].shape[0], dtype=jnp.int32)
+        for f in cfg.faults:
+            locals_ = f.apply_client(locals_, params, sel_ids,
+                                     state["round"])
+
+    # In-scan health guard: all-device finiteness check per client.  A
+    # rejected client is scrubbed back to the broadcast point (so NaN/inf
+    # never reaches a reduction — 0-weight alone would not neutralize NaN)
+    # and contributes zero aggregation weight via the delta-form path.
     sizes = batch["sizes"].astype(jnp.float32)
     active = batch.get("active")
-    if active is not None:
-        act = active.astype(jnp.float32)
+    guard_on = cfg.guard != "off"
+    base_act = (active.astype(jnp.float32) if active is not None
+                else jnp.ones_like(sizes))
+    if guard_on:
+        _cvec = lambda v, leaf: v.reshape(v.shape + (1,) * (leaf.ndim - 1))
+        client_ok = jnp.ones(sizes.shape, bool)
+        checked = [locals_]
+        if cfg.local_momentum == "communicated":
+            checked.append(local_ms)
+        for tree in checked:
+            for leaf in jax.tree.leaves(tree):
+                client_ok = client_ok & jnp.all(
+                    jnp.isfinite(leaf), axis=tuple(range(1, leaf.ndim)))
+        rejected = jnp.sum(base_act * (~client_ok).astype(jnp.float32))
+        act = base_act * client_ok.astype(jnp.float32)
+        _scrub = lambda trees, base: jax.tree.map(
+            lambda l, b: jnp.where(_cvec(client_ok, l), l,
+                                   b.astype(l.dtype)), trees, base)
+        locals_ = _scrub(locals_, params)
+        if cfg.local_momentum == "communicated":
+            local_ms = _scrub(local_ms, m0)
+    else:
+        rejected = jnp.zeros(())
+        act = base_act
+
+    # (3-4) upload + FedAvg: ONE weighted reduction over the client axis.
+    # With a dropout mask or an active guard the reduction runs in DELTA
+    # form around the broadcast point (an all-dropped round is exactly a
+    # no-op); otherwise the legacy direct einsum — bit-identical to the
+    # pre-dropout engine.
+    if active is not None or guard_on:
         w = sizes * act
         w = w / jnp.maximum(jnp.sum(w), 1e-12)
 
@@ -410,7 +485,6 @@ def round_core(cfg: EngineConfig, grad_fn: Callable, loss_and_acc_fn: Callable,
         new_global_m = (agg_tree(local_ms, m0)
                         if cfg.local_momentum == "communicated" else None)
     else:
-        act = jnp.ones_like(sizes)
         w = sizes / jnp.sum(sizes)
         agg = lambda l: jnp.einsum(
             "c,c...->...", w, l.astype(jnp.float32)).astype(l.dtype)
@@ -476,6 +550,19 @@ def round_core(cfg: EngineConfig, grad_fn: Callable, loss_and_acc_fn: Callable,
         t_eff = jnp.zeros(())
         acc = jnp.zeros(())
 
+    # Server-step guard: a diverged FedDU proposal (non-finite model,
+    # tau_eff or gate accuracy) falls back to the plain aggregate w_half.
+    if guard_on and cfg.use_server_update:
+        server_ok = jnp.isfinite(t_eff) & jnp.isfinite(acc)
+        for leaf in jax.tree.leaves(proposed):
+            server_ok = server_ok & jnp.all(jnp.isfinite(leaf))
+        proposed = jax.tree.map(
+            lambda pr, wh: jnp.where(server_ok, pr, wh), proposed, w_half)
+        t_eff = jnp.where(server_ok, t_eff, 0.0)
+        acc = jnp.where(server_ok, acc, 0.0)
+    else:
+        server_ok = jnp.ones((), bool)
+
     # (5b) FedDUM server momentum on the pseudo-gradient (Formulas 8/12).
     if cfg.server_momentum:
         pseudo = server_pseudo_gradient(params, proposed)
@@ -494,7 +581,29 @@ def round_core(cfg: EngineConfig, grad_fn: Callable, loss_and_acc_fn: Callable,
         new_state["masks"] = masks
         if cfg.masked_compute == "kernel":
             new_state["filter_masks"] = state["filter_masks"]
-    return new_state, {"tau_eff": t_eff, "server_acc": acc}
+
+    # Round discard: with every client rejected there is no information in
+    # the round (reject_client), and under skip_round ANY rejection voids
+    # it — restore the round-start carry (round counter still advances, so
+    # the key chain and lr schedule stay aligned with a fault-free run).
+    if guard_on:
+        survivors = jnp.sum(act) > 0
+        if cfg.guard == "reject_client":
+            discard = ~survivors
+        else:  # skip_round
+            discard = (~survivors) | (rejected > 0) | (~server_ok)
+        health = rejected + (~server_ok).astype(jnp.float32)
+        for k in ("params", "server_m", "global_m", "client_state"):
+            if k in new_state:
+                new_state[k] = jax.tree.map(
+                    lambda o, n: jnp.where(discard, o, n),
+                    state[k], new_state[k])
+        t_eff = jnp.where(discard, 0.0, t_eff)
+        acc = jnp.where(discard, 0.0, acc)
+    else:
+        health = jnp.zeros(())
+    return new_state, {"tau_eff": t_eff, "server_acc": acc,
+                       "health": health}
 
 
 # ---------------------------------------------------------------------------

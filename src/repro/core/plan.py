@@ -35,6 +35,16 @@ import dataclasses
 from typing import Any, Callable, Iterable, Union
 
 
+class CheckpointError(ValueError):
+    """A checkpoint directory is partial, corrupted, or mismatched.
+
+    Subclasses :class:`ValueError` so legacy ``except ValueError`` callers
+    keep working; raised by :func:`load_artifact` and by the run-checkpoint
+    store in :mod:`repro.reliability.checkpoint` instead of raw
+    ``KeyError`` / ``FileNotFoundError`` / ``zipfile.BadZipFile`` crashes.
+    """
+
+
 @dataclasses.dataclass(frozen=True)
 class Scan:
     """``rounds`` federated rounds in one compiled scan chunk."""
@@ -131,9 +141,19 @@ class TrainPlan:
     ``TrainPlan(Scan(30), Eval(), Prune(mode="mask"), Scan(30), Eval())``
 
     Iterables flatten, so builders can splice sub-schedules in place.
+
+    ``checkpoint_dir`` makes the executor durably snapshot the run (round
+    state + key chain + plan cursor + history/artifacts) at chunk
+    boundaries — every ``checkpoint_every`` completed Scan chunks (default
+    1 = every chunk).  A killed run then continues bit-identically via
+    ``FederatedTrainer.resume(checkpoint_dir)``.  Checkpointing is an
+    execution setting, not part of the schedule: it does not participate
+    in plan equality.
     """
 
-    def __init__(self, *events: Event | Iterable[Event]):
+    def __init__(self, *events: Event | Iterable[Event],
+                 checkpoint_every: int | None = None,
+                 checkpoint_dir=None):
         flat: list[Event] = []
         for e in events:
             if isinstance(e, (Scan, Eval, Prune, Snapshot, Callback)):
@@ -144,6 +164,22 @@ class TrainPlan:
             if not isinstance(e, (Scan, Eval, Prune, Snapshot, Callback)):
                 raise TypeError(f"not a TrainPlan event: {e!r}")
         self.events: tuple[Event, ...] = tuple(flat)
+        if checkpoint_every is not None and checkpoint_dir is None:
+            raise ValueError("checkpoint_every without checkpoint_dir: "
+                             "there is nowhere to write the snapshots")
+        if checkpoint_every is None and checkpoint_dir is not None:
+            checkpoint_every = 1
+        if checkpoint_every is not None and checkpoint_every < 1:
+            raise ValueError(f"checkpoint_every must be >= 1, "
+                             f"got {checkpoint_every}")
+        self.checkpoint_every = checkpoint_every
+        self.checkpoint_dir = checkpoint_dir
+
+    def with_checkpointing(self, directory, *, every: int = 1) -> "TrainPlan":
+        """A copy of this plan that checkpoints into ``directory`` every
+        ``every`` completed Scan chunks."""
+        return TrainPlan(self.events, checkpoint_every=every,
+                         checkpoint_dir=directory)
 
     def __repr__(self):
         return f"TrainPlan({', '.join(map(repr, self.events))})"
@@ -307,8 +343,14 @@ class RunResult:
         The LAST Prune event's artifact (if any) is exported; ``params``
         overrides the final params (e.g. to save a mid-run ``Snapshot``
         artifact's copy instead).  Load back with :func:`load_artifact`.
+
+        Both files are written atomically (temp file + ``os.replace``), so
+        a crash mid-save never leaves a half-written ``arrays.npz`` or
+        ``meta.json`` for the loader to trip over — at worst one of the
+        two is stale, which :func:`load_artifact` reports by name.
         """
         import json
+        import os
         import pathlib
 
         import numpy as np
@@ -344,11 +386,19 @@ class RunResult:
                     "kept_counts",
                     {k: int(np.asarray(v).shape[-1]) for k, v in kept.items()}),
             })
-        np.savez(out / "arrays.npz",
-                 **{k: np.asarray(v) for k, v in arrays.items()})
-        with open(out / "meta.json", "w") as f:
+        tmp = out / f".arrays.npz.tmp-{os.getpid()}"
+        with open(tmp, "wb") as f:
+            np.savez(f, **{k: np.asarray(v) for k, v in arrays.items()})
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, out / "arrays.npz")
+        tmp = out / f".meta.json.tmp-{os.getpid()}"
+        with open(tmp, "w") as f:
             json.dump(meta, f, indent=2)
             f.write("\n")
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, out / "meta.json")
 
 
 def _flatten_arrays(tree, prefix: str = "") -> dict:
@@ -402,20 +452,39 @@ def load_artifact(path) -> dict:
     record one.  ``repro.serving`` consumes this to decode the checkpoint
     dense, masked (block-skipping kernel at dense shapes) or shrunk
     (compacted shapes).
+
+    Partial directories (a crash between the two file writes, a copy that
+    dropped a file) and corrupted/mismatched saves raise
+    :class:`CheckpointError` naming what is wrong, instead of a raw
+    ``FileNotFoundError`` / ``zipfile.BadZipFile`` / ``KeyError``.
     """
     import json
     import pathlib
+    import zipfile
 
     import numpy as np
 
     p = pathlib.Path(path)
-    with open(p / "meta.json") as f:
-        meta = json.load(f)
+    if not (p / "meta.json").exists():
+        raise CheckpointError(
+            f"{p}: not a checkpoint directory (missing meta.json)")
+    try:
+        with open(p / "meta.json") as f:
+            meta = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        raise CheckpointError(f"{p}: unreadable meta.json ({e})") from e
     if meta.get("format") != "repro-checkpoint-v1":
-        raise ValueError(f"{p}: not a repro checkpoint "
-                         f"(format={meta.get('format')!r})")
-    with np.load(p / "arrays.npz") as z:
-        tree = _unflatten_arrays({k: z[k] for k in z.files})
+        raise CheckpointError(f"{p}: not a repro checkpoint "
+                              f"(format={meta.get('format')!r})")
+    if not (p / "arrays.npz").exists():
+        raise CheckpointError(
+            f"{p}: partial checkpoint (meta.json present but arrays.npz "
+            f"missing — interrupted or incomplete save)")
+    try:
+        with np.load(p / "arrays.npz") as z:
+            tree = _unflatten_arrays({k: z[k] for k in z.files})
+    except (zipfile.BadZipFile, OSError, ValueError) as e:
+        raise CheckpointError(f"{p}: corrupted arrays.npz ({e})") from e
     from repro.configs.base import ModelConfig
 
     prune = meta.get("prune") or {}

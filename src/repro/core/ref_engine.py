@@ -158,12 +158,45 @@ def ref_round(cfg: EngineConfig, grad_fn: Callable, loss_and_acc_fn: Callable,
         locals_.append(p)
         local_ms.append(m)
 
-    # (3-4) FedAvg aggregation with n_k/n' weights; when the batch carries
-    # an "active" vector (straggler/dropout), run in delta form so dropped
-    # clients contribute exactly zero and an all-dropped round is a no-op.
+    # Fault injection + in-scan health guard, mirroring the engine: faults
+    # corrupt the uploaded updates first, then non-finite clients are
+    # scrubbed back to the broadcast point and zero-weighted.
     active = batch.get("active")
-    if active is not None:
-        act = np.asarray(active, np.float64)
+    guard_on = cfg.guard != "off"
+    if cfg.faults:
+        sel_ids = np.asarray(batch.get("sel", np.arange(num_clients)))
+        for f in cfg.faults:
+            locals_ = f.ref_apply_client(locals_, params, sel_ids,
+                                         float(state["round"]))
+    base_act = (np.asarray(active, np.float64) if active is not None
+                else np.ones_like(sizes))
+    if guard_on:
+        client_ok = np.ones(num_clients, bool)
+        for c in range(num_clients):
+            checked = [locals_[c]]
+            if cfg.local_momentum == "communicated":
+                checked.append(local_ms[c])
+            for tree in checked:
+                for leaf in jax.tree.leaves(tree):
+                    client_ok[c] &= bool(np.isfinite(leaf).all())
+        rejected = float((base_act * (~client_ok)).sum())
+        act = base_act * client_ok
+        locals_ = [locals_[c] if client_ok[c] else
+                   jax.tree.map(np.copy, params)
+                   for c in range(num_clients)]
+        if cfg.local_momentum == "communicated":
+            local_ms = [local_ms[c] if client_ok[c] else
+                        jax.tree.map(np.copy, m0)
+                        for c in range(num_clients)]
+    else:
+        rejected = 0.0
+        act = base_act
+
+    # (3-4) FedAvg aggregation with n_k/n' weights; when the batch carries
+    # an "active" vector (straggler/dropout) or the guard is on, run in
+    # delta form so dropped clients contribute exactly zero and an
+    # all-dropped round is a no-op.
+    if active is not None or guard_on:
         w = sizes * act
         w = w / max(w.sum(), 1e-12)
 
@@ -177,7 +210,6 @@ def ref_round(cfg: EngineConfig, grad_fn: Callable, loss_and_acc_fn: Callable,
         new_global_m = (weighted_mean(local_ms, m0)
                         if cfg.local_momentum == "communicated" else None)
     else:
-        act = np.ones_like(sizes)
         w = sizes / sizes.sum()
 
         def weighted_mean(trees):
@@ -243,6 +275,16 @@ def ref_round(cfg: EngineConfig, grad_fn: Callable, loss_and_acc_fn: Callable,
         proposed = w_half
         t_eff, acc = 0.0, 0.0
 
+    # Server-step guard mirror: a non-finite proposal falls back to w_half.
+    server_ok = True
+    if guard_on and cfg.use_server_update:
+        server_ok = bool(np.isfinite(t_eff) and np.isfinite(acc)
+                         and all(np.isfinite(l).all()
+                                 for l in jax.tree.leaves(proposed)))
+        if not server_ok:
+            proposed = w_half
+            t_eff, acc = 0.0, 0.0
+
     # (5b) FedDUM server momentum on the pseudo-gradient (Formulas 8/12)
     if cfg.server_momentum:
         pseudo = jax.tree.map(lambda a, b_: a - b_, params, proposed)
@@ -263,7 +305,25 @@ def ref_round(cfg: EngineConfig, grad_fn: Callable, loss_and_acc_fn: Callable,
         new_state["masks"] = masks
     if new_client_state is not None:
         new_state["client_state"] = new_client_state
-    return new_state, {"tau_eff": t_eff, "server_acc": acc}
+
+    # Round-discard mirror: restore the round-start carry (round counter
+    # advances) when the guard voids the round.
+    if guard_on:
+        survivors = float(np.sum(act)) > 0
+        if cfg.guard == "reject_client":
+            discard = not survivors
+        else:  # skip_round
+            discard = (not survivors) or rejected > 0 or not server_ok
+        health = rejected + (0.0 if server_ok else 1.0)
+        if discard:
+            for k in ("params", "server_m", "global_m", "client_state"):
+                if k in new_state:
+                    new_state[k] = tree_f64(state[k])
+            t_eff, acc = 0.0, 0.0
+    else:
+        health = 0.0
+    return new_state, {"tau_eff": t_eff, "server_acc": acc,
+                       "health": health}
 
 
 def ref_init_state(params: Any, cfg: EngineConfig, masks: Any = None,

@@ -142,6 +142,16 @@ class FLConfig:
     # issued while round t computes (bit-identical batches and key chain —
     # purely a scheduling change; False restores the serial draw).
     prefetch_sampling: bool = True
+    # In-scan health guard (see engine.round_core): "reject_client" zero-
+    # weights non-finite client uploads; "skip_round" additionally discards
+    # any round with a rejection.  Guards never change the compiled program
+    # count (locked by the compile-budget sentinel).
+    guard: str = "off"
+    # Deterministic fault injection (tests/benchmarks only): a tuple /
+    # reliability.FaultPlan of fault events.  Device faults (NaNGrad,
+    # CorruptUpdate) are threaded into the engine config; host faults
+    # (KillAfterChunk) fire in the PlanExecutor schedule loop.
+    faults: tuple = ()
     # Server data usage per round: tau = server_epochs * floor(n0 / B_server).
     server_epochs: int = 1
     server_batch_size: int = 32
@@ -181,6 +191,16 @@ class FLConfig:
         if not 0.0 <= self.dropout_rate < 1.0:
             raise ValueError(f"dropout_rate must be in [0, 1), got "
                              f"{self.dropout_rate}")
+        if self.guard not in ("off", "reject_client", "skip_round"):
+            raise ValueError(
+                f"unknown guard: {self.guard!r} (expected 'off', "
+                f"'reject_client' or 'skip_round')")
+        for f in self.faults:
+            if not (hasattr(f, "apply_client") or hasattr(f, "chunks")):
+                raise ValueError(
+                    f"FLConfig.faults entries must be reliability fault "
+                    f"events (NaNGrad / CorruptUpdate / KillAfterChunk), "
+                    f"got {f!r}")
 
 
 def feddumap_config(**kw) -> FLConfig:
@@ -201,6 +221,8 @@ def engine_config(cfg: FLConfig) -> EngineConfig:
         server_momentum=cfg.server_momentum,
         masked_compute=cfg.masked_compute,
         algorithm=cfg.algorithm,
+        guard=cfg.guard,
+        faults=tuple(f for f in cfg.faults if hasattr(f, "apply_client")),
         feddu=cfg.feddu, feddum=cfg.feddum,
         fedprox=cfg.fedprox, feddyn=cfg.feddyn)
 
@@ -302,6 +324,47 @@ class FederatedTrainer:
         params0 = (self.model.init(jax.random.key(self.cfg.seed))
                    if params is None else params)
         executor = PlanExecutor(self.backend(use_masks=plan.uses_masks),
-                                trainer=self)
+                                trainer=self, faults=self.cfg.faults)
         result, self._key = executor.run(plan, params=params0, key=self._key)
+        return result
+
+    def resume(self, checkpoint_dir, *, plan: TrainPlan | None = None
+               ) -> RunResult:
+        """Continue a killed run from its chunk-boundary checkpoints,
+        bit-identically to the uninterrupted run (round state, scan key
+        chain, plan cursor and history are all restored from the snapshot).
+
+        ``plan=None`` rebuilds the schedule from the checkpoint's stored
+        plan spec (checkpointing re-enabled into the same directory).
+        Plans containing :class:`~repro.core.plan.Callback` events cannot
+        be reconstructed from disk — pass the original plan object, which
+        is validated against the stored spec.
+        """
+        from repro.reliability.checkpoint import (
+            load_checkpoint,
+            plan_from_spec,
+            plan_spec,
+        )
+        from repro.core.plan import CheckpointError
+
+        payload = load_checkpoint(checkpoint_dir)
+        if payload.get("backend") != self.backend_name:
+            raise CheckpointError(
+                f"checkpoint was written by the {payload.get('backend')!r} "
+                f"backend but this trainer runs {self.backend_name!r} — "
+                f"resume on the same backend (bit-identity is per-backend)")
+        if plan is None:
+            plan = plan_from_spec(
+                payload["plan"],
+                checkpoint_every=payload.get("checkpoint_every"),
+                checkpoint_dir=payload.get("checkpoint_dir",
+                                           checkpoint_dir))
+        elif plan_spec(plan) != list(payload["plan"]):
+            raise CheckpointError(
+                "the plan passed to resume() does not match the plan the "
+                "checkpoint was written under — resuming would replay a "
+                "different schedule")
+        executor = PlanExecutor(self.backend(use_masks=plan.uses_masks),
+                                trainer=self, faults=self.cfg.faults)
+        result, self._key = executor.run(plan, resume=payload)
         return result

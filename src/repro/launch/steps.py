@@ -95,6 +95,10 @@ class FLRunConfig:
     # state grows the same client_state slot as the simulation path
     # (fl_specs.fl_state_specs shards its per-client leaves).
     algorithm: str = "fedavg"
+    # In-scan health guard (engine.round_core): non-finite client uploads
+    # get zero aggregation weight ("reject_client") or void the whole
+    # round ("skip_round"); adds zero programs to the pod step.
+    guard: str = "off"
     fedprox: FedProxConfig = dataclasses.field(default_factory=FedProxConfig)
     feddyn: FedDynConfig = dataclasses.field(default_factory=FedDynConfig)
 
@@ -146,6 +150,7 @@ def engine_config(run: FLRunConfig) -> EngineConfig:
         use_masks=run.use_masks,
         masked_compute=run.masked_compute,
         algorithm=run.algorithm,
+        guard=run.guard,
         fedprox=run.fedprox,
         feddyn=run.feddyn,
         feddu=run.feddu,

@@ -1,0 +1,44 @@
+"""Fault tolerance for the federated stack.
+
+Three legs (see ISSUE 10 / the README "Fault tolerance & recovery"
+section): in-scan health guards (``EngineConfig.guard``), chunk-boundary
+checkpoint/resume (:mod:`repro.reliability.checkpoint`), and a
+deterministic fault-injection harness (:mod:`repro.reliability.faults`).
+"""
+from repro.core.plan import CheckpointError
+from repro.reliability.checkpoint import (
+    RUN_FORMAT,
+    latest_checkpoint,
+    load_checkpoint,
+    plan_from_spec,
+    plan_spec,
+    save_checkpoint,
+)
+from repro.reliability.faults import (
+    CorruptUpdate,
+    FaultPlan,
+    KillAfterChunk,
+    NaNGrad,
+    NaNLogits,
+    SimulatedCrash,
+    device_faults,
+    host_faults,
+)
+
+__all__ = [
+    "CheckpointError",
+    "CorruptUpdate",
+    "FaultPlan",
+    "KillAfterChunk",
+    "NaNGrad",
+    "NaNLogits",
+    "RUN_FORMAT",
+    "SimulatedCrash",
+    "device_faults",
+    "host_faults",
+    "latest_checkpoint",
+    "load_checkpoint",
+    "plan_from_spec",
+    "plan_spec",
+    "save_checkpoint",
+]

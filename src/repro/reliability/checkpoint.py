@@ -1,0 +1,242 @@
+"""Durable chunk-boundary run checkpoints — atomic write, exact resume.
+
+A checkpoint captures EVERYTHING the :class:`~repro.core.backend.
+PlanExecutor` needs to continue a killed run bit-identically: the engine
+round state, the scan key chain (as raw PRNG key data), the plan cursor
+(index into ``plan.compiled()``), the completed-round/chunk counters, the
+history rows and artifacts accumulated so far, the run's ``init_params``
+(the Lipschitz reference of later Prune events), and a serialized plan
+spec so ``FederatedTrainer.resume(dir)`` can rebuild the schedule without
+out-of-band knowledge.
+
+Durability protocol (crash-safe at every point):
+
+1. the payload is written into a hidden temp directory
+   (``.tmp-step-NNNN``) — ``arrays.npz`` (every array leaf, '/'-joined
+   pytree paths) + ``meta.json`` (the JSON skeleton), both fsynced;
+2. the temp directory is renamed to ``step-NNNN`` with ``os.replace``
+   semantics (atomic on POSIX);
+3. the ``LATEST`` pointer file is updated via its own temp-file +
+   ``os.replace``.
+
+A crash mid-write leaves either a stale ``LATEST`` (pointing at the last
+complete snapshot) or a dangling ``.tmp-*`` directory, both of which
+:func:`load_checkpoint` ignores; it never sees a half-written snapshot.
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import shutil
+import zipfile
+from typing import Any
+
+import numpy as np
+
+from repro.core.plan import (
+    Callback,
+    CheckpointError,
+    Eval,
+    Prune,
+    Scan,
+    Snapshot,
+    TrainPlan,
+)
+
+RUN_FORMAT = "repro-run-checkpoint-v1"
+
+
+# ---------------------------------------------------------------------------
+# Generic (skeleton, arrays) split — artifacts mix arrays, scalars, strings
+
+
+def _encode(obj: Any, path: str, arrays: dict) -> Any:
+    """Split a mixed pytree into a JSON skeleton + a flat array dict
+    (npz keys are '/'-joined paths into the structure)."""
+    if isinstance(obj, dict):
+        enc = {}
+        for k, v in obj.items():
+            k = str(k)
+            if "/" in k:
+                raise CheckpointError(
+                    f"checkpoint keys may not contain '/': {k!r}")
+            enc[k] = _encode(v, f"{path}/{k}", arrays)
+        return {"__dict__": enc}
+    if isinstance(obj, (list, tuple)):
+        return {"__seq__": [_encode(v, f"{path}/{i}", arrays)
+                            for i, v in enumerate(obj)],
+                "tuple": isinstance(obj, tuple)}
+    if hasattr(obj, "ndim") and hasattr(obj, "dtype"):   # np/jnp array leaf
+        arrays[path] = np.asarray(obj)
+        return {"__array__": path}
+    if isinstance(obj, (np.generic,)):
+        obj = obj.item()
+    if obj is None or isinstance(obj, (bool, int, float, str)):
+        return {"__value__": obj}
+    raise CheckpointError(
+        f"cannot checkpoint {type(obj).__name__} at {path!r}")
+
+
+def _decode(skel: Any, arrays: dict) -> Any:
+    if "__dict__" in skel:
+        return {k: _decode(v, arrays) for k, v in skel["__dict__"].items()}
+    if "__seq__" in skel:
+        seq = [_decode(v, arrays) for v in skel["__seq__"]]
+        return tuple(seq) if skel.get("tuple") else seq
+    if "__array__" in skel:
+        try:
+            return arrays[skel["__array__"]]
+        except KeyError as e:
+            raise CheckpointError(
+                f"checkpoint arrays.npz is missing {skel['__array__']!r} "
+                f"(partial or corrupted snapshot)") from e
+    return skel["__value__"]
+
+
+# ---------------------------------------------------------------------------
+# Plan (de)serialization — the resume path rebuilds the schedule
+
+
+def plan_spec(plan: TrainPlan) -> list[dict]:
+    """A JSON-able description of the plan's events.  Callback events
+    record only their name — a function cannot round-trip through a
+    checkpoint, so resuming a Callback plan requires passing the plan
+    object back to ``resume`` (validated against this spec)."""
+    spec = []
+    for e in plan.events:
+        if isinstance(e, Scan):
+            spec.append({"type": "Scan", "rounds": e.rounds})
+        elif isinstance(e, Eval):
+            spec.append({"type": "Eval", "name": e.name})
+        elif isinstance(e, Prune):
+            spec.append({"type": "Prune", "mode": e.mode, "name": e.name,
+                         "reuse": e.reuse})
+        elif isinstance(e, Snapshot):
+            spec.append({"type": "Snapshot", "name": e.name})
+        elif isinstance(e, Callback):
+            spec.append({"type": "Callback", "name": e.name})
+        else:  # pragma: no cover — TrainPlan validates event types
+            raise TypeError(f"unknown plan event: {e!r}")
+    return spec
+
+
+def plan_from_spec(spec: list[dict], *, checkpoint_every: int | None = None,
+                   checkpoint_dir=None) -> TrainPlan:
+    """Rebuild a TrainPlan from :func:`plan_spec` output.  Callback
+    events cannot be reconstructed — raises :class:`CheckpointError`
+    telling the caller to pass the original plan to ``resume``."""
+    events = []
+    for s in spec:
+        t = s.get("type")
+        if t == "Scan":
+            events.append(Scan(s["rounds"]))
+        elif t == "Eval":
+            events.append(Eval(name=s["name"]))
+        elif t == "Prune":
+            events.append(Prune(mode=s["mode"], name=s["name"],
+                                reuse=s.get("reuse")))
+        elif t == "Snapshot":
+            events.append(Snapshot(name=s["name"]))
+        elif t == "Callback":
+            raise CheckpointError(
+                f"the checkpointed plan contains a Callback event "
+                f"({s.get('name')!r}) whose function cannot be restored "
+                f"from disk — pass the original plan: "
+                f"trainer.resume(dir, plan=plan)")
+        else:
+            raise CheckpointError(f"unknown event type in checkpoint "
+                                  f"plan spec: {t!r}")
+    return TrainPlan(events, checkpoint_every=checkpoint_every,
+                     checkpoint_dir=checkpoint_dir)
+
+
+# ---------------------------------------------------------------------------
+# Atomic write / load
+
+
+def _fsync_write(path: pathlib.Path, write_fn) -> None:
+    with open(path, "wb") as f:
+        write_fn(f)
+        f.flush()
+        os.fsync(f.fileno())
+
+
+def save_checkpoint(directory, payload: dict) -> pathlib.Path:
+    """Atomically persist one executor snapshot; returns the snapshot
+    directory (``step-NNNN``, NNNN = the plan cursor).  ``payload`` must
+    carry ``cursor`` plus whatever mixed pytrees the executor resumes
+    from — the split into arrays and JSON is structural, not schema'd."""
+    d = pathlib.Path(directory)
+    d.mkdir(parents=True, exist_ok=True)
+    name = f"step-{int(payload['cursor']):04d}"
+    tmp = d / f".tmp-{name}-{os.getpid()}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir()
+
+    arrays: dict = {}
+    skel = _encode(payload, "", arrays)
+    _fsync_write(tmp / "arrays.npz",
+                 lambda f: np.savez(f, **arrays))
+    meta = {"format": RUN_FORMAT, "payload": skel}
+    _fsync_write(tmp / "meta.json",
+                 lambda f: f.write(json.dumps(meta, indent=2).encode()))
+
+    final = d / name
+    if final.exists():               # same-cursor overwrite (re-run)
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+    ptr_tmp = d / ".LATEST.tmp"
+    _fsync_write(ptr_tmp, lambda f: f.write(name.encode()))
+    os.replace(ptr_tmp, d / "LATEST")
+    return final
+
+
+def latest_checkpoint(directory) -> pathlib.Path | None:
+    """The snapshot directory ``LATEST`` points at, or None if the
+    directory holds no complete checkpoint yet."""
+    d = pathlib.Path(directory)
+    ptr = d / "LATEST"
+    if not ptr.exists():
+        return None
+    name = ptr.read_text().strip()
+    step = d / name
+    if not (step / "meta.json").exists():
+        return None
+    return step
+
+
+def load_checkpoint(path) -> dict:
+    """Load a run checkpoint: ``path`` is either a checkpoint root (the
+    ``LATEST`` pointer is followed) or a single ``step-NNNN`` snapshot.
+    Partial, mismatched-format or corrupted snapshots raise
+    :class:`CheckpointError` instead of a raw KeyError/zip crash."""
+    p = pathlib.Path(path)
+    if not (p / "meta.json").exists():
+        step = latest_checkpoint(p)
+        if step is None:
+            raise CheckpointError(
+                f"{p}: no run checkpoint found (no LATEST pointer and no "
+                f"meta.json — was the run configured with "
+                f"checkpoint_dir?)")
+        p = step
+    try:
+        with open(p / "meta.json") as f:
+            meta = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        raise CheckpointError(f"{p}: unreadable meta.json ({e})") from e
+    if meta.get("format") != RUN_FORMAT:
+        raise CheckpointError(
+            f"{p}: not a {RUN_FORMAT} checkpoint "
+            f"(format={meta.get('format')!r})")
+    arrays_path = p / "arrays.npz"
+    if not arrays_path.exists():
+        raise CheckpointError(f"{p}: partial checkpoint (missing "
+                              f"arrays.npz)")
+    try:
+        with np.load(arrays_path) as z:
+            arrays = {k: z[k] for k in z.files}
+    except (zipfile.BadZipFile, OSError, ValueError) as e:
+        raise CheckpointError(f"{p}: corrupted arrays.npz ({e})") from e
+    return _decode(meta["payload"], arrays)

@@ -16,7 +16,8 @@ shrunk (compacted shapes).
         print(completion.uid, completion.tokens)
 """
 from repro.serving.checkpoint import SERVE_MODES, Servable, load_servable
-from repro.serving.engine import Completion, DecodeEngine, ServeConfig
+from repro.serving.engine import (Completion, DecodeEngine, QueueFull,
+                                  ServeConfig)
 
-__all__ = ["Completion", "DecodeEngine", "ServeConfig",
+__all__ = ["Completion", "DecodeEngine", "QueueFull", "ServeConfig",
            "SERVE_MODES", "Servable", "load_servable"]

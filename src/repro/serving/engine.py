@@ -34,6 +34,12 @@ Design:
   step scan) — no matter how many requests are admitted or retired
   (locked by the ``serving/*`` compile-budget scenarios).
 
+* **Fault tolerance.**  An in-wave health guard retires any slot whose
+  logits go non-finite (``error`` bit in the carry; the request completes
+  with ``status="error"`` instead of poisoning the shared batch), and
+  ``ServeConfig.max_queue``/``on_full`` bound the host admission queue
+  (raise :class:`QueueFull` or count-and-drop).
+
 * **Pruned checkpoints** serve either *masked* (dense shapes, FFN matmuls
   through the block-skipping ``masked_matmul`` kernel via
   ``decode_step(..., masks=)``) or *shrunk* (compacted shapes); see
@@ -65,6 +71,11 @@ class ServeConfig:
     eos_id          stop token (-1: never stop early)
     steps_per_wave  decode steps per device launch — the host-sync cadence
                     (admission latency vs. launch overhead trade-off)
+    max_queue       backpressure bound on the host admission queue
+                    (None: unbounded — the pre-backpressure behaviour)
+    on_full         what ``submit`` does at the bound: "raise" a
+                    :class:`QueueFull`, or "reject" (drop the request,
+                    count it in ``DecodeEngine.rejected``, return None)
     """
 
     slots: int = 8
@@ -73,10 +84,18 @@ class ServeConfig:
     max_new_tokens: int = 16
     eos_id: int = -1
     steps_per_wave: int = 8
+    max_queue: Optional[int] = None
+    on_full: str = "raise"
 
     def __post_init__(self):
         if self.slots < 1:
             raise ValueError(f"slots must be >= 1, got {self.slots}")
+        if self.max_queue is not None and self.max_queue < 1:
+            raise ValueError(
+                f"max_queue must be None or >= 1, got {self.max_queue}")
+        if self.on_full not in ("raise", "reject"):
+            raise ValueError(
+                f"on_full must be 'raise' or 'reject', got {self.on_full!r}")
         if not 1 <= self.max_prompt <= self.cache_len:
             raise ValueError(
                 f"max_prompt must be in [1, cache_len={self.cache_len}], "
@@ -94,14 +113,22 @@ class ServeConfig:
                 f"steps_per_wave must be >= 1, got {self.steps_per_wave}")
 
 
+class QueueFull(RuntimeError):
+    """``submit`` hit ``ServeConfig.max_queue`` with ``on_full="raise"``."""
+
+
 @dataclasses.dataclass(frozen=True)
 class Completion:
     """One finished request: ``tokens`` are the generated ids (prompt
-    excluded), in generation order."""
+    excluded), in generation order.  ``status`` is ``"ok"`` for a normal
+    finish, ``"error"`` when the slot was retired by the in-wave health
+    guard (non-finite logits); an error completion carries the tokens
+    generated before the fault."""
 
     uid: int
     prompt: np.ndarray
     tokens: np.ndarray
+    status: str = "ok"
 
 
 # Families whose decode cache is the scanned [L, B, S, KV, hd] KV stack —
@@ -120,7 +147,8 @@ class DecodeEngine:
     """
 
     def __init__(self, model, params, cfg: ServeConfig | None = None, *,
-                 masks=None, mesh=None, mesh_axis: str = "data"):
+                 masks=None, mesh=None, mesh_axis: str = "data",
+                 faults: tuple = ()):
         if model.cfg.family not in _SERVABLE_FAMILIES:
             raise ValueError(
                 f"DecodeEngine serves the scanned-KV families "
@@ -128,6 +156,7 @@ class DecodeEngine:
                 f"hybrid/encdec decode state has no per-slot cache index)")
         self.model = model
         self.cfg = cfg or ServeConfig()
+        self._faults = tuple(f for f in faults if hasattr(f, "apply_logits"))
         self._masks = masks
         self._mesh = mesh
         self._mesh_axis = mesh_axis
@@ -147,6 +176,7 @@ class DecodeEngine:
             [None] * self.cfg.slots
         self._queue: collections.deque = collections.deque()
         self._next_uid = 0
+        self.rejected = 0  # requests dropped by on_full="reject" backpressure
 
     # -- state ------------------------------------------------------------
     def _init_state(self) -> dict:
@@ -161,6 +191,7 @@ class DecodeEngine:
             "prompt_len": jnp.ones((c.slots,), jnp.int32),
             "n_out": jnp.zeros((c.slots,), jnp.int32),
             "out": jnp.zeros((c.slots, c.max_new_tokens), jnp.int32),
+            "error": jnp.zeros((c.slots,), bool),
         }
 
     def _place(self, tree, *, batched: bool, cache: bool = False):
@@ -210,6 +241,7 @@ class DecodeEngine:
         st["prompt_len"] = st["prompt_len"].at[slot].set(plen)
         st["last_tok"] = st["last_tok"].at[slot].set(prompt[0])
         st["n_out"] = st["n_out"].at[slot].set(0)
+        st["error"] = st["error"].at[slot].set(False)
         return st
 
     def _step(self, params, state):
@@ -221,10 +253,20 @@ class DecodeEngine:
         logits, cache = self.model.decode_step(
             params, cache, {"tokens": state["last_tok"][:, None]},
             masks=self._masks)
+        for f in self._faults:  # lint: static-branch (test-only injection)
+            logits = f.apply_logits(logits, state)
+        # in-wave health guard: a slot whose logits go non-finite is
+        # retired on device (error bit set, slot frozen) instead of
+        # emitting garbage tokens.  Same fixed state structure and no
+        # host sync — the session still compiles exactly two programs.
+        ok = jnp.all(jnp.isfinite(logits[:, 0]), axis=-1)
+        bad = active & ~ok
+        live = active & ok
         cache = dict(cache)
-        # done-mask: frozen slots keep their fill level (their page write
-        # lands on a slot that stays invalid — never attended)
-        cache["index"] = jnp.where(active, cache["index"], idx)
+        # done-mask: frozen (and newly-errored) slots keep their fill
+        # level (their page write lands on a slot that stays invalid —
+        # never attended)
+        cache["index"] = jnp.where(live, cache["index"], idx)
         sampled = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)
 
         consumed = idx + 1                           # tokens seen after step
@@ -234,7 +276,7 @@ class DecodeEngine:
             jnp.minimum(consumed, c.max_prompt - 1)[:, None], axis=1)[:, 0]
         # a step that consumed the prompt's last token (or any later one)
         # emits a generated token
-        emitted = active & (consumed >= state["prompt_len"])
+        emitted = live & (consumed >= state["prompt_len"])
         row = jnp.arange(c.slots)
         pos = jnp.clip(state["n_out"], 0, c.max_new_tokens - 1)
         out = state["out"].at[row, pos].set(
@@ -243,16 +285,17 @@ class DecodeEngine:
         finished = emitted & ((n_out >= c.max_new_tokens) |
                               (sampled == c.eos_id))
         last_tok = jnp.where(
-            active, jnp.where(in_prefill, nxt_prompt, sampled),
+            live, jnp.where(in_prefill, nxt_prompt, sampled),
             state["last_tok"])
         return {
             "cache": cache,
-            "active": active & ~finished,
+            "active": active & ~finished & ~bad,
             "last_tok": last_tok,
             "prompt": state["prompt"],
             "prompt_len": state["prompt_len"],
             "n_out": n_out,
             "out": out,
+            "error": state["error"] | bad,
         }
 
     def _wave_fn(self, params, state):
@@ -264,14 +307,25 @@ class DecodeEngine:
         return st
 
     # -- host protocol ----------------------------------------------------
-    def submit(self, prompt) -> int:
+    def submit(self, prompt) -> Optional[int]:
         """Queue a request; returns its uid (completion order may differ
-        from submission order — slots free up raggedly)."""
+        from submission order — slots free up raggedly).  With a
+        ``max_queue`` bound and the host queue full, either raises
+        :class:`QueueFull` (``on_full="raise"``) or drops the request and
+        returns None (``on_full="reject"``, counted in ``rejected``)."""
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         if not 1 <= prompt.shape[0] <= self.cfg.max_prompt:
             raise ValueError(
                 f"prompt length {prompt.shape[0]} outside [1, "
                 f"max_prompt={self.cfg.max_prompt}]")
+        if (self.cfg.max_queue is not None
+                and len(self._queue) >= self.cfg.max_queue):
+            if self.cfg.on_full == "raise":
+                raise QueueFull(
+                    f"admission queue at max_queue={self.cfg.max_queue} "
+                    f"(drain with step_wave/run, or use on_full='reject')")
+            self.rejected += 1
+            return None
         uid = self._next_uid
         self._next_uid += 1
         self._queue.append((uid, prompt))
@@ -306,11 +360,13 @@ class DecodeEngine:
             return []
         n_out = np.asarray(self._state["n_out"])
         out = np.asarray(self._state["out"])
+        error = np.asarray(self._state["error"])
         completions = []
         for slot in done:
             uid, prompt = self._occupants[slot]
             completions.append(
-                Completion(uid, prompt, out[slot, :n_out[slot]].copy()))
+                Completion(uid, prompt, out[slot, :n_out[slot]].copy(),
+                           status="error" if error[slot] else "ok"))
             self._occupants[slot] = None
         return completions
 

@@ -1,0 +1,622 @@
+"""Fault-tolerance locks: health guards, checkpoint/resume, fault harness.
+
+Every reliability claim is proven against an oracle rather than asserted
+in isolation:
+
+* **Guard == surviving-client oracle.**  A guarded round where an
+  injected fault NaNs one selected client's update must match — <= 1e-5,
+  per round, on both engine legs — the f64 reference round run WITHOUT
+  the fault but with that client dropped (``active=0``): rejection is
+  exactly the PR 6 zero-weight dropout semantics, discovered on device.
+* **skip_round is a no-op.**  A guarded-faulted round under
+  ``guard="skip_round"`` leaves params/momentum BIT-identical to the
+  round-start state while the round counter still advances.
+* **Kill-and-resume is bit-identical.**  A run killed by the fault
+  harness (``KillAfterChunk``) and resumed from its chunk-boundary
+  checkpoint produces the SAME history, params and key chain as the
+  uninterrupted run — on the local and the mesh backend.
+* **Guards add zero programs.**  The guarded scenarios in
+  ``compile_budget.json`` budget exactly the guard-off program count,
+  and a guarded trainer session is measured against that budget here.
+* **Serving stays up.**  Non-finite logits retire ONE slot with
+  ``status="error"`` while co-batched requests complete token-for-token
+  as in a fault-free session; ``max_queue`` backpressure raises or
+  counts-and-drops per config.
+"""
+import dataclasses
+import os
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis.compile_budget import expected_programs
+from repro.core import (
+    Callback,
+    Eval,
+    FederatedTrainer,
+    Scan,
+    Snapshot,
+    TrainPlan,
+    engine,
+    feddumap_config,
+    ref_engine,
+)
+from repro.core.backend import PlanExecutor
+from repro.core.engine import EngineConfig
+from repro.core.plan import CheckpointError, RunResult, load_artifact
+from repro.core.ref_engine import SoftmaxRegression
+from repro.data import build_federated_data
+from repro.data.synthetic import SyntheticSpec
+from repro.models import SimpleCNN
+from repro.models.cnn import softmax_xent_acc
+from repro.reliability import (
+    CorruptUpdate,
+    FaultPlan,
+    KillAfterChunk,
+    NaNGrad,
+    NaNLogits,
+    SimulatedCrash,
+    latest_checkpoint,
+    load_checkpoint,
+    plan_from_spec,
+    plan_spec,
+    save_checkpoint,
+)
+
+# ---------------------------------------------------------------------------
+# Engine-level world: explicit batches through round_core, like
+# tests/test_engine_diff.py — selection is explicit (batch["sel"]), so the
+# faulted client is chosen deterministically.
+# ---------------------------------------------------------------------------
+
+DIM, CLASSES = 6, 4
+CLIENTS, STEPS, BATCH = 3, 2, 5
+TAU, SBATCH = 3, 5
+ROUNDS = 3
+N_TOTAL = 6
+SELS = np.asarray([[4, 1, 3], [0, 2, 5], [5, 0, 2]], np.int32)
+VICTIM = 2             # client id; slot 1 of round 1's selection
+FAULT_ROUND = 1
+
+
+@pytest.fixture(scope="module")
+def eng_world():
+    model = SoftmaxRegression(dim=DIM, num_classes=CLASSES)
+    rng = np.random.default_rng(42)
+    params = model.init(seed=7)
+
+    def batches(lead):
+        x = rng.standard_normal(lead + (DIM,)).astype(np.float32)
+        y = rng.integers(0, CLASSES, lead).astype(np.int32)
+        return x, y
+
+    rounds = []
+    for r in range(ROUNDS):
+        cx, cy = batches((CLIENTS, STEPS, BATCH))
+        sx, sy = batches((TAU, SBATCH))
+        rounds.append({
+            "client": (cx, cy),
+            "sizes": np.asarray([40.0, 25.0, 35.0], np.float32),
+            "sel": SELS[r],
+            "server": (sx, sy),
+            "d_round": np.float32(0.3),
+            "d_server": np.float32(0.02),
+            "n0": np.float32(500.0),
+        })
+    return model, params, rounds
+
+
+def jnp_loss_and_acc(params, b):
+    logits = b[0] @ params["w"] + params["b"]
+    return softmax_xent_acc(logits, b[1])
+
+
+def jnp_grad(params, b):
+    return jax.grad(lambda p: jnp_loss_and_acc(p, b)[0])(params)
+
+
+def _scan_history(cfg, state0, rounds):
+    """round_core under scan+jit; per-round (params, tau, health)."""
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs),
+                           *[jax.tree.map(jnp.asarray, b) for b in rounds])
+
+    @jax.jit
+    def run(state, batches):
+        def body(st, b):
+            st, met = engine.round_core(cfg, jnp_grad, jnp_loss_and_acc,
+                                        st, b)
+            return st, (st["params"], met["tau_eff"], met["health"])
+        return jax.lax.scan(body, state, batches)
+
+    state, (phist, taus, health) = run(jax.tree.map(jnp.asarray, state0),
+                                       stacked)
+    return state, phist, np.asarray(taus), np.asarray(health)
+
+
+def _ref_history(cfg, model, params, rounds):
+    ref = ref_engine.ref_init_state(params, cfg, num_clients=N_TOTAL)
+    phist, taus, health = [], [], []
+    for b in rounds:
+        ref, met = ref_engine.ref_round(cfg, model.np_grad,
+                                        model.np_loss_and_acc, ref, b)
+        phist.append(ref["params"])
+        taus.append(met["tau_eff"])
+        health.append(met.get("health", 0.0))
+    return ref, phist, np.asarray(taus), np.asarray(health)
+
+
+MODES = {
+    "feddu": dict(use_server_update=True, local_momentum="none",
+                  server_momentum=False),
+    "feddum": dict(use_server_update=True, local_momentum="restart",
+                   server_momentum=True),
+    "fedda": dict(use_server_update=True, local_momentum="communicated",
+                  server_momentum=True),
+}
+ALGOS = {
+    "fedavg": {},
+    "feddyn": dict(algorithm="feddyn",
+                   feddyn=engine.FedDynConfig(alpha=0.05)),
+}
+GUARD_TABLE = [("fedavg", "feddu"), ("fedavg", "fedda"),
+               ("feddyn", "feddum")]
+
+
+class TestHealthGuards:
+    @pytest.mark.parametrize("algo,mode", GUARD_TABLE,
+                             ids=[f"{a}-{m}" for a, m in GUARD_TABLE])
+    def test_reject_matches_surviving_client_oracle(self, eng_world, algo,
+                                                    mode):
+        """THE acceptance lock: a guarded round with one client's update
+        NaN'd equals the f64 oracle round run without the fault but with
+        that client dropped (active=0) — rejection IS dropout."""
+        model, params, rounds = eng_world
+        fault = NaNGrad(client=VICTIM, round=FAULT_ROUND)
+        cfg = EngineConfig(lr=0.08, lr_decay=0.97, guard="reject_client",
+                           faults=(fault,), **ALGOS[algo], **MODES[mode])
+        state0 = engine.init_round_state(
+            jax.tree.map(jnp.asarray, params), cfg, num_clients=N_TOTAL)
+        _, phist, taus, health = _scan_history(cfg, state0, rounds)
+        np.testing.assert_array_equal(health, [0.0, 1.0, 0.0])
+
+        # oracle: NO fault, NO guard — the victim simply inactive
+        ocfg = dataclasses.replace(cfg, guard="off", faults=())
+        oracle_rounds = []
+        for r, b in enumerate(rounds):
+            b = dict(b)
+            b["active"] = np.asarray(
+                [0.0 if (r == FAULT_ROUND and c == VICTIM) else 1.0
+                 for c in SELS[r]], np.float32)
+            oracle_rounds.append(b)
+        _, ref_p, ref_taus, _ = _ref_history(ocfg, model, params,
+                                             oracle_rounds)
+        for r in range(ROUNDS):
+            for leaf, ref_leaf in zip(jax.tree.leaves(
+                    jax.tree.map(lambda l: l[r], phist)),
+                    jax.tree.leaves(ref_p[r])):
+                np.testing.assert_allclose(
+                    np.asarray(leaf), ref_leaf, atol=1e-5,
+                    err_msg=f"{algo}-{mode}: guarded params diverged from "
+                            f"the surviving-client oracle at round {r}")
+        np.testing.assert_allclose(taus, ref_taus, atol=1e-5)
+
+    @pytest.mark.parametrize("algo,mode", GUARD_TABLE,
+                             ids=[f"{a}-{m}" for a, m in GUARD_TABLE])
+    def test_ref_engine_mirrors_guard(self, eng_world, algo, mode):
+        """The f64 reference engine runs the SAME fault + guard and must
+        track the device engine — the mirror every scenario-matrix
+        comparison relies on."""
+        model, params, rounds = eng_world
+        fault = NaNGrad(client=VICTIM, round=FAULT_ROUND)
+        cfg = EngineConfig(lr=0.08, lr_decay=0.97, guard="reject_client",
+                           faults=(fault,), **ALGOS[algo], **MODES[mode])
+        state0 = engine.init_round_state(
+            jax.tree.map(jnp.asarray, params), cfg, num_clients=N_TOTAL)
+        _, phist, taus, health = _scan_history(cfg, state0, rounds)
+        _, ref_p, ref_taus, ref_health = _ref_history(cfg, model, params,
+                                                      rounds)
+        np.testing.assert_array_equal(health, ref_health)
+        for r in range(ROUNDS):
+            for leaf, ref_leaf in zip(jax.tree.leaves(
+                    jax.tree.map(lambda l: l[r], phist)),
+                    jax.tree.leaves(ref_p[r])):
+                np.testing.assert_allclose(np.asarray(leaf), ref_leaf,
+                                           atol=1e-5)
+        np.testing.assert_allclose(taus, ref_taus, atol=1e-5)
+
+    def test_skip_round_is_bitexact_noop(self, eng_world):
+        """Under guard='skip_round' ANY rejection discards the whole
+        round: params bit-identical to round start, counter advanced,
+        tau_eff zeroed, health recording the rejection."""
+        model, params, rounds = eng_world
+        fault = NaNGrad(client=VICTIM, round=FAULT_ROUND)
+        cfg = EngineConfig(lr=0.08, lr_decay=0.97, guard="skip_round",
+                           faults=(fault,), use_server_update=True,
+                           local_momentum="restart", server_momentum=True)
+        state0 = engine.init_round_state(
+            jax.tree.map(jnp.asarray, params), cfg, num_clients=N_TOTAL)
+        state, phist, taus, health = _scan_history(cfg, state0, rounds)
+        np.testing.assert_array_equal(health, [0.0, 1.0, 0.0])
+        assert taus[FAULT_ROUND] == 0.0
+        for leaf in jax.tree.leaves(phist):
+            np.testing.assert_array_equal(
+                np.asarray(leaf[FAULT_ROUND]),
+                np.asarray(leaf[FAULT_ROUND - 1]),
+                err_msg="skipped round moved params")
+        assert float(state["round"]) == float(ROUNDS)
+        # ... and the run kept training afterwards
+        assert any(
+            not np.array_equal(np.asarray(l[FAULT_ROUND]),
+                               np.asarray(l[FAULT_ROUND + 1]))
+            for l in jax.tree.leaves(phist))
+
+    def test_fully_bad_round_discarded(self, eng_world):
+        """reject_client with EVERY selected client non-finite: no
+        survivors, so the round is a no-op (not a NaN'd model)."""
+        model, params, rounds = eng_world
+        fault = CorruptUpdate(scale=float("nan"), round=FAULT_ROUND)
+        cfg = EngineConfig(lr=0.08, lr_decay=0.97, guard="reject_client",
+                           faults=(fault,), use_server_update=True)
+        state0 = engine.init_round_state(
+            jax.tree.map(jnp.asarray, params), cfg, num_clients=N_TOTAL)
+        state, phist, taus, health = _scan_history(cfg, state0, rounds)
+        np.testing.assert_array_equal(health, [0.0, float(CLIENTS), 0.0])
+        for leaf in jax.tree.leaves(phist):
+            assert np.isfinite(np.asarray(leaf)).all()
+            np.testing.assert_array_equal(
+                np.asarray(leaf[FAULT_ROUND]),
+                np.asarray(leaf[FAULT_ROUND - 1]))
+
+    def test_guard_on_no_fault_matches_guard_off(self, eng_world):
+        """A guard that never fires must not change training (the guarded
+        leg runs the delta-form aggregation, so agreement is numerical,
+        not bit-level)."""
+        model, params, rounds = eng_world
+        base = EngineConfig(lr=0.08, lr_decay=0.97, use_server_update=True,
+                            local_momentum="restart", server_momentum=True)
+        state0 = engine.init_round_state(
+            jax.tree.map(jnp.asarray, params), base, num_clients=N_TOTAL)
+        _, p_off, t_off, h_off = _scan_history(base, state0, rounds)
+        guarded = dataclasses.replace(base, guard="reject_client")
+        _, p_on, t_on, h_on = _scan_history(guarded, state0, rounds)
+        np.testing.assert_array_equal(h_off, 0.0)
+        np.testing.assert_array_equal(h_on, 0.0)
+        for a, b in zip(jax.tree.leaves(p_off), jax.tree.leaves(p_on)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=1e-6)
+        np.testing.assert_allclose(t_off, t_on, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Trainer-level world (the tier-1 CNN fixture shape)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def tiny_world():
+    spec = SyntheticSpec(num_classes=10, image_shape=(8, 8, 3),
+                         train_size=1600, test_size=100, noise_scale=0.5)
+    data = build_federated_data(num_clients=6, server_fraction=0.1,
+                                device_pool=600, spec=spec)
+    model = SimpleCNN(num_classes=10, image_shape=(8, 8, 3),
+                      channels=(4, 8, 8), fc_width=16)
+    return data, model
+
+
+CFG = dict(num_clients=6, clients_per_round=3, local_epochs=1,
+           batch_size=10, lr=0.05)
+BACKENDS = ("local", "mesh")
+
+
+def _histories_equal(a, b):
+    for k in a:
+        if k == "time":     # wall-clock is the one permitted difference
+            continue
+        assert a[k] == b[k], f"history[{k!r}] diverged"
+    assert set(a) == set(b)
+
+
+class TestKillAndResume:
+    @pytest.mark.parametrize("backend", BACKENDS)
+    def test_resume_is_bit_identical(self, tiny_world, tmp_path, backend):
+        """Kill after chunk 2, resume from disk in a FRESH trainer: the
+        stitched run equals the uninterrupted run bit-for-bit — params,
+        every history column, and the key chain."""
+        data, model = tiny_world
+        plan_events = (Scan(2), Eval(), Scan(2), Eval(), Scan(2), Eval())
+        ckpt = tmp_path / f"ckpt-{backend}"
+
+        base_cfg = feddumap_config(**CFG)
+        ref = FederatedTrainer(model, data, base_cfg, backend=backend)
+        full = ref.run(TrainPlan(*plan_events))
+
+        kill_cfg = feddumap_config(**CFG, faults=(KillAfterChunk(2),))
+        tr = FederatedTrainer(model, data, kill_cfg, backend=backend)
+        with pytest.raises(SimulatedCrash):
+            tr.run(TrainPlan(*plan_events, checkpoint_dir=ckpt))
+
+        fresh = FederatedTrainer(model, data, base_cfg, backend=backend)
+        res = fresh.resume(ckpt)
+        _histories_equal(res.history, full.history)
+        for a, b in zip(jax.tree.leaves(res.params),
+                        jax.tree.leaves(full.params)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        np.testing.assert_array_equal(
+            np.asarray(jax.random.key_data(fresh._key)),
+            np.asarray(jax.random.key_data(ref._key)))
+
+    def test_resumed_run_does_not_redie(self, tiny_world, tmp_path):
+        """KillAfterChunk counts chunks over the WHOLE run, so resuming
+        with the fault still configured must not crash again at the same
+        relative position."""
+        data, model = tiny_world
+        ckpt = tmp_path / "ckpt-redie"
+        cfg = feddumap_config(**CFG, faults=(KillAfterChunk(1),))
+        tr = FederatedTrainer(model, data, cfg)
+        with pytest.raises(SimulatedCrash):
+            tr.run(TrainPlan(Scan(1), Scan(1), Eval(),
+                             checkpoint_dir=ckpt))
+        res = FederatedTrainer(model, data, cfg).resume(ckpt)
+        assert res.history["round"] == [2]
+
+    def test_resume_wrong_backend_fails(self, tiny_world, tmp_path):
+        data, model = tiny_world
+        ckpt = tmp_path / "ckpt-backend"
+        cfg = feddumap_config(**CFG, faults=(KillAfterChunk(1),))
+        with pytest.raises(SimulatedCrash):
+            FederatedTrainer(model, data, cfg).run(
+                TrainPlan(Scan(1), Scan(1), checkpoint_dir=ckpt))
+        other = FederatedTrainer(model, data, feddumap_config(**CFG),
+                                 backend="mesh")
+        with pytest.raises(CheckpointError, match="backend"):
+            other.resume(ckpt)
+
+    def test_resume_plan_mismatch_fails(self, tiny_world, tmp_path):
+        data, model = tiny_world
+        ckpt = tmp_path / "ckpt-plan"
+        cfg = feddumap_config(**CFG, faults=(KillAfterChunk(1),))
+        with pytest.raises(SimulatedCrash):
+            FederatedTrainer(model, data, cfg).run(
+                TrainPlan(Scan(1), Scan(1), checkpoint_dir=ckpt))
+        tr = FederatedTrainer(model, data, feddumap_config(**CFG))
+        with pytest.raises(CheckpointError, match="plan"):
+            tr.resume(ckpt, plan=TrainPlan(Scan(3), Eval()))
+
+    def test_guarded_trainer_records_health(self, tiny_world):
+        """End-to-end: an all-clients NaN round under the real sampler is
+        discarded; history['health'] pins which round and how many."""
+        data, model = tiny_world
+        cfg = feddumap_config(
+            **CFG, guard="reject_client",
+            faults=(CorruptUpdate(scale=float("nan"), round=1),))
+        res = FederatedTrainer(model, data, cfg).run(
+            TrainPlan(Scan(3), Eval()))
+        assert res.history["health"] == [0.0, 3.0, 0.0]
+        for leaf in jax.tree.leaves(res.params):
+            assert np.isfinite(np.asarray(leaf)).all()
+        res_off = FederatedTrainer(model, data, feddumap_config(**CFG)).run(
+            TrainPlan(Scan(3), Eval()))
+        assert res_off.history["health"] == [0.0, 0.0, 0.0]
+
+
+class TestGuardCompileBudget:
+    def test_guard_scenarios_budget_zero_extra(self):
+        """compile_budget.json is the single source of truth: guard-on
+        budgets EQUAL the guard-off scan_eval budget on both backends."""
+        for backend in BACKENDS:
+            base = expected_programs(f"{backend}/scan_eval")
+            for g in ("reject", "skip"):
+                assert expected_programs(f"{backend}/guard_{g}") == base
+
+    def test_guarded_session_lowers_budgeted_count(self, tiny_world):
+        data, model = tiny_world
+        cfg = feddumap_config(**CFG, guard="reject_client")
+        tr = FederatedTrainer(model, data, cfg)
+        be = tr.backend(use_masks=False)
+        executor = PlanExecutor(be, trainer=tr)
+        executor.run(TrainPlan(Eval(), Scan(2), Eval(), Scan(2), Eval()),
+                     params=model.init(jax.random.key(cfg.seed)),
+                     key=jax.random.key(cfg.seed + 1))
+        assert (int(be.chunk._cache_size())
+                == expected_programs("local/guard_reject"))
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint format + atomicity
+# ---------------------------------------------------------------------------
+
+class TestCheckpointStore:
+    def _payload(self, cursor):
+        return {
+            "cursor": cursor,
+            "state": {"w": np.arange(6, dtype=np.float32).reshape(2, 3),
+                      "nested": {"b": np.float32(2.5), "n": None}},
+            "key_data": np.asarray([0, 7], np.uint32),
+            "history": {"acc": [0.1, 0.2], "round": [1, 2]},
+            "plan": [{"type": "Scan", "rounds": 2}],
+            "meta": ("tuple", 3),
+        }
+
+    def test_round_trip_and_latest(self, tmp_path):
+        save_checkpoint(tmp_path, self._payload(1))
+        p2 = save_checkpoint(tmp_path, self._payload(2))
+        assert latest_checkpoint(tmp_path) == pathlib.Path(p2)
+        back = load_checkpoint(tmp_path)
+        assert back["cursor"] == 2
+        np.testing.assert_array_equal(back["state"]["w"],
+                                      self._payload(2)["state"]["w"])
+        assert back["state"]["nested"]["n"] is None
+        assert back["meta"] == ("tuple", 3)       # tuples survive as tuples
+        assert back["history"]["acc"] == [0.1, 0.2]
+        # atomic writes leave no temp debris
+        assert not [p for p in os.listdir(tmp_path) if ".tmp" in p]
+
+    def test_named_errors(self, tmp_path):
+        with pytest.raises(CheckpointError, match="no run checkpoint"):
+            load_checkpoint(tmp_path / "nowhere")
+        step = pathlib.Path(save_checkpoint(tmp_path, self._payload(1)))
+        (step / "arrays.npz").unlink()
+        with pytest.raises(CheckpointError, match="partial"):
+            load_checkpoint(tmp_path)
+        # CheckpointError stays a ValueError for legacy handlers
+        assert issubclass(CheckpointError, ValueError)
+
+    def test_plan_spec_round_trip(self):
+        plan = TrainPlan(Eval(), Scan(2), Snapshot(name="s"), Scan(1),
+                         Eval(name="final"))
+        spec = plan_spec(plan)
+        rebuilt = plan_from_spec(spec, checkpoint_every=1,
+                                 checkpoint_dir="d")
+        assert plan_spec(rebuilt) == spec
+        assert rebuilt.checkpoint_every == 1
+
+    def test_callback_plans_need_the_original(self):
+        spec = plan_spec(TrainPlan(Scan(1), Callback(lambda *_: None,
+                                                     name="cb")))
+        with pytest.raises(CheckpointError, match="Callback"):
+            plan_from_spec(spec)
+
+    def test_trainplan_checkpoint_validation(self, tmp_path):
+        with pytest.raises(ValueError, match="checkpoint_dir"):
+            TrainPlan(Scan(1), checkpoint_every=2)
+        with pytest.raises(ValueError, match="checkpoint_every"):
+            TrainPlan(Scan(1), checkpoint_every=0,
+                      checkpoint_dir=tmp_path)
+        p = TrainPlan(Scan(1), checkpoint_dir=tmp_path)
+        assert p.checkpoint_every == 1
+        q = TrainPlan(Scan(1)).with_checkpointing(tmp_path, every=2)
+        assert (q.checkpoint_every, str(q.checkpoint_dir)) == \
+            (2, str(tmp_path))
+        # equality is over the schedule, not the durability knobs
+        assert TrainPlan(Scan(1)) == p
+
+    def test_run_result_save_is_atomic_and_errors_named(self, tmp_path):
+        res = RunResult(params={"w": np.ones((2,), np.float32)},
+                        state={}, history={}, artifacts={})
+        out = tmp_path / "artifact"
+        res.save(out)
+        assert not [p for p in os.listdir(out) if ".tmp" in p]
+        with pytest.raises(CheckpointError, match="meta.json"):
+            load_artifact(tmp_path / "empty")
+        (out / "arrays.npz").write_bytes(b"garbage")
+        with pytest.raises(CheckpointError, match="corrupt"):
+            load_artifact(out)
+
+
+# ---------------------------------------------------------------------------
+# Fault-plan plumbing
+# ---------------------------------------------------------------------------
+
+class TestFaultPlan:
+    def test_device_host_split_and_hashability(self):
+        plan = FaultPlan(NaNGrad(client=0, round=1), KillAfterChunk(2),
+                         CorruptUpdate(scale=2.0))
+        assert [type(f).__name__ for f in plan.device] == \
+            ["NaNGrad", "CorruptUpdate"]
+        assert [type(f).__name__ for f in plan.host] == ["KillAfterChunk"]
+        hash(plan)                     # rides frozen EngineConfig jit keys
+        with pytest.raises(ValueError):
+            KillAfterChunk(0)
+
+    def test_config_validation(self):
+        from repro.core.rounds import FLConfig
+
+        with pytest.raises(ValueError, match="guard"):
+            FLConfig(guard="sometimes")
+        with pytest.raises(ValueError, match="fault"):
+            FLConfig(faults=("not a fault",))
+        with pytest.raises(ValueError, match="guard"):
+            EngineConfig(guard="maybe")
+        # host faults never reach the engine config
+        with pytest.raises(ValueError, match="host"):
+            EngineConfig(faults=(KillAfterChunk(1),))
+
+
+# ---------------------------------------------------------------------------
+# Serving: backpressure + error-slot retirement
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def lm_world():
+    from repro.configs.base import ModelConfig
+    from repro.models.lm import LM
+
+    model = LM(ModelConfig(name="dense-tiny", family="dense", rope="1d",
+                           norm="rmsnorm", act="silu",
+                           param_dtype="float32", remat="none",
+                           num_layers=2, d_model=128, num_heads=4,
+                           num_kv_heads=2, d_ff=512, vocab_size=2048))
+    return model, model.init(jax.random.key(0))
+
+
+def _prompts(n, max_prompt=8, vocab=2048, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, vocab,
+                         size=int(rng.integers(1, max_prompt + 1)))
+            .astype(np.int32) for _ in range(n)]
+
+
+class TestServingReliability:
+    def test_queue_full_raises(self, lm_world):
+        from repro.serving import DecodeEngine, QueueFull, ServeConfig
+
+        model, params = lm_world
+        eng = DecodeEngine(model, params, ServeConfig(
+            slots=2, cache_len=32, max_prompt=8, max_new_tokens=4,
+            steps_per_wave=4, max_queue=3))
+        ps = _prompts(4)
+        for p in ps[:3]:
+            assert eng.submit(p) is not None
+        with pytest.raises(QueueFull, match="max_queue=3"):
+            eng.submit(ps[3])
+        assert len(eng.run()) == 3
+
+    def test_queue_full_reject_counts(self, lm_world):
+        from repro.serving import DecodeEngine, ServeConfig
+
+        model, params = lm_world
+        eng = DecodeEngine(model, params, ServeConfig(
+            slots=2, cache_len=32, max_prompt=8, max_new_tokens=4,
+            steps_per_wave=4, max_queue=2, on_full="reject"))
+        uids = [eng.submit(p) for p in _prompts(5)]
+        assert uids[2:] == [None, None, None] and eng.rejected == 3
+        done = eng.run()
+        assert sorted(c.uid for c in done) == [u for u in uids if u
+                                               is not None]
+        assert all(c.status == "ok" for c in done)
+
+    def test_serve_config_validation(self):
+        from repro.serving import ServeConfig
+
+        with pytest.raises(ValueError, match="max_queue"):
+            ServeConfig(max_queue=0)
+        with pytest.raises(ValueError, match="on_full"):
+            ServeConfig(on_full="drop")
+
+    def test_nan_logits_retire_slot_not_batch(self, lm_world):
+        """The serving guard: a slot whose logits go non-finite completes
+        with status='error' and frees its slot, while every co-batched
+        request emits token-for-token what the fault-free session emits
+        — and the session still compiles exactly two programs."""
+        from repro.serving import DecodeEngine, ServeConfig
+
+        model, params = lm_world
+        cfg = ServeConfig(slots=2, cache_len=32, max_prompt=8,
+                          max_new_tokens=4, steps_per_wave=4)
+        ps = _prompts(4)
+        clean = {c.uid: c for c in DecodeEngine(model, params, cfg).run(ps)}
+        assert all(c.status == "ok" for c in clean.values())
+        eng = DecodeEngine(model, params, cfg,
+                           faults=(NaNLogits(slot=0, n_out=1),))
+        faulted = {c.uid: c for c in eng.run(ps)}
+        assert set(faulted) == set(clean)
+        errs = {u for u, c in faulted.items() if c.status == "error"}
+        assert errs, "no slot was retired"
+        for u, c in faulted.items():
+            if u in errs:      # retired early: a prefix, never garbage
+                assert len(c.tokens) <= len(clean[u].tokens)
+            else:
+                np.testing.assert_array_equal(c.tokens, clean[u].tokens)
+        assert eng.program_counts() == {"admit": 1, "wave": 1}
